@@ -1,0 +1,71 @@
+//! Learned quantization levels (paper §5.2, Algorithm 2; Tables 3/6,
+//! Figures 7/8): fit level locations on real weight snapshots and show
+//! the compression-error gap vs the uniform grid across bit-widths.
+//!
+//! ```sh
+//! cargo run --release --example learned_quant -- --steps 60
+//! ```
+
+use anyhow::Result;
+use qsdp::config::RunConfig;
+use qsdp::coordinator::{Trainer, TrainerOptions};
+use qsdp::model::spec::artifacts_root;
+use qsdp::quant::{learned::normalize_bucketwise, LearnedLevels, MinMaxQuantizer, QuantPolicy};
+use qsdp::runtime::Engine;
+use qsdp::sim::Topology;
+use qsdp::util::{args::Args, stats::rel_l2_err, Pcg64};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.u64_or("steps", 60);
+    // Train a nano model briefly so the weights have real structure.
+    let mut cfg = RunConfig::from_args(&args)?;
+    cfg.model = args.str_or("config", "nano");
+    cfg.policy = QuantPolicy::wg(5, 4);
+    cfg.topo = Topology::new(2, 1);
+    cfg.steps = steps;
+    cfg.warmup = steps / 10;
+    cfg.lr = 3e-3;
+    cfg.eval_every = 0;
+    let engine = Arc::new(Engine::cpu()?);
+    let mut tr = Trainer::new(engine, &artifacts_root(), cfg, TrainerOptions::default())?;
+    eprintln!("warming up weights with {steps} training steps...");
+    tr.run(steps)?;
+    let master = tr.master_params();
+    let specs = tr.dims().param_spec();
+
+    let bucket = 1024;
+    let mut rng = Pcg64::seeded(5);
+    println!(
+        "{:<16} {:>4} {:>12} {:>12} {:>8}",
+        "layer", "bits", "uniform_err", "learned_err", "gain"
+    );
+    for (spec, w) in specs.iter().zip(&master) {
+        if spec.kind != qsdp::model::ParamKind::Matrix || w.len() < 2048 {
+            continue;
+        }
+        for bits in [3u8, 4, 5, 6] {
+            let mut u = w.clone();
+            MinMaxQuantizer::new(bits, bucket, false).apply(&mut u, &mut rng);
+            let eu = rel_l2_err(&u, w);
+            let mut ll = LearnedLevels::uniform(bits);
+            let mses = ll.fit(&normalize_bucketwise(w, bucket), 0.01, 8);
+            let mut l = w.clone();
+            ll.apply(&mut l, bucket);
+            let el = rel_l2_err(&l, w);
+            println!(
+                "{:<16} {:>4} {:>12.5} {:>12.5} {:>7.2}x  (fit mse {:.2e} -> {:.2e})",
+                spec.name,
+                bits,
+                eu,
+                el,
+                eu / el.max(1e-12),
+                mses.first().unwrap(),
+                mses.last().unwrap()
+            );
+        }
+    }
+    println!("\n(paper Figures 7/8: learned error consistently below uniform; gap widens at low bits)");
+    Ok(())
+}

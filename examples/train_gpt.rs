@@ -1,0 +1,70 @@
+//! End-to-end driver: pre-train a GPT on the synthetic corpus with QSDP
+//! and log the loss curve (recorded in EXPERIMENTS.md §End-to-end).
+//!
+//! Defaults: the `tiny` config (≈ 0.9 M params) for 300 steps on a
+//! 2×2 simulated cluster at 10 Gbps with W8G8 quantization. Flags:
+//!   --config tiny|small|medium   --steps N   --policy w8g8|baseline|...
+//!   --lr F   --nodes N --gpus-per-node G   --bandwidth Gbps
+//!
+//! ```sh
+//! cargo run --release --example train_gpt -- --config tiny --steps 300
+//! ```
+
+use anyhow::Result;
+use qsdp::config::{policy_name, RunConfig};
+use qsdp::coordinator::{Trainer, TrainerOptions};
+use qsdp::model::spec::artifacts_root;
+use qsdp::runtime::Engine;
+use qsdp::util::args::Args;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    // example-specific defaults
+    if args.get("config").is_none() {
+        args = Args::parse(
+            std::env::args()
+                .skip(1)
+                .chain(["--config".into(), "tiny".into()]),
+        );
+    }
+    let mut cfg = RunConfig::from_args(&args)?;
+    cfg.steps = args.u64_or("steps", 300);
+    cfg.lr = args.f64_or("lr", 3e-3) as f32;
+    cfg.eval_every = args.u64_or("eval-every", 25);
+    let policy = policy_name(&cfg.policy);
+    eprintln!(
+        "training {} with {} on {}x{} cluster @ {} Gbps, {} steps",
+        cfg.model, policy, cfg.topo.nodes, cfg.topo.gpus_per_node, cfg.inter_gbps, cfg.steps
+    );
+
+    let engine = Arc::new(Engine::cpu()?);
+    let mut tr = Trainer::new(
+        engine,
+        &artifacts_root(),
+        cfg.clone(),
+        TrainerOptions { log_every: 10 },
+    )?;
+    let t0 = std::time::Instant::now();
+    tr.run(cfg.steps)?;
+    let eval = tr.eval()?;
+    tr.log.push_eval(tr.steps_done(), eval as f64);
+
+    let csv = format!("results/train_gpt_{}_{}.csv", cfg.model, policy);
+    tr.log.write_csv(&csv)?;
+    println!("---");
+    println!("model            : {} ({} params)", cfg.model, tr.dims().n_params());
+    println!("policy           : {policy}");
+    println!("steps            : {}", cfg.steps);
+    println!("initial loss     : {:.4}", tr.log.steps[0].loss);
+    println!("final train loss : {:.4}", tr.log.final_loss(10));
+    println!("final eval loss  : {:.4}  (ppl {:.2})", eval, (eval as f64).exp());
+    println!("host wall time   : {:.1}s", t0.elapsed().as_secs_f64());
+    println!("simulated time   : {:.1}s", tr.log.total_sim_s());
+    println!(
+        "inter-node bytes : {:.1} MiB",
+        tr.log.total_inter_bytes() as f64 / (1 << 20) as f64
+    );
+    println!("loss curve       : {csv}");
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT export: lower the JAX model to HLO text artifacts for Rust.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. We lower through stablehlo
+and convert with `return_tuple=True` so the Rust side unwraps a tuple.
+
+Per config this writes artifacts/<cfg>/:
+  manifest.json   — param spec + config dims (configs.manifest)
+  init.hlo.txt    — (seed u32[1]) -> params tuple
+  step.hlo.txt    — (tokens i32[B,S], *params) -> (loss, *grads)
+  step_qw<b>.hlo.txt — fake-quantized-weights variants (Pallas in-graph)
+  eval.hlo.txt    — (tokens, *params) -> (loss,)
+  kernels/*.hlo.txt — standalone Pallas kernel artifacts for Rust-side
+                      cross-validation benches
+
+Usage: python -m compile.aot [--configs tiny,small] [--out ../artifacts]
+Runs once at build time (`make artifacts`); never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, manifest, param_spec
+from . import model
+from .kernels.quantize import bucket_quant
+from .kernels.lattice import lattice_quant
+from .kernels.matmul import tiled_matmul
+
+# Weight bit-widths for which an in-graph fake-quant step variant is
+# exported. 8 is the paper's default (W8); 4 is the most aggressive grid
+# point in Table 2.
+QW_BITS = (8, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def export_config(cfg, out_dir: str) -> None:
+    print(f"[aot] config {cfg.name}")
+    d = os.path.join(out_dir, cfg.name)
+    os.makedirs(d, exist_ok=True)
+
+    spec = param_spec(cfg)
+    tok = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len), jnp.int32)
+    pspecs = [jax.ShapeDtypeStruct(sh, jnp.float32) for _, sh, _ in spec]
+
+    man = manifest(cfg)
+    man["artifacts"] = {
+        "init": "init.hlo.txt",
+        "step": "step.hlo.txt",
+        "eval": "eval.hlo.txt",
+        **{f"step_qw{b}": f"step_qw{b}.hlo.txt" for b in QW_BITS},
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    # Plain-text twin of the manifest for the Rust side (no JSON parser in
+    # the offline crate set). Line format:
+    #   config <k>=<v> ...
+    #   artifact <key>=<file> ...
+    #   param <name> <d0>x<d1>... <kind>
+    with open(os.path.join(d, "manifest.txt"), "w") as f:
+        c = man["config"]
+        f.write(
+            "config "
+            + " ".join(f"{k}={c[k]}" for k in
+                       ("name", "vocab", "seq_len", "d_model", "n_layer",
+                        "n_head", "batch_size", "bucket"))
+            + f" d_ff={man['d_ff']} n_params={man['n_params']}\n"
+        )
+        f.write("artifact " + " ".join(f"{k}={v}" for k, v in man["artifacts"].items()) + "\n")
+        for p in man["params"]:
+            dims = "x".join(str(x) for x in p["shape"])
+            f.write(f"param {p['name']} {dims} {p['kind']}\n")
+
+    seed = jax.ShapeDtypeStruct((1,), jnp.uint32)
+    _write(
+        os.path.join(d, "init.hlo.txt"),
+        to_hlo_text(jax.jit(model.make_init(cfg)).lower(seed)),
+    )
+    _write(
+        os.path.join(d, "step.hlo.txt"),
+        to_hlo_text(jax.jit(model.make_step(cfg)).lower(tok, *pspecs)),
+    )
+    for b in QW_BITS:
+        _write(
+            os.path.join(d, f"step_qw{b}.hlo.txt"),
+            to_hlo_text(jax.jit(model.make_step(cfg, wbits=b)).lower(tok, *pspecs)),
+        )
+    _write(
+        os.path.join(d, "eval.hlo.txt"),
+        to_hlo_text(jax.jit(model.make_eval(cfg)).lower(tok, *pspecs)),
+    )
+
+
+def export_kernels(out_dir: str) -> None:
+    """Standalone kernel artifacts, fixed shapes, for Rust cross-checks."""
+    d = os.path.join(out_dir, "kernels")
+    os.makedirs(d, exist_ok=True)
+    nb, bucket = 64, 1024
+    v = jax.ShapeDtypeStruct((nb, bucket), jnp.float32)
+
+    for bits in (8, 4):
+        fn = lambda vals, noise, _b=bits: bucket_quant(vals, noise, _b, True)
+        _write(
+            os.path.join(d, f"bucket_quant{bits}.hlo.txt"),
+            to_hlo_text(jax.jit(fn).lower(v, v)),
+        )
+
+    shift = jax.ShapeDtypeStruct((nb, 1), jnp.float32)
+    delta = jax.ShapeDtypeStruct((), jnp.float32)
+    _write(
+        os.path.join(d, "lattice.hlo.txt"),
+        to_hlo_text(jax.jit(lambda vals, s, dl: lattice_quant(vals, s, dl)).lower(v, shift, delta)),
+    )
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    _write(
+        os.path.join(d, "matmul256.hlo.txt"),
+        to_hlo_text(jax.jit(lambda x, y: tiled_matmul(x, y, 128, 128, 128)).lower(a, a)),
+    )
+
+    from .kernels.qmatmul import quantized_matmul
+    codes = jax.ShapeDtypeStruct((256, 256), jnp.int32)
+    meta = jax.ShapeDtypeStruct((1, 256), jnp.float32)
+    _write(
+        os.path.join(d, "qmatmul256.hlo.txt"),
+        to_hlo_text(
+            jax.jit(
+                lambda x, c, lo, sc: quantized_matmul(x, c, lo, sc, 128, 128, 128)
+            ).lower(a, codes, meta, meta)
+        ),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default="nano,tiny,small")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    for name in args.configs.split(","):
+        export_config(CONFIGS[name.strip()], out)
+    export_kernels(out)
+    # Stamp: make uses this to skip re-export when inputs are unchanged.
+    with open(os.path.join(out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Model configurations and the canonical parameter specification.
+
+This file is the single source of truth for the GPT parameter layout shared
+between the JAX (build-time) side and the Rust (run-time) side: `aot.py`
+serializes the spec produced here into `artifacts/<cfg>/manifest.json`, and
+the Rust `model::spec` module consumes that manifest. Order matters — the
+flat parameter list fed to the exported HLO follows exactly the order
+returned by `param_spec`.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class GptConfig:
+    """GPT-2-family architecture hyper-parameters.
+
+    `batch_size` is the micro-batch baked into the exported step HLO;
+    the Rust coordinator performs gradient accumulation on top.
+    """
+
+    name: str
+    vocab: int
+    seq_len: int
+    d_model: int
+    n_layer: int
+    n_head: int
+    batch_size: int
+    # Tensors whose flattened size is a multiple of `bucket` can be
+    # quantized without padding; the in-graph fake-quant variant relies on
+    # this for weight matrices.
+    bucket: int = 1024
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+# Runnable (CPU-scale) configurations. The paper's 125M/350M/1.3B models
+# exist as analytic timing configs on the Rust side only (sim::papercfg);
+# exporting their HLO would be pointless on a single CPU core.
+CONFIGS = {
+    "nano": GptConfig("nano", vocab=128, seq_len=64, d_model=32, n_layer=2, n_head=2, batch_size=4),
+    "tiny": GptConfig("tiny", vocab=256, seq_len=128, d_model=64, n_layer=4, n_head=4, batch_size=8),
+    "small": GptConfig("small", vocab=512, seq_len=128, d_model=128, n_layer=6, n_head=8, batch_size=8),
+    "medium": GptConfig("medium", vocab=512, seq_len=256, d_model=256, n_layer=8, n_head=8, batch_size=4),
+}
+
+
+def param_spec(cfg: GptConfig):
+    """Ordered list of (name, shape, kind) for every trainable tensor.
+
+    kind is one of:
+      "matrix"  — 2-D weight, quantized by QSDP,
+      "norm"    — LayerNorm weight/bias, transmitted FP32 (filter policy),
+      "bias"    — bias vector, transmitted FP32.
+    """
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    spec = [
+        ("wte", (v, d), "matrix"),
+        ("wpe", (s, d), "matrix"),
+    ]
+    for i in range(cfg.n_layer):
+        p = f"h{i}."
+        spec += [
+            (p + "ln1.w", (d,), "norm"),
+            (p + "ln1.b", (d,), "norm"),
+            (p + "attn.qkv.w", (d, 3 * d), "matrix"),
+            (p + "attn.qkv.b", (3 * d,), "bias"),
+            (p + "attn.proj.w", (d, d), "matrix"),
+            (p + "attn.proj.b", (d,), "bias"),
+            (p + "ln2.w", (d,), "norm"),
+            (p + "ln2.b", (d,), "norm"),
+            (p + "mlp.fc.w", (d, f), "matrix"),
+            (p + "mlp.fc.b", (f,), "bias"),
+            (p + "mlp.proj.w", (f, d), "matrix"),
+            (p + "mlp.proj.b", (d,), "bias"),
+        ]
+    spec += [
+        ("lnf.w", (d,), "norm"),
+        ("lnf.b", (d,), "norm"),
+        ("lm_head", (d, v), "matrix"),
+    ]
+    return spec
+
+
+def n_params(cfg: GptConfig) -> int:
+    total = 0
+    for _, shape, _ in param_spec(cfg):
+        n = 1
+        for x in shape:
+            n *= x
+        total += n
+    return total
+
+
+def manifest(cfg: GptConfig) -> dict:
+    """JSON-serializable description consumed by the Rust side."""
+    return {
+        "config": asdict(cfg),
+        "d_ff": cfg.d_ff,
+        "n_params": n_params(cfg),
+        "params": [
+            {"name": n, "shape": list(sh), "kind": k}
+            for (n, sh, k) in param_spec(cfg)
+        ],
+        "artifacts": {
+            "init": "init.hlo.txt",
+            "step": "step.hlo.txt",
+            "step_qw": "step_qw.hlo.txt",
+            "eval": "eval.hlo.txt",
+        },
+    }

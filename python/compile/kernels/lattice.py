@@ -1,0 +1,50 @@
+"""Pallas kernel: random-shift lattice quantizer Q^w (paper Definition 1).
+
+Rounds every coordinate to the nearest point of the shifted lattice
+`delta*Z + r`, where one shift r ~ Unif[-delta/2, delta/2) is shared by a
+whole bucket (the paper shares r across the vector; bucketing generalizes
+this per the implementation in §5.1 and keeps the dependence-across-
+coordinates property that Lemma 4 needs within each bucket).
+
+Same TPU shaping rationale as `quantize.py`: (block_buckets, bucket)
+tiles, bandwidth-bound VPU work, interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lattice_kernel(v_ref, s_ref, d_ref, o_ref):
+    v = v_ref[...]
+    r = s_ref[...]          # (block_buckets, 1) per-bucket shift
+    delta = d_ref[0, 0]     # scalar grid coarseness
+    o_ref[...] = (delta * jnp.round((v - r) / delta) + r).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_buckets",))
+def lattice_quant(values, shift, delta, block_buckets: int = 8):
+    """Apply Q^w_{r,delta} to (n_buckets, bucket) values.
+
+    shift: (n_buckets, 1) f32, delta: scalar f32 (passed as (1,1)).
+    Matches `ref.lattice_shift_ref` exactly.
+    """
+    nb, bucket = values.shape
+    if nb % block_buckets != 0:
+        block_buckets = 1
+    grid = (nb // block_buckets,)
+    delta_arr = jnp.asarray(delta, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _lattice_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_buckets, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((block_buckets, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_buckets, bucket), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bucket), jnp.float32),
+        interpret=True,
+    )(values, shift, delta_arr)

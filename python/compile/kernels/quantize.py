@@ -1,0 +1,88 @@
+"""Pallas kernel: bucketed min-max stochastic quantize-dequantize.
+
+This is QSDP's compression hot-spot (paper §5.1): tensors are split into
+fixed-size buckets (1024 by default — exactly an 8x128 VREG tile on TPU),
+each bucket is scaled by its min/max into a 2^bits-level uniform grid, and
+each value is rounded (stochastically or to-nearest) onto the grid.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper fuses CUDA
+pack/unpack warps with NCCL P2P; on TPU the analogous structure is a
+BlockSpec pipeline streaming `block_buckets` buckets per grid step from
+HBM into VMEM, with the min/max reduction, scaling and rounding all
+performed on the resident tile (VPU element-wise work, bandwidth-bound).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO so the kernel runs
+inside the AOT-exported step as ordinary XLA ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(v_ref, n_ref, o_ref, c_ref, *, bits: int, stochastic: bool):
+    """One grid step: quantize a (block_buckets, bucket) tile.
+
+    v_ref: values tile, n_ref: uniform[0,1) noise tile (ignored when
+    deterministic), o_ref: dequantized output, c_ref: integer codes.
+    """
+    v = v_ref[...]
+    levels = (1 << bits) - 1
+    lo = jnp.min(v, axis=1, keepdims=True)
+    hi = jnp.max(v, axis=1, keepdims=True)
+    scale = (hi - lo) / levels
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    x = (v - lo) / safe
+    if stochastic:
+        r = n_ref[...]
+    else:
+        r = 0.5
+    codes = jnp.clip(jnp.floor(x + r), 0.0, float(levels))
+    o_ref[...] = (codes * scale + lo).astype(jnp.float32)
+    c_ref[...] = codes.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "stochastic", "block_buckets"))
+def bucket_quant(values, noise, bits: int, stochastic: bool = True, block_buckets: int = 8):
+    """Quantize-dequantize `values` of shape (n_buckets, bucket).
+
+    Returns (dequantized f32, codes i32), matching
+    `ref.bucket_minmax_quant_ref` exactly for the same `noise`.
+    """
+    nb, bucket = values.shape
+    if nb % block_buckets != 0:
+        block_buckets = 1
+    grid = (nb // block_buckets,)
+    spec = pl.BlockSpec((block_buckets, bucket), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits, stochastic=stochastic),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bucket), jnp.float32),
+            jax.ShapeDtypeStruct((nb, bucket), jnp.int32),
+        ],
+        interpret=True,
+    )(values, noise)
+
+
+def fake_quant(w, bits: int, bucket: int = 1024):
+    """Deterministic in-graph fake-quantization of a weight tensor.
+
+    Pads the flattened tensor with its last element to a bucket multiple,
+    runs the Pallas kernel round-to-nearest, and restores the shape. Used
+    by the `step_qw` model variant so the forward/backward pass sees
+    exactly the weights QSDP would transmit.
+    """
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % bucket
+    if pad:
+        flat = jnp.concatenate([flat, jnp.full((pad,), flat[-1])])
+    tiles = flat.reshape(-1, bucket)
+    deq, _ = bucket_quant(tiles, jnp.zeros_like(tiles), bits, stochastic=False)
+    return deq.reshape(-1)[:n].reshape(w.shape)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle bit-for-bit (deterministic paths) or exactly given
+the same noise tensor (stochastic paths). The Rust `quant` module is in
+turn validated against golden vectors generated from these functions.
+"""
+
+import jax.numpy as jnp
+
+
+def bucket_minmax_quant_ref(values, bits: int, noise=None):
+    """Bucketed min-max uniform quantization (QSDP's practical codec).
+
+    values: (n_buckets, bucket_size) f32.
+    bits:   code width; grid has 2^bits levels per bucket.
+    noise:  optional (n_buckets, bucket_size) uniform[0,1) for stochastic
+            rounding; None means round-to-nearest.
+
+    Returns (dequantized f32, codes i32).
+    """
+    levels = (1 << bits) - 1
+    lo = values.min(axis=1, keepdims=True)
+    hi = values.max(axis=1, keepdims=True)
+    scale = (hi - lo) / levels
+    # Degenerate bucket (constant values): scale 0 -> all codes 0.
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    x = (values - lo) / safe
+    if noise is None:
+        codes = jnp.floor(x + 0.5)
+    else:
+        codes = jnp.floor(x + noise)
+    codes = jnp.clip(codes, 0.0, float(levels))
+    deq = codes * scale + lo
+    return deq.astype(jnp.float32), codes.astype(jnp.int32)
+
+
+def lattice_shift_ref(values, delta, shift):
+    """Random-shift lattice quantizer Q^w_{r,delta} (paper Definition 1).
+
+    values: (n_buckets, bucket_size) f32.
+    delta:  scalar grid coarseness (> 0).
+    shift:  (n_buckets, 1) or scalar r in [-delta/2, delta/2).
+
+    Rounds each coordinate to the nearest element of delta*Z + r.
+    Returns the dequantized (lattice) values f32.
+    """
+    return (delta * jnp.round((values - shift) / delta) + shift).astype(
+        jnp.float32
+    )
+
+
+def matmul_ref(a, b):
+    """f32 matmul oracle for the tiled Pallas matmul."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def qmatmul_ref(a, codes, lo, scale):
+    """Oracle for the fused dequant-matmul: dequantize, then matmul."""
+    w = codes.astype(jnp.float32) * scale + lo
+    return jnp.matmul(a, w, preferred_element_type=jnp.float32)
+
+
+def fake_quant_ref(w, bits: int, bucket: int):
+    """Deterministic bucketed fake-quantization of a weight matrix.
+
+    Used by the `step_qw` model variant: flatten, pad to a bucket multiple
+    with the last element, quantize round-to-nearest, unpad, reshape.
+    """
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % bucket
+    if pad:
+        flat = jnp.concatenate([flat, jnp.full((pad,), flat[-1])])
+    deq, _ = bucket_minmax_quant_ref(flat.reshape(-1, bucket), bits)
+    return deq.reshape(-1)[:n].reshape(w.shape)

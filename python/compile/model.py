@@ -1,0 +1,164 @@
+"""L2: GPT-2-family model in JAX — forward, loss, and gradients.
+
+The exported step function takes a *flat list* of parameter arrays (order
+defined by `configs.param_spec`) plus a token batch, and returns
+`(loss, *grads)` in the same flat order. The Rust coordinator treats the
+HLO as an opaque compute engine: it owns the optimizer, the sharding and
+all communication; this graph is the per-microbatch fwd+bwd only.
+
+Two variants are exported per config:
+  step     — plain FP32 forward/backward (the FSDP baseline compute).
+  step_qw  — identical, except every "matrix" parameter is passed through
+             the Pallas bucketed fake-quantizer first, so the compute sees
+             exactly the weights QSDP transmits (paper Figure 1: compute
+             on Q^w(w)). Gradients flow through the straight-through
+             estimator (custom_vjp identity), matching how QSDP's
+             backward uses gathered quantized weights.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import GptConfig, param_spec
+from .kernels.quantize import fake_quant
+
+
+@jax.custom_vjp
+def _ste(w, wq):
+    """Straight-through: forward uses wq, backward passes grads to w."""
+    return wq
+
+
+def _ste_fwd(w, wq):
+    return wq, None
+
+
+def _ste_bwd(_, g):
+    return (g, jnp.zeros_like(g))
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantize_params(params, cfg: GptConfig, wbits: int):
+    """Fake-quantize every 'matrix' param via the Pallas kernel (STE)."""
+    out = []
+    for (name, shape, kind), w in zip(param_spec(cfg), params):
+        if kind == "matrix":
+            out.append(_ste(w, fake_quant(w, wbits, cfg.bucket)))
+        else:
+            out.append(w)
+    return out
+
+
+def init_params(cfg: GptConfig, key):
+    """GPT-2-style init: N(0, 0.02) weights, zeros biases, ones LN."""
+    params = []
+    for name, shape, kind in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if kind == "matrix":
+            std = 0.02
+            # residual-projection scaling per GPT-2
+            if name.endswith("proj.w"):
+                std = 0.02 / jnp.sqrt(2.0 * cfg.n_layer)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+        elif kind == "norm":
+            if name.endswith(".w"):
+                params.append(jnp.ones(shape, jnp.float32))
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, w, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def _attention(x, qkv_w, qkv_b, proj_w, proj_b, n_head):
+    b, s, d = x.shape
+    hd = d // n_head
+    qkv = x @ qkv_w + qkv_b                       # (B,S,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, n_head, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return y @ proj_w + proj_b
+
+
+def forward(params, tokens, cfg: GptConfig):
+    """tokens: (B, S) i32 -> logits (B, S, vocab)."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    wte, wpe = nxt(), nxt()
+    b, s = tokens.shape
+    x = wte[tokens] + wpe[:s][None, :, :]
+    for _ in range(cfg.n_layer):
+        ln1w, ln1b = nxt(), nxt()
+        qkvw, qkvb, projw, projb = nxt(), nxt(), nxt(), nxt()
+        ln2w, ln2b = nxt(), nxt()
+        fcw, fcb, mprojw, mprojb = nxt(), nxt(), nxt(), nxt()
+        h = _layer_norm(x, ln1w, ln1b)
+        x = x + _attention(h, qkvw, qkvb, projw, projb, cfg.n_head)
+        h = _layer_norm(x, ln2w, ln2b)
+        x = x + (jax.nn.gelu(h @ fcw + fcb) @ mprojw + mprojb)
+    lnfw, lnfb, head = nxt(), nxt(), nxt()
+    x = _layer_norm(x, lnfw, lnfb)
+    return x @ head
+
+
+def loss_fn(params, tokens, cfg: GptConfig):
+    """Next-token cross-entropy (mean over B*(S-1) positions)."""
+    logits = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def make_step(cfg: GptConfig, wbits=None):
+    """Build the (loss, *grads) step function for AOT export.
+
+    wbits=None  -> plain FP32 step.
+    wbits=k     -> fake-quantized weights (step_qw variant).
+    """
+
+    def step(tokens, *params):
+        ps = list(params)
+        if wbits is not None:
+            ps = quantize_params(ps, cfg, wbits)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, tokens, cfg)
+        )(ps)
+        return (loss, *grads)
+
+    return step
+
+
+def make_eval(cfg: GptConfig):
+    """Loss-only evaluation function (no backward)."""
+
+    def ev(tokens, *params):
+        return (loss_fn(list(params), tokens, cfg),)
+
+    return ev
+
+
+def make_init(cfg: GptConfig):
+    """Seeded parameter initialization, exported so Rust and JAX agree."""
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0])
+        return tuple(init_params(cfg, key))
+
+    return init

@@ -1,0 +1,220 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Deterministic paths must match codes exactly; float outputs are compared
+at tight tolerance (fusion-order differences only). Hypothesis sweeps
+shapes, bit-widths and value distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quantize import bucket_quant, fake_quant
+from compile.kernels.lattice import lattice_quant
+from compile.kernels.matmul import tiled_matmul
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, key=KEY, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def assert_codes_close(c, rc, dq, rdq, bits):
+    """Codes may flip by 1 when x+noise lands exactly on an integer
+    boundary (fp fusion-order differences between the Pallas kernel and
+    the jnp oracle). Allow <=1% of elements to differ by exactly 1; the
+    dequantized values must then agree to within one grid step."""
+    c, rc = np.asarray(c), np.asarray(rc)
+    diff = np.abs(c - rc)
+    assert diff.max() <= 1, f"code diff > 1 (max {diff.max()})"
+    frac = (diff > 0).mean()
+    assert frac <= 0.01, f"too many boundary flips: {frac:.4f}"
+    step = (np.asarray(rdq).max() - np.asarray(rdq).min()) / max((1 << bits) - 1, 1)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(rdq), atol=step + 1e-6)
+
+
+# ---------------------------------------------------------------- quantize
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_bucket_quant_matches_ref(bits, stochastic):
+    v = rand((16, 128))
+    n = jax.random.uniform(jax.random.PRNGKey(1), v.shape)
+    dq, c = bucket_quant(v, n, bits, stochastic)
+    rdq, rc = ref.bucket_minmax_quant_ref(v, bits, n if stochastic else None)
+    assert_codes_close(c, rc, dq, rdq, bits)
+
+
+def test_bucket_quant_code_range():
+    v = rand((8, 256), scale=10.0)
+    n = jax.random.uniform(jax.random.PRNGKey(2), v.shape)
+    for bits in (2, 4, 8):
+        _, c = bucket_quant(v, n, bits, True)
+        assert int(c.min()) >= 0
+        assert int(c.max()) <= (1 << bits) - 1
+
+
+def test_bucket_quant_constant_bucket():
+    # Degenerate bucket: all values equal -> scale 0 -> exact recovery.
+    v = jnp.full((4, 64), 3.25, jnp.float32)
+    n = jnp.zeros_like(v)
+    dq, c = bucket_quant(v, n, 4, False)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(v))
+    assert int(c.max()) == 0
+
+
+def test_bucket_quant_endpoints_exact():
+    # Min and max of every bucket must be representable exactly.
+    v = rand((8, 128), key=jax.random.PRNGKey(5))
+    dq, _ = bucket_quant(v, jnp.zeros_like(v), 8, False)
+    np.testing.assert_allclose(
+        np.asarray(dq.min(axis=1)), np.asarray(v.min(axis=1)), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(dq.max(axis=1)), np.asarray(v.max(axis=1)), rtol=1e-5
+    )
+
+
+def test_quant_error_shrinks_with_bits():
+    v = rand((16, 1024))
+    n = jax.random.uniform(jax.random.PRNGKey(3), v.shape)
+    errs = []
+    for bits in (2, 4, 6, 8):
+        dq, _ = bucket_quant(v, n, bits, True)
+        errs.append(float(jnp.linalg.norm(dq - v)))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_stochastic_rounding_unbiased():
+    # Mean of many stochastic quantizations approaches the input.
+    v = rand((2, 128), key=jax.random.PRNGKey(7))
+    acc = jnp.zeros_like(v)
+    reps = 200
+    for i in range(reps):
+        n = jax.random.uniform(jax.random.PRNGKey(100 + i), v.shape)
+        dq, _ = bucket_quant(v, n, 3, True)
+        acc = acc + dq
+    mean = acc / reps
+    scale = float((v.max(axis=1) - v.min(axis=1)).max()) / 7
+    assert float(jnp.abs(mean - v).max()) < 3.5 * scale / np.sqrt(reps) * 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.integers(1, 12),
+    bs=st.sampled_from([8, 64, 128, 1024]),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bucket_quant_hypothesis(nb, bs, bits, seed):
+    k = jax.random.PRNGKey(seed)
+    v = jax.random.normal(k, (nb, bs), jnp.float32) * 3.0
+    n = jax.random.uniform(jax.random.fold_in(k, 1), v.shape)
+    dq, c = bucket_quant(v, n, bits, True)
+    rdq, rc = ref.bucket_minmax_quant_ref(v, bits, n)
+    assert_codes_close(c, rc, dq, rdq, bits)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_arbitrary_sizes(n, bits, seed):
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (n,), jnp.float32)
+    fq = fake_quant(w, bits, bucket=1024)
+    rfq = ref.fake_quant_ref(w, bits, 1024)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(rfq), atol=1e-5)
+    assert fq.shape == w.shape
+
+
+# ----------------------------------------------------------------- lattice
+@pytest.mark.parametrize("delta", [0.01, 0.1, 1.0])
+def test_lattice_matches_ref(delta):
+    v = rand((16, 64))
+    s = jax.random.uniform(
+        jax.random.PRNGKey(4), (16, 1), minval=-delta / 2, maxval=delta / 2
+    )
+    lq = lattice_quant(v, s, delta)
+    lr = ref.lattice_shift_ref(v, delta, s)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lr), atol=1e-6)
+
+
+def test_lattice_output_on_lattice():
+    delta = 0.25
+    v = rand((4, 32))
+    s = jnp.full((4, 1), 0.1, jnp.float32)
+    lq = lattice_quant(v, s, delta)
+    # Every output must be on delta*Z + r.
+    k = (np.asarray(lq) - 0.1) / delta
+    np.testing.assert_allclose(k, np.round(k), atol=1e-4)
+
+
+def test_lattice_rounding_error_bounded():
+    delta = 0.5
+    v = rand((4, 128))
+    s = jnp.zeros((4, 1), jnp.float32)
+    lq = lattice_quant(v, s, delta)
+    assert float(jnp.abs(lq - v).max()) <= delta / 2 + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nb=st.integers(1, 8),
+    bs=st.sampled_from([16, 128, 1024]),
+    delta=st.floats(1e-3, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lattice_hypothesis(nb, bs, delta, seed):
+    k = jax.random.PRNGKey(seed)
+    v = jax.random.normal(k, (nb, bs), jnp.float32)
+    s = jax.random.uniform(
+        jax.random.fold_in(k, 1), (nb, 1), minval=-delta / 2, maxval=delta / 2
+    )
+    lq = lattice_quant(v, s, delta)
+    lr = ref.lattice_shift_ref(v, delta, s)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lr), atol=1e-5)
+
+
+# ------------------------------------------------------------------ matmul
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [(64, 64, 64, 32, 32, 32), (128, 256, 64, 64, 64, 64), (32, 32, 32, 32, 32, 32)],
+)
+def test_matmul_matches_ref(m, k, n, bm, bn, bk):
+    a = rand((m, k), key=jax.random.PRNGKey(10))
+    b = rand((k, n), key=jax.random.PRNGKey(11))
+    out = tiled_matmul(a, b, bm, bn, bk)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_rejects_bad_tiles():
+    a, b = rand((48, 48)), rand((48, 48))
+    with pytest.raises(AssertionError):
+        tiled_matmul(a, b, 32, 32, 32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(mt, nt, kt, seed):
+    bm = bn = bk = 32
+    m, n, k = mt * bm, nt * bn, kt * bk
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    out = tiled_matmul(a, b, bm, bn, bk)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,118 @@
+"""L2 model correctness: shapes, loss sanity, grads, quantized variant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import CONFIGS, param_spec, n_params
+from compile import model
+
+CFG = CONFIGS["nano"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(
+        jax.random.PRNGKey(1), (CFG.batch_size, CFG.seq_len), 0, CFG.vocab
+    )
+
+
+def test_param_spec_shapes(params):
+    spec = param_spec(CFG)
+    assert len(params) == len(spec)
+    for p, (_, sh, _) in zip(params, spec):
+        assert p.shape == tuple(sh)
+
+
+def test_param_count_formula():
+    # 12*d^2*L dominates; exact count must match the spec sum.
+    total = sum(int(np.prod(p.shape)) for p in model.init_params(CFG, jax.random.PRNGKey(0)))
+    assert total == n_params(CFG)
+
+
+def test_forward_shape(params, tokens):
+    logits = model.forward(params, tokens, CFG)
+    assert logits.shape == (CFG.batch_size, CFG.seq_len, CFG.vocab)
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    # Untrained model should be close to -log(1/V).
+    loss = float(model.loss_fn(params, tokens, CFG))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality(params):
+    # Changing a future token must not affect earlier logits.
+    t1 = jnp.zeros((1, CFG.seq_len), jnp.int32)
+    t2 = t1.at[0, -1].set(5)
+    l1 = model.forward(params, t1, CFG)
+    l2 = model.forward(params, t2, CFG)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-5
+    )
+
+
+def test_step_returns_loss_and_grads(params, tokens):
+    step = model.make_step(CFG)
+    out = step(tokens, *params)
+    assert len(out) == 1 + len(params)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+    # Gradient must be nonzero somewhere.
+    assert any(float(jnp.abs(g).max()) > 0 for g in grads)
+
+
+def test_grad_descent_reduces_loss(params, tokens):
+    step = jax.jit(model.make_step(CFG))
+    ps = [p for p in params]
+    losses = []
+    for _ in range(5):
+        out = step(tokens, *ps)
+        losses.append(float(out[0]))
+        ps = [p - 0.5 * g for p, g in zip(ps, out[1:])]
+    assert losses[-1] < losses[0]
+
+
+def test_step_qw_close_to_fp32_at_8bit(params, tokens):
+    loss = float(model.make_step(CFG)(tokens, *params)[0])
+    loss_q = float(model.make_step(CFG, wbits=8)(tokens, *params)[0])
+    assert abs(loss - loss_q) < 0.05
+
+
+def test_step_qw_degrades_at_2bit(params, tokens):
+    # 2-bit weights must perturb the loss more than 8-bit.
+    loss = float(model.make_step(CFG)(tokens, *params)[0])
+    d8 = abs(float(model.make_step(CFG, wbits=8)(tokens, *params)[0]) - loss)
+    d2 = abs(float(model.make_step(CFG, wbits=2)(tokens, *params)[0]) - loss)
+    assert d2 > d8
+
+
+def test_eval_matches_loss(params, tokens):
+    ev = model.make_eval(CFG)
+    loss = model.loss_fn(params, tokens, CFG)
+    np.testing.assert_allclose(float(ev(tokens, *params)[0]), float(loss), rtol=1e-6)
+
+
+def test_init_deterministic():
+    a = model.make_init(CFG)(jnp.array([7], jnp.uint32))
+    b = model.make_init(CFG)(jnp.array([7], jnp.uint32))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_init_seed_sensitivity():
+    a = model.make_init(CFG)(jnp.array([7], jnp.uint32))
+    b = model.make_init(CFG)(jnp.array([8], jnp.uint32))
+    assert any(
+        float(jnp.abs(x - y).max()) > 0
+        for x, y, (_, _, kind) in zip(a, b, param_spec(CFG))
+        if kind == "matrix"
+    )

@@ -1,0 +1,75 @@
+"""Fused dequant-matmul kernel vs oracle + end-to-end accuracy checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.qmatmul import quantize_weight_columns, quantized_matmul
+
+
+def rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 256, 64), (32, 96, 160)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qmatmul_matches_ref(m, k, n, bits):
+    a = rand((m, k), 1)
+    w = rand((k, n), 2, scale=0.05)
+    codes, lo, scale = quantize_weight_columns(w, bits)
+    got = quantized_matmul(a, codes, lo, scale, 32, 32, 32)
+    want = ref.qmatmul_ref(a, codes, lo, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_close_to_fp32_at_8bit():
+    a = rand((64, 128), 3)
+    w = rand((128, 64), 4, scale=0.05)
+    codes, lo, scale = quantize_weight_columns(w, 8)
+    got = quantized_matmul(a, codes, lo, scale, 32, 32, 32)
+    full = ref.matmul_ref(a, w)
+    rel = float(
+        jnp.linalg.norm(got - full) / jnp.maximum(jnp.linalg.norm(full), 1e-9)
+    )
+    assert rel < 0.01, f"8-bit fused matmul rel err {rel}"
+
+
+def test_qmatmul_error_grows_at_low_bits():
+    a = rand((64, 128), 5)
+    w = rand((128, 64), 6, scale=0.05)
+    full = ref.matmul_ref(a, w)
+    errs = []
+    for bits in (8, 4, 2):
+        codes, lo, scale = quantize_weight_columns(w, bits)
+        got = quantized_matmul(a, codes, lo, scale, 32, 32, 32)
+        errs.append(float(jnp.linalg.norm(got - full)))
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_codes_within_range():
+    w = rand((64, 32), 7)
+    for bits in (2, 4, 8):
+        codes, _, _ = quantize_weight_columns(w, bits)
+        assert int(codes.min()) >= 0
+        assert int(codes.max()) <= (1 << bits) - 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    kt=st.integers(1, 3),
+    bits=st.sampled_from([3, 4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_hypothesis(mt, nt, kt, bits, seed):
+    bm = bn = bk = 32
+    a = rand((mt * bm, kt * bk), seed)
+    w = rand((kt * bk, nt * bn), seed ^ 0x5555, scale=0.1)
+    codes, lo, scale = quantize_weight_columns(w, bits)
+    got = quantized_matmul(a, codes, lo, scale, bm, bn, bk)
+    want = ref.qmatmul_ref(a, codes, lo, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,107 @@
+//! Quantization hot-path benchmarks (harness-free: criterion is not
+//! available offline). Reports throughput in GiB/s of input processed.
+//!
+//! The paper's bar: compression overhead < 1% of an iteration. Our
+//! simulated 1.3B step is ~13 s for ~1.4 GB of weights per gather —
+//! the codec must therefore sustain well over 1 GB/s/core to be
+//! negligible, which is the target tracked here (EXPERIMENTS.md §Perf).
+
+use qsdp::quant::codec::{encode_minmax, pack_bits, unpack_bits};
+use qsdp::quant::learned::normalize_bucketwise;
+use qsdp::quant::{LatticeQuantizer, LearnedLevels, MinMaxQuantizer};
+use qsdp::util::Pcg64;
+use std::time::Instant;
+
+const MB: usize = 1 << 20;
+
+fn time<F: FnMut()>(label: &str, bytes: usize, reps: usize, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "{label:44} {:8.3} ms   {:7.2} GiB/s",
+        dt * 1e3,
+        bytes as f64 / dt / (1 << 30) as f64
+    );
+}
+
+fn main() {
+    let n = 8 * MB; // elements (32 MiB of f32)
+    let bytes = n * 4;
+    let mut rng = Pcg64::seeded(1);
+    let mut values = vec![0.0f32; n];
+    rng.fill_normal(&mut values, 1.0);
+
+    println!("== quantizer apply (quantize-dequantize in place), {} MiB f32 ==", bytes / MB);
+    for bits in [2u8, 4, 8] {
+        for stoch in [false, true] {
+            let q = MinMaxQuantizer::new(bits, 1024, stoch);
+            let mut work = values.clone();
+            time(
+                &format!("minmax apply bits={bits} stochastic={stoch}"),
+                bytes,
+                5,
+                || {
+                    work.copy_from_slice(&values);
+                    q.apply(&mut work, &mut rng);
+                },
+            );
+        }
+    }
+
+    println!("== wire codec (encode to packed payload + decode) ==");
+    for bits in [2u8, 4, 8] {
+        let mut out = Vec::new();
+        let enc = encode_minmax(&values, bits, 1024, true, &mut rng);
+        time(&format!("encode_minmax bits={bits}"), bytes, 5, || {
+            let e = encode_minmax(&values, bits, 1024, true, &mut rng);
+            std::hint::black_box(&e);
+        });
+        time(&format!("decode bits={bits}"), bytes, 5, || {
+            enc.decode(&mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    println!("== bit packing only ==");
+    let codes: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+    for bits in [2u8, 4, 5, 8] {
+        let masked: Vec<u8> = codes.iter().map(|&c| c & ((1 << bits) - 1)).collect();
+        let packed = pack_bits(&masked, bits);
+        let mut out = vec![0u8; n];
+        time(&format!("pack bits={bits}"), n, 5, || {
+            std::hint::black_box(pack_bits(&masked, bits));
+        });
+        time(&format!("unpack bits={bits}"), n, 5, || {
+            unpack_bits(&packed, bits, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    println!("== lattice quantizer (Definition 1) ==");
+    let q = LatticeQuantizer::new(0.05, 1024);
+    let mut work = values.clone();
+    time("lattice apply", bytes, 5, || {
+        work.copy_from_slice(&values);
+        q.apply(&mut work, &mut rng);
+    });
+
+    println!("== learned levels (Algorithm 2) ==");
+    let norm = normalize_bucketwise(&values[..MB], 1024);
+    time("fit 4-bit levels on 1M values (1 pass)", MB * 4, 3, || {
+        let mut l = LearnedLevels::uniform(4);
+        l.optimize_pass(&norm, 0.01);
+        std::hint::black_box(&l);
+    });
+    let mut l4 = LearnedLevels::uniform(4);
+    l4.fit(&norm, 0.01, 4);
+    let mut work = values[..MB].to_vec();
+    time("learned apply 4-bit on 1M values", MB * 4, 5, || {
+        work.copy_from_slice(&values[..MB]);
+        l4.apply(&mut work, 1024);
+    });
+}

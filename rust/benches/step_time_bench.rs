@@ -1,0 +1,95 @@
+//! End-to-end step-time benchmarks: real trainer steps per policy on
+//! the runnable configs, plus the analytic paper-size step times that
+//! regenerate Table 5 / Figure 4 / Figure 6 (`cargo bench` prints the
+//! same rows the paper reports; see also `qsdp table5` etc.).
+
+use qsdp::config::parse_policy;
+use qsdp::coordinator::{Trainer, TrainerOptions};
+use qsdp::model::spec::artifacts_root;
+use qsdp::quant::QuantPolicy;
+use qsdp::runtime::Engine;
+use qsdp::sim::{StepTimeModel, Topology};
+use qsdp::util::args::Args;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn real_steps(engine: Arc<Engine>, model: &str, policy: &str, steps: u64) {
+    let mut cfg =
+        qsdp::config::RunConfig::from_args(&Args::parse(std::iter::empty())).unwrap();
+    cfg.model = model.into();
+    cfg.policy = parse_policy(policy).unwrap();
+    cfg.topo = Topology::new(2, 2);
+    cfg.steps = steps;
+    cfg.warmup = 1;
+    cfg.eval_every = 0;
+    cfg.corpus_len = 50_000;
+    let mut tr = Trainer::new(engine, &artifacts_root(), cfg, TrainerOptions::default()).unwrap();
+    // warmup (compile + caches)
+    tr.step_once().unwrap();
+    let t0 = Instant::now();
+    for _ in 1..steps {
+        tr.step_once().unwrap();
+    }
+    let per = t0.elapsed().as_secs_f64() / (steps - 1) as f64;
+    let quant_overhead: f64 = tr.log.steps[1..]
+        .iter()
+        .map(|r| r.wall_s)
+        .sum::<f64>()
+        / (steps - 1) as f64;
+    println!(
+        "{model:6} {policy:10} host {:7.1} ms/step (wall {:.1} ms) | sim {:6.3} s/step | inter {:6.2} MiB/step",
+        per * 1e3,
+        quant_overhead * 1e3,
+        tr.log.steps.last().unwrap().sim_s,
+        tr.log.steps.last().unwrap().traffic.inter_bytes as f64 / (1 << 20) as f64
+    );
+}
+
+fn main() {
+    println!("== real trainer steps (2x2 simulated cluster, XLA-CPU compute) ==");
+    if artifacts_root().join("nano").join("manifest.txt").exists() {
+        let engine = Arc::new(Engine::cpu().unwrap());
+        for policy in ["baseline", "w8g8", "w4g4"] {
+            real_steps(engine.clone(), "nano", policy, 6);
+        }
+    } else {
+        println!("(skipped: run `make artifacts` first)");
+    }
+
+    println!("\n== Table 5: step time (s), gpt1.3b @ 100 Gbps, fake compression grid ==");
+    let m = StepTimeModel::paper("gpt1.3b", 100.0).unwrap();
+    print!("{:>6}", "w\\g");
+    for g in [1.0, 2.0, 4.0, 8.0] {
+        print!("{:>8.0}", g);
+    }
+    println!();
+    for w in [1.0, 2.0, 4.0, 8.0] {
+        print!("{w:>6.0}");
+        for g in [1.0, 2.0, 4.0, 8.0] {
+            print!("{:>8.2}", m.fake_total(w, g));
+        }
+        println!();
+    }
+
+    println!("\n== Figure 4: step time (s) vs bandwidth ==");
+    for model in ["gpt125m", "gpt350m", "gpt1.3b"] {
+        for (label, p) in [("FSDP", QuantPolicy::baseline()), ("QSDP", QuantPolicy::qsdp_default())] {
+            print!("{model:8} {label:5}");
+            for bw in [10.0, 50.0, 100.0] {
+                let m = StepTimeModel::paper(model, bw).unwrap();
+                print!("{:>9.2}", m.step_total(&p));
+            }
+            println!();
+        }
+    }
+
+    println!("\n== Figure 6: compression sweep (gpt1.3b) ==");
+    for bw in [10.0, 50.0, 100.0] {
+        let m = StepTimeModel::paper("gpt1.3b", bw).unwrap();
+        print!("{bw:>4.0} Gbps:");
+        for r in [1.0, 2.0, 4.0, 8.0] {
+            print!("{:>8.2}", m.fake_total(r, r));
+        }
+        println!("   ideal {:.2}", m.fake_total(1e12, 1e12));
+    }
+}

@@ -1,0 +1,62 @@
+//! Byte accounting for the simulated fabric.
+
+/// Accumulated traffic, split by link class. The inter-node figure is
+/// per-NIC aggregate (what `tc` throttles in the paper); intra-node is
+/// NVLink traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrafficLedger {
+    pub intra_bytes: usize,
+    pub inter_bytes: usize,
+    pub messages: usize,
+}
+
+impl TrafficLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, bytes: usize, inter: bool) {
+        if inter {
+            self.inter_bytes += bytes;
+        } else {
+            self.intra_bytes += bytes;
+        }
+        self.messages += 1;
+    }
+
+    pub fn merge(&mut self, other: &TrafficLedger) {
+        self.intra_bytes += other.intra_bytes;
+        self.inter_bytes += other.inter_bytes;
+        self.messages += other.messages;
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.intra_bytes + self.inter_bytes
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_merges() {
+        let mut a = TrafficLedger::new();
+        a.record(100, true);
+        a.record(50, false);
+        assert_eq!(a.inter_bytes, 100);
+        assert_eq!(a.intra_bytes, 50);
+        assert_eq!(a.messages, 2);
+        let mut b = TrafficLedger::new();
+        b.record(1, true);
+        b.merge(&a);
+        assert_eq!(b.inter_bytes, 101);
+        assert_eq!(b.total_bytes(), 151);
+        b.reset();
+        assert_eq!(b, TrafficLedger::default());
+    }
+}

@@ -1,0 +1,19 @@
+//! Quantized collectives over the simulated fabric.
+//!
+//! These move *real encoded payloads* (produced by [`crate::quant`])
+//! between logical ranks, replicating the hierarchical (two-level)
+//! NCCL-P2P algorithms the paper added to CGX (§5.1): an intra-node
+//! phase over NVLink and an inter-node leader exchange through each
+//! node's NIC. Every message's byte size is tallied in a
+//! [`TrafficLedger`], which the network model converts to seconds.
+//!
+//! The collectives are implemented as lockstep functions over per-rank
+//! buffers: with P logical workers in one process this is deterministic,
+//! exactly reproduces the data each rank would decode, and accounts
+//! bytes identically to a real execution.
+
+pub mod ledger;
+pub mod ops;
+
+pub use ledger::TrafficLedger;
+pub use ops::{all_gather, all_reduce, reduce_scatter, reduce_scatter_flat};

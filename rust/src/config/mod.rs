@@ -1,0 +1,208 @@
+//! Run configuration: parses CLI flags / spec strings into a full
+//! training job description.
+//!
+//! Policy spec grammar (the axes of Tables 1–3/6):
+//!   "baseline"            — FSDP: FP32 weights, FP16 grads
+//!   "w8g8"                — QSDP uniform quantization, 8-bit W and G
+//!   "w5g4"                — any bit pair in 1..=8; g32/w32 = uncompressed
+//!   "w5g4+learned"        — learned level tables for both
+//!   suffix "+det"         — deterministic (round-to-nearest) gradients
+
+use crate::optim::AdamW;
+use crate::quant::QuantPolicy;
+use crate::runtime::gpt::StepVariant;
+use crate::sim::Topology;
+use crate::util::args::Args;
+use anyhow::{bail, Result};
+
+/// A fully-specified training job.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact config name (nano/tiny/small/medium).
+    pub model: String,
+    pub policy: QuantPolicy,
+    /// Whether to run the in-graph fake-quant step variant instead of
+    /// quantizing on the communication path (cross-validation mode).
+    pub variant: StepVariant,
+    pub topo: Topology,
+    pub steps: u64,
+    pub warmup: u64,
+    pub seed: u64,
+    pub lr: f32,
+    pub eval_every: u64,
+    /// Learned-levels refresh steps (paper runs it at 400/1900/3800).
+    pub learned_at: Vec<u64>,
+    /// Corpus length in tokens.
+    pub corpus_len: usize,
+    /// Inter-node bandwidth (Gbps) for the simulated clock.
+    pub inter_gbps: f64,
+    /// Gradient-accumulation microbatches per optimizer step (the paper
+    /// uses 4; weights are re-gathered per microbatch, which is exactly
+    /// why FSDP's weight traffic dominates — Appendix B).
+    pub n_accum: usize,
+}
+
+impl RunConfig {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let model = args.str_or("config", "tiny");
+        let policy = parse_policy(&args.str_or("policy", "w8g8"))?;
+        let steps = args.u64_or("steps", 200);
+        Ok(RunConfig {
+            model,
+            policy,
+            variant: StepVariant::Plain,
+            topo: Topology::new(
+                args.usize_or("nodes", 2),
+                args.usize_or("gpus-per-node", 2),
+            ),
+            steps,
+            warmup: args.u64_or("warmup", steps / 10),
+            seed: args.u64_or("seed", 7),
+            lr: args.f64_or("lr", 6e-4) as f32,
+            eval_every: args.u64_or("eval-every", 50),
+            learned_at: vec![],
+            corpus_len: args.usize_or("corpus-len", 200_000),
+            inter_gbps: args.f64_or("bandwidth", 10.0),
+            n_accum: args.usize_or("accum", 1),
+        })
+    }
+
+    pub fn optimizer(&self) -> AdamW {
+        AdamW::paper(self.lr)
+    }
+}
+
+/// Parse a policy spec string (see module docs).
+pub fn parse_policy(spec: &str) -> Result<QuantPolicy> {
+    let mut parts = spec.split('+');
+    let base = parts.next().unwrap_or("");
+    let mut learned = false;
+    let mut det = false;
+    for ext in parts {
+        match ext {
+            "learned" => learned = true,
+            "det" => det = true,
+            other => bail!("unknown policy suffix {other:?}"),
+        }
+    }
+    let mut policy = if base == "baseline" || base == "fsdp" {
+        QuantPolicy::baseline()
+    } else {
+        let rest = base
+            .strip_prefix('w')
+            .ok_or_else(|| anyhow::anyhow!("bad policy spec {spec:?} (want e.g. w8g8)"))?;
+        let (w, g) = rest
+            .split_once('g')
+            .ok_or_else(|| anyhow::anyhow!("bad policy spec {spec:?} (want e.g. w8g8)"))?;
+        let wb: u32 = w.parse()?;
+        let gb: u32 = g.parse()?;
+        let mut p = QuantPolicy::baseline();
+        if wb < 32 {
+            p.weight_bits = Some(u8::try_from(wb).ok().filter(|b| (1..=8).contains(b))
+                .ok_or_else(|| anyhow::anyhow!("weight bits {wb} out of range (1..=8 or 32)"))?);
+        }
+        if gb < 32 {
+            p.grad_bits = Some(u8::try_from(gb).ok().filter(|b| (1..=8).contains(b))
+                .ok_or_else(|| anyhow::anyhow!("grad bits {gb} out of range (1..=8 or 32)"))?);
+        }
+        p.stochastic_grads = true;
+        p
+    };
+    if det {
+        policy.stochastic_grads = false;
+    }
+    if learned {
+        use crate::quant::LearnedLevels;
+        if let Some(b) = policy.weight_bits {
+            policy.learned_weights = Some(LearnedLevels::uniform(b));
+        }
+        if let Some(b) = policy.grad_bits {
+            policy.learned_grads = Some(LearnedLevels::uniform(b));
+        }
+    }
+    Ok(policy)
+}
+
+/// Render a policy back to its spec string (for logs/tables).
+pub fn policy_name(p: &QuantPolicy) -> String {
+    if p.is_baseline() {
+        return "baseline".into();
+    }
+    let w = p.weight_bits.map(|b| b.to_string()).unwrap_or("32".into());
+    let g = p.grad_bits.map(|b| b.to_string()).unwrap_or("32".into());
+    let mut s = format!("w{w}g{g}");
+    if p.learned_weights.is_some() || p.learned_grads.is_some() {
+        s.push_str("+learned");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_baseline() {
+        let p = parse_policy("baseline").unwrap();
+        assert!(p.is_baseline());
+        assert_eq!(policy_name(&p), "baseline");
+    }
+
+    #[test]
+    fn parses_bit_pairs() {
+        let p = parse_policy("w8g8").unwrap();
+        assert_eq!(p.weight_bits, Some(8));
+        assert_eq!(p.grad_bits, Some(8));
+        let p = parse_policy("w5g4").unwrap();
+        assert_eq!(p.weight_bits, Some(5));
+        assert_eq!(p.grad_bits, Some(4));
+        assert_eq!(policy_name(&p), "w5g4");
+    }
+
+    #[test]
+    fn parses_32_as_uncompressed() {
+        let p = parse_policy("w4g32").unwrap();
+        assert_eq!(p.weight_bits, Some(4));
+        assert_eq!(p.grad_bits, None);
+        let p = parse_policy("w32g3").unwrap();
+        assert_eq!(p.weight_bits, None);
+        assert_eq!(p.grad_bits, Some(3));
+    }
+
+    #[test]
+    fn parses_learned_suffix() {
+        let p = parse_policy("w5g4+learned").unwrap();
+        assert!(p.learned_weights.is_some());
+        assert!(p.learned_grads.is_some());
+        assert_eq!(p.learned_weights.as_ref().unwrap().bits, 5);
+        assert_eq!(policy_name(&p), "w5g4+learned");
+    }
+
+    #[test]
+    fn det_suffix() {
+        let p = parse_policy("w8g8+det").unwrap();
+        assert!(!p.stochastic_grads);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_policy("x9").is_err());
+        assert!(parse_policy("w9g9").is_err());
+        assert!(parse_policy("w8g8+foo").is_err());
+        assert!(parse_policy("w0g4").is_err());
+    }
+
+    #[test]
+    fn run_config_from_args() {
+        let a = Args::parse(
+            "train --config nano --policy w4g4 --steps 10 --nodes 1 --gpus-per-node 2"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let c = RunConfig::from_args(&a).unwrap();
+        assert_eq!(c.model, "nano");
+        assert_eq!(c.topo.world(), 2);
+        assert_eq!(c.steps, 10);
+        assert_eq!(c.policy.weight_bits, Some(4));
+    }
+}

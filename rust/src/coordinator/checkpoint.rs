@@ -1,0 +1,154 @@
+//! Checkpointing: save/restore master parameters and optimizer state.
+//!
+//! Simple self-describing little-endian binary format (no external
+//! serialization crates available offline):
+//!
+//! ```text
+//! magic "QSDPCKPT" | version u32 | step u64 | n_tensors u32
+//! per tensor: name_len u32 | name utf8 | numel u64 | f32 data
+//! then the same tensor list twice more for Adam m and v states.
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"QSDPCKPT";
+const VERSION: u32 = 1;
+
+/// A checkpoint: step counter + named tensors + Adam moments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub names: Vec<String>,
+    pub params: Vec<Vec<f32>>,
+    pub adam_m: Vec<Vec<f32>>,
+    pub adam_v: Vec<Vec<f32>>,
+}
+
+fn write_tensors<W: Write>(w: &mut W, names: &[String], ts: &[Vec<f32>]) -> Result<()> {
+    for (name, t) in names.iter().zip(ts) {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(t.len() as u64).to_le_bytes())?;
+        for &x in t {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_tensors<R: Read>(r: &mut R, n: usize) -> Result<(Vec<String>, Vec<Vec<f32>>)> {
+    let mut names = Vec::with_capacity(n);
+    let mut ts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let name_len = u32::from_le_bytes(b4) as usize;
+        if name_len > 4096 {
+            bail!("implausible tensor name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let numel = u64::from_le_bytes(b8) as usize;
+        let mut data = vec![0u8; numel * 4];
+        r.read_exact(&mut data)?;
+        let t: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        names.push(String::from_utf8(name).context("tensor name not utf8")?);
+        ts.push(t);
+    }
+    Ok((names, ts))
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        write_tensors(&mut w, &self.names, &self.params)?;
+        write_tensors(&mut w, &self.names, &self.adam_m)?;
+        write_tensors(&mut w, &self.names, &self.adam_v)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a QSDP checkpoint (bad magic)");
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let step = u64::from_le_bytes(b8);
+        r.read_exact(&mut b4)?;
+        let n = u32::from_le_bytes(b4) as usize;
+        let (names, params) = read_tensors(&mut r, n)?;
+        let (names_m, adam_m) = read_tensors(&mut r, n)?;
+        let (names_v, adam_v) = read_tensors(&mut r, n)?;
+        if names != names_m || names != names_v {
+            bail!("checkpoint tensor lists disagree between sections");
+        }
+        Ok(Checkpoint { step, names, params, adam_m, adam_v })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            names: vec!["wte".into(), "h0.ln1.w".into()],
+            params: vec![vec![1.0, -2.5, 3.25], vec![0.5; 4]],
+            adam_m: vec![vec![0.1, 0.2, 0.3], vec![0.0; 4]],
+            adam_v: vec![vec![0.01, 0.02, 0.03], vec![1.0; 4]],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = std::env::temp_dir().join("qsdp_ckpt_test/ck.bin");
+        let c = sample();
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = std::env::temp_dir().join("qsdp_ckpt_garbage.bin");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = std::env::temp_dir().join("qsdp_ckpt_trunc.bin");
+        let c = sample();
+        c.save(&p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! The QSDP training coordinator — the paper's system contribution
+//! glued together: P logical workers over the simulated fabric, the
+//! PJRT compute engine, quantized collectives, sharded AdamW, learned-
+//! levels refresh, metrics and the simulated cluster clock.
+
+pub mod checkpoint;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use trainer::{Trainer, TrainerOptions};

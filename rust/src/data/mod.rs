@@ -1,0 +1,9 @@
+//! Training data: a synthetic Markov-chain corpus with controllable
+//! structure (stand-in for C4 — see DESIGN.md §2) and a deterministic
+//! per-rank batch sampler.
+
+pub mod corpus;
+pub mod sampler;
+
+pub use corpus::MarkovCorpus;
+pub use sampler::Sampler;

@@ -1,0 +1,120 @@
+//! Deterministic per-rank batch sampler.
+//!
+//! The corpus is split into `world` contiguous shards (data parallelism:
+//! every rank trains on disjoint data); batches are random windows from
+//! the rank's shard, seeded per rank so runs are reproducible.
+
+use super::corpus::MarkovCorpus;
+use crate::util::Pcg64;
+use std::sync::Arc;
+
+pub struct Sampler {
+    corpus: Arc<MarkovCorpus>,
+    start: usize,
+    len: usize,
+    rng: Pcg64,
+}
+
+impl Sampler {
+    /// Sampler for `rank` of `world` with the given seed.
+    pub fn new(corpus: Arc<MarkovCorpus>, rank: usize, world: usize, seed: u64) -> Self {
+        assert!(rank < world);
+        let shard = corpus.tokens.len() / world;
+        assert!(shard > 1, "corpus too small for world size");
+        Sampler {
+            start: rank * shard,
+            len: shard,
+            corpus,
+            rng: Pcg64::new(seed, rank as u64 + 1),
+        }
+    }
+
+    /// Held-out sampler (last shard slice reserved for eval).
+    pub fn eval(corpus: Arc<MarkovCorpus>, seed: u64) -> Self {
+        let n = corpus.tokens.len();
+        let len = (n / 10).max(2);
+        Sampler {
+            start: n - len,
+            len,
+            corpus,
+            rng: Pcg64::new(seed, 0xEEE),
+        }
+    }
+
+    /// Sample a (batch × seq) token matrix, flattened row-major.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let max_start = self.len.saturating_sub(seq).max(1);
+            let off = self.start + self.rng.below(max_start as u64) as usize;
+            for i in 0..seq {
+                // wrap within the corpus for tiny shards
+                let idx = (off + i) % self.corpus.tokens.len();
+                out.push(self.corpus.tokens[idx]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Arc<MarkovCorpus> {
+        Arc::new(MarkovCorpus::generate(64, 10_000, 1))
+    }
+
+    #[test]
+    fn batch_shape_and_range() {
+        let mut s = Sampler::new(corpus(), 0, 4, 5);
+        let b = s.batch(3, 17);
+        assert_eq!(b.len(), 3 * 17);
+        assert!(b.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn ranks_draw_from_disjoint_shards() {
+        let c = corpus();
+        let mut s0 = Sampler::new(c.clone(), 0, 2, 5);
+        let mut s1 = Sampler::new(c.clone(), 1, 2, 5);
+        // windows from rank 0 start in [0, 5000), rank 1 in [5000, 10000)
+        // verify by reconstructing offsets: sample many and check token
+        // subsequences come from the right half.
+        let b0 = s0.batch(8, 32);
+        let b1 = s1.batch(8, 32);
+        let find = |win: &[i32]| {
+            c.tokens
+                .windows(32)
+                .position(|w| w == win)
+                .expect("window must exist in corpus")
+        };
+        for row in b0.chunks(32) {
+            assert!(find(row) < 5000);
+        }
+        for row in b1.chunks(32) {
+            assert!(find(row) >= 4969); // window may straddle by < seq
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let c = corpus();
+        let a = Sampler::new(c.clone(), 0, 2, 9).batch(2, 8);
+        let b = Sampler::new(c.clone(), 0, 2, 9).batch(2, 8);
+        assert_eq!(a, b);
+        let d = Sampler::new(c, 0, 2, 10).batch(2, 8);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn eval_sampler_uses_tail() {
+        let c = corpus();
+        let mut e = Sampler::eval(c.clone(), 3);
+        let b = e.batch(4, 16);
+        let find = |win: &[i32]| c.tokens.windows(16).position(|w| w == win).unwrap();
+        for row in b.chunks(16) {
+            assert!(find(row) >= 8969);
+        }
+    }
+}

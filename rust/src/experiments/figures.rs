@@ -1,0 +1,189 @@
+//! Paper-figure regenerators (Figures 3, 4, 6, 7/8).
+
+use super::traindrv::{base_cfg, run_job};
+use crate::config::parse_policy;
+use crate::quant::{learned::normalize_bucketwise, LearnedLevels, MinMaxQuantizer, QuantPolicy};
+use crate::sim::StepTimeModel;
+use crate::util::{args::Args, stats::rel_l2_err, table, Pcg64};
+use anyhow::Result;
+
+/// Figure 3 — perplexity vs wall time, FSDP vs QSDP at 10 Gbps.
+///
+/// Two-tier composition (DESIGN.md §2): the *accuracy trajectory* comes
+/// from real training of the scaled model with real quantized
+/// collectives; the *clock* charges each optimizer step with the
+/// paper-size (1.3B @ 10 Gbps) step time of the corresponding policy —
+/// the quantity the paper's x-axis measures. The scaled-model
+/// collectives also tick a secondary clock from their actual encoded
+/// bytes (column `sim_scaled_s`) as a sanity check.
+pub fn figure3(args: &Args) -> Result<()> {
+    let steps = args.u64_or("steps", 150);
+    let model = args.str_or("config", "nano");
+    let mut rows = Vec::new();
+    let mut finish = Vec::new();
+    for policy in ["baseline", "w8g8"] {
+        let mut cfg = base_cfg(&model, steps);
+        cfg.policy = parse_policy(policy)?;
+        cfg.inter_gbps = 10.0;
+        cfg.eval_every = (steps / 8).max(1);
+        // paper-scale per-step cost for this policy
+        let paper_step = StepTimeModel::paper("gpt1.3b", 10.0)
+            .unwrap()
+            .step_total(&cfg.policy);
+        let log = run_job(&cfg, 0)?;
+        let mut cum = 0.0;
+        let mut cum_at = std::collections::HashMap::new();
+        for r in &log.steps {
+            cum += r.sim_s;
+            cum_at.insert(r.step, cum);
+        }
+        for (step, loss) in &log.evals {
+            rows.push(vec![
+                policy.to_string(),
+                step.to_string(),
+                format!("{:.1}", *step as f64 * paper_step),
+                format!("{:.2}", cum_at.get(step).copied().unwrap_or(cum)),
+                format!("{:.3}", loss.exp()),
+            ]);
+        }
+        finish.push((policy, steps as f64 * paper_step));
+    }
+    let headers = ["policy", "step", "time_1.3B@10G_s", "sim_scaled_s", "eval_ppl"];
+    let t = table::render(&headers, &rows);
+    println!(
+        "Figure 3 — ppl vs wall time at 10 Gbps, accuracy from {model} training, clock from the 1.3B step model:\n{t}"
+    );
+    if let [(_, tb), (_, tq)] = finish[..] {
+        println!(
+            "time-to-final-ppl: FSDP {tb:.0}s vs QSDP {tq:.0}s -> speedup {:.2}x (paper: 2.2x)",
+            tb / tq
+        );
+    }
+    table::write_csv("results/figure3.csv", &headers, &rows)?;
+    Ok(())
+}
+
+/// Figure 4 — step time vs inter-node bandwidth for the paper's three
+/// model sizes, FSDP vs QSDP (analytic, real codec byte counts).
+pub fn figure4(args: &Args) -> Result<()> {
+    let bws = [10.0, 50.0, 100.0];
+    let models = ["gpt125m", "gpt350m", "gpt1.3b"];
+    let fsdp = QuantPolicy::baseline();
+    let qsdp = QuantPolicy::qsdp_default();
+    let mut rows = Vec::new();
+    for m in models {
+        for (label, p) in [("FSDP", &fsdp), ("QSDP", &qsdp)] {
+            let mut row = vec![m.to_string(), label.to_string()];
+            for bw in bws {
+                let model = StepTimeModel::paper(m, bw).unwrap();
+                row.push(format!("{:.2}", model.step_total(p)));
+            }
+            rows.push(row);
+        }
+    }
+    let _ = args;
+    let headers = ["model", "system", "10Gbps", "50Gbps", "100Gbps"];
+    let t = table::render(&headers, &rows);
+    println!(
+        "Figure 4 — step time (s) vs bandwidth (paper: QSDP ~constant, FSDP 1.3B 2.25x slower at 10 Gbps):\n{t}"
+    );
+    table::write_csv("results/figure4.csv", &headers, &rows)?;
+    Ok(())
+}
+
+/// Figure 6 — fake-compression ratio sweep vs step time per model and
+/// bandwidth, with the ideal (no communication) dashed line.
+pub fn figure6(args: &Args) -> Result<()> {
+    let bws = [10.0, 50.0, 100.0];
+    let models = ["gpt125m", "gpt350m", "gpt1.3b"];
+    let ratios = [1.0, 2.0, 4.0, 8.0];
+    let mut rows = Vec::new();
+    for m in models {
+        for bw in bws {
+            let model = StepTimeModel::paper(m, bw).unwrap();
+            let mut row = vec![m.to_string(), format!("{bw:.0}")];
+            for r in ratios {
+                row.push(format!("{:.2}", model.fake_total(r, r)));
+            }
+            row.push(format!("{:.2}", model.fake_total(1e12, 1e12)));
+            rows.push(row);
+        }
+    }
+    let _ = args;
+    let headers = ["model", "Gbps", "1x", "2x", "4x", "8x", "ideal"];
+    let t = table::render(&headers, &rows);
+    println!(
+        "Figure 6 — step time (s) vs compression ratio (paper: 8x nearly reaches the ideal line for 1.3B):\n{t}"
+    );
+    table::write_csv("results/figure6.csv", &headers, &rows)?;
+    Ok(())
+}
+
+/// Figures 7/8 — compression error over training, uniform vs learned
+/// levels, for an attention layer and the LM head (W5G4 setting).
+pub fn figure7(args: &Args) -> Result<()> {
+    let steps = args.u64_or("steps", 120);
+    let model = args.str_or("config", "nano");
+    let bits = 5u8;
+    let snapshots = 6u64;
+    let every = (steps / snapshots).max(1);
+
+    // Train a w5g4 model, snapshotting two layers' weights.
+    use crate::coordinator::{Trainer, TrainerOptions};
+    use crate::model::spec::artifacts_root;
+    let mut cfg = base_cfg(&model, steps);
+    cfg.policy = QuantPolicy::wg(bits, 4);
+    let mut tr = Trainer::new(
+        super::traindrv::engine(),
+        &artifacts_root(),
+        cfg,
+        TrainerOptions::default(),
+    )?;
+    // locate the tensors: first attention qkv + lm head
+    let specs: Vec<String> = tr
+        .dims()
+        .param_spec()
+        .iter()
+        .map(|s| s.name.clone())
+        .collect();
+    let attn_idx = specs.iter().position(|n| n == "h0.attn.qkv.w").unwrap();
+    let head_idx = specs.iter().position(|n| n == "lm_head").unwrap();
+
+    let mut rows = Vec::new();
+    let mut rng = Pcg64::seeded(99);
+    let bucket = 1024;
+    for s in 0..steps {
+        tr.step_once()?;
+        if (s + 1) % every == 0 {
+            let master = tr.master_params();
+            for (label, idx) in [("attn.qkv", attn_idx), ("lm_head", head_idx)] {
+                let w = &master[idx];
+                // uniform error
+                let mut u = w.clone();
+                MinMaxQuantizer::new(bits, bucket, false).apply(&mut u, &mut rng);
+                let eu = rel_l2_err(&u, w);
+                // learned error (fit on this snapshot, as the paper's
+                // periodic refresh does)
+                let mut ll = LearnedLevels::uniform(bits);
+                ll.fit(&normalize_bucketwise(w, bucket), 0.01, 6);
+                let mut lq = w.clone();
+                ll.apply(&mut lq, bucket);
+                let el = rel_l2_err(&lq, w);
+                rows.push(vec![
+                    label.to_string(),
+                    (s + 1).to_string(),
+                    format!("{eu:.5}"),
+                    format!("{el:.5}"),
+                    format!("{:.3}", eu / el.max(1e-12)),
+                ]);
+            }
+        }
+    }
+    let headers = ["layer", "step", "uniform_err", "learned_err", "ratio"];
+    let t = table::render(&headers, &rows);
+    println!(
+        "Figures 7/8 — relative L2 compression error over training, W{bits} (paper: learned error consistently below uniform):\n{t}"
+    );
+    table::write_csv("results/figure7.csv", &headers, &rows)?;
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Shared training-job driver for the accuracy-tier experiments.
+//!
+//! All table/figure drivers that run *real training* go through
+//! [`run_job`], which shares one PJRT engine (executable cache) across
+//! jobs in a process.
+
+use crate::config::RunConfig;
+use crate::coordinator::{Trainer, TrainerOptions};
+use crate::metrics::TrainLog;
+use crate::model::spec::artifacts_root;
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::sync::Arc;
+
+// The xla crate's PJRT handles are Rc-based (not Send/Sync); the whole
+// coordinator is single-threaded by design (1 core), so a thread-local
+// engine gives the same executable-cache sharing.
+thread_local! {
+    static ENGINE: std::cell::OnceCell<Arc<Engine>> = const { std::cell::OnceCell::new() };
+}
+
+/// The per-thread PJRT engine (shared executable cache).
+pub fn engine() -> Arc<Engine> {
+    ENGINE.with(|c| {
+        c.get_or_init(|| Arc::new(Engine::cpu().expect("PJRT CPU client")))
+            .clone()
+    })
+}
+
+/// Run one training job to completion and return its log.
+pub fn run_job(cfg: &RunConfig, log_every: u64) -> Result<TrainLog> {
+    let mut tr = Trainer::new(
+        engine(),
+        &artifacts_root(),
+        cfg.clone(),
+        TrainerOptions { log_every },
+    )?;
+    tr.run(cfg.steps)?;
+    // final eval for the ppl tables
+    let l = tr.eval()?;
+    tr.log.push_eval(tr.steps_done(), l as f64);
+    Ok(tr.log)
+}
+
+/// Default RunConfig for experiment drivers: small cluster, fast model.
+pub fn base_cfg(model: &str, steps: u64) -> RunConfig {
+    use crate::sim::Topology;
+    RunConfig {
+        model: model.to_string(),
+        policy: crate::quant::QuantPolicy::baseline(),
+        variant: crate::runtime::gpt::StepVariant::Plain,
+        topo: Topology::new(2, 2),
+        steps,
+        warmup: (steps / 10).max(1),
+        seed: 7,
+        lr: 3e-3,
+        eval_every: 0,
+        learned_at: vec![],
+        corpus_len: 200_000,
+        inter_gbps: 10.0,
+        n_accum: 1,
+    }
+}

@@ -1,0 +1,186 @@
+//! Layer grouping (paper §5.1).
+//!
+//! "In the original FSDP implementation, layers are packed into groups:
+//! weights and gradients of layers in the same group are concatenated
+//! before communication. In QSDP, we compress layers separately,
+//! filtering out normalization layers and biases."
+//!
+//! This module implements both packings so the difference is
+//! measurable: [`pack_groups`] builds the baseline's flat concatenated
+//! buffers (with a size budget per group), and quantizing a whole group
+//! as one tensor — i.e. *no bucketing, global scaling* — is the naive
+//! approach the paper reports loses > 2 ppl on GPT-125M (§6.1).
+
+use crate::model::spec::ParamSpec;
+
+/// A communication group: a contiguous run of tensors flattened into
+/// one buffer.
+#[derive(Clone, Debug)]
+pub struct LayerGroup {
+    /// Indices into the param spec, in order.
+    pub members: Vec<usize>,
+    /// Total elements.
+    pub numel: usize,
+}
+
+/// Pack tensors into groups of at most `budget` elements (always at
+/// least one tensor per group; a tensor larger than the budget gets its
+/// own group). Mirrors FSDP's `FlatParameter` construction.
+pub fn pack_groups(specs: &[ParamSpec], budget: usize) -> Vec<LayerGroup> {
+    assert!(budget > 0);
+    let mut groups: Vec<LayerGroup> = Vec::new();
+    let mut cur = LayerGroup { members: vec![], numel: 0 };
+    for (i, s) in specs.iter().enumerate() {
+        let n = s.numel();
+        if !cur.members.is_empty() && cur.numel + n > budget {
+            groups.push(std::mem::replace(&mut cur, LayerGroup { members: vec![], numel: 0 }));
+        }
+        cur.members.push(i);
+        cur.numel += n;
+    }
+    if !cur.members.is_empty() {
+        groups.push(cur);
+    }
+    groups
+}
+
+/// Flatten the members of a group into one contiguous buffer.
+pub fn flatten_group(group: &LayerGroup, params: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(group.numel);
+    for &i in &group.members {
+        out.extend_from_slice(&params[i]);
+    }
+    out
+}
+
+/// Scatter a flat group buffer back into per-tensor vectors.
+pub fn unflatten_group(
+    group: &LayerGroup,
+    specs: &[ParamSpec],
+    flat: &[f32],
+    params: &mut [Vec<f32>],
+) {
+    let mut off = 0usize;
+    for &i in &group.members {
+        let n = specs[i].numel();
+        params[i].clear();
+        params[i].extend_from_slice(&flat[off..off + n]);
+        off += n;
+    }
+    assert_eq!(off, flat.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{GptDims, ParamKind};
+    use crate::quant::MinMaxQuantizer;
+    use crate::util::{stats::rel_l2_err, Pcg64};
+
+    fn dims() -> GptDims {
+        GptDims {
+            name: "t".into(),
+            vocab: 128,
+            seq_len: 64,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            batch_size: 4,
+            bucket: 1024,
+        }
+    }
+
+    #[test]
+    fn groups_cover_all_tensors_in_order() {
+        let specs = dims().param_spec();
+        for budget in [1usize, 1000, 10_000, usize::MAX] {
+            let groups = pack_groups(&specs, budget);
+            let all: Vec<usize> = groups.iter().flat_map(|g| g.members.clone()).collect();
+            assert_eq!(all, (0..specs.len()).collect::<Vec<_>>(), "budget {budget}");
+            for g in &groups {
+                assert_eq!(
+                    g.numel,
+                    g.members.iter().map(|&i| specs[i].numel()).sum::<usize>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn budget_respected_unless_single_tensor() {
+        let specs = dims().param_spec();
+        let budget = 5000;
+        for g in pack_groups(&specs, budget) {
+            if g.members.len() > 1 {
+                assert!(g.numel <= budget);
+            }
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let specs = dims().param_spec();
+        let mut rng = Pcg64::seeded(1);
+        let params: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| {
+                let mut v = vec![0.0f32; s.numel()];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let groups = pack_groups(&specs, 4000);
+        let mut back = params.clone();
+        for b in back.iter_mut() {
+            b.clear();
+        }
+        for g in &groups {
+            let flat = flatten_group(g, &params);
+            assert_eq!(flat.len(), g.numel);
+            unflatten_group(g, &specs, &flat, &mut back);
+        }
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn grouped_global_quantization_is_worse() {
+        // The paper's motivation for per-layer bucketed compression:
+        // quantizing a flat group with one global scale destroys the
+        // small-magnitude tensors (here: LN weights ~1.0 vs matrix
+        // weights ~0.02 in one buffer).
+        let specs = dims().param_spec();
+        let mut rng = Pcg64::seeded(2);
+        let params: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| {
+                let scale = if s.kind == ParamKind::Matrix { 0.02 } else { 1.0 };
+                let mut v = vec![0.0f32; s.numel()];
+                rng.fill_normal(&mut v, scale);
+                v
+            })
+            .collect();
+        let groups = pack_groups(&specs, usize::MAX); // one giant group
+        let flat = flatten_group(&groups[0], &params);
+
+        // naive: one bucket spanning the whole group (global min-max)
+        let naive = MinMaxQuantizer::new(4, flat.len(), false);
+        let mut a = flat.clone();
+        naive.apply(&mut a, &mut Pcg64::seeded(3));
+
+        // QSDP: bucketed at 1024
+        let bucketed = MinMaxQuantizer::new(4, 1024, false);
+        let mut b = flat.clone();
+        bucketed.apply(&mut b, &mut Pcg64::seeded(3));
+
+        // The failure mode is on the *small-magnitude* tensors: measure
+        // the error restricted to the first matrix (wte, std 0.02),
+        // which global scaling flattens onto one or two levels.
+        let wte_len = specs[0].numel();
+        let e_naive = rel_l2_err(&a[..wte_len], &flat[..wte_len]);
+        let e_bucketed = rel_l2_err(&b[..wte_len], &flat[..wte_len]);
+        assert!(
+            e_bucketed * 3.0 < e_naive,
+            "bucketed {e_bucketed} not ≪ global {e_naive} on the wte region"
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Fully-sharded data-parallel engine (the paper's Figure 1 / Figure 5).
+//!
+//! [`ShardedStore`] owns the master FP32 parameters, partitioned 1/P per
+//! rank. One QSDP step is:
+//!
+//! 1. `gather_weights` — every rank quantizes its shard per the
+//!    [`crate::quant::QuantPolicy`] and AllGathers; compute sees the
+//!    dequantized (i.e. quantized-value) weights, exactly iteration (2)
+//!    of the paper.
+//! 2. each worker runs forward+backward (the PJRT step executable) on
+//!    its own microbatch,
+//! 3. `reduce_scatter_grads` — gradients are quantized and
+//!    ReduceScattered; each rank receives the mean gradient restricted
+//!    to its shard,
+//! 4. the optimizer updates each rank's master shard locally.
+
+pub mod groups;
+pub mod store;
+
+pub use groups::{pack_groups, LayerGroup};
+pub use store::ShardedStore;

@@ -1,0 +1,35 @@
+//! # QSDP — Quantized Fully-Sharded Data-Parallel training
+//!
+//! Reproduction of *"Quantized Distributed Training of Large Models with
+//! Convergence Guarantees"* (Markov, Vladu, Guo, Alistarh — ICML 2023) as
+//! a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: sharded parameter
+//!   store, quantized AllGather / ReduceScatter collectives over a
+//!   simulated multi-node fabric, bucketed quantization codecs (uniform,
+//!   random-shift lattice, learned levels), sharded AdamW, metrics, CLI.
+//! * **L2** — the GPT model (forward/backward/loss) authored in JAX and
+//!   AOT-lowered once to HLO text (`make artifacts`); loaded and executed
+//!   here via the PJRT C API (`runtime`). Python is never on the
+//!   training path.
+//! * **L1** — Pallas kernels (bucketed quantize-dequantize, lattice
+//!   rounding, tiled matmul) lowered inside the L2 graph.
+//!
+//! Entry points: [`coordinator::Trainer`] for training runs,
+//! [`experiments`] for paper table/figure regeneration, [`theory`] for
+//! the Theorem-2 convergence testbed.
+
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fsdp;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod theory;
+pub mod util;

@@ -1,0 +1,49 @@
+//! QSDP command-line interface.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md §5):
+//!   train      — run one training job (FSDP baseline or QSDP)
+//!   table1..6  — regenerate the paper's tables
+//!   figure3/4/6/7 — regenerate the paper's figures
+//!   theory     — Theorem 2 / Corollary 3 convergence validation
+//!   reproduce  — run everything, writing results/ CSVs
+//!   info       — print artifact/config inventory
+
+use qsdp::experiments;
+use qsdp::util::args::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: qsdp <command> [flags]\n\
+         commands:\n  \
+         train     --config tiny --policy w8g8|baseline --steps N --workers P\n  \
+         table1 | table2 | table3 | table5 | table6\n  \
+         figure3 | figure4 | figure6 | figure7\n  \
+         theory    [--dim N] [--kappa K]\n  \
+         ablations [--steps N]\n  \
+         reproduce [--steps N]\n  \
+         info"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "train" => experiments::cmd_train(&args),
+        "table1" => experiments::table1(&args),
+        "table2" => experiments::table2(&args),
+        "table3" => experiments::table3(&args),
+        "table5" => experiments::table5(&args),
+        "table6" => experiments::table6(&args),
+        "figure3" => experiments::figure3(&args),
+        "figure4" => experiments::figure4(&args),
+        "figure6" => experiments::figure6(&args),
+        "figure7" => experiments::figure7(&args),
+        "theory" => experiments::cmd_theory(&args),
+        "ablations" => experiments::ablations(&args),
+        "reproduce" => experiments::reproduce(&args),
+        "info" => experiments::info(&args),
+        _ => usage(),
+    }
+}

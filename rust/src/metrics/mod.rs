@@ -1,0 +1,160 @@
+//! Training metrics: per-step records, perplexity, timing breakdowns,
+//! CSV export.
+
+use crate::collectives::TrafficLedger;
+use std::io::Write;
+
+/// One training step's record.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub lr_scale: f64,
+    /// Measured host wall time for this step (seconds).
+    pub wall_s: f64,
+    /// Simulated cluster time for this step (seconds).
+    pub sim_s: f64,
+    pub traffic: TrafficLedger,
+}
+
+/// Accumulated training log.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<(u64, f64)>, // (step, eval loss)
+}
+
+impl TrainLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.steps.push(rec);
+    }
+
+    pub fn push_eval(&mut self, step: u64, loss: f64) {
+        self.evals.push((step, loss));
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.steps.last().map(|r| r.loss)
+    }
+
+    /// Mean training loss over the final `k` steps (noise-robust).
+    pub fn final_loss(&self, k: usize) -> f64 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let tail = &self.steps[n.saturating_sub(k)..];
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn final_ppl(&self, k: usize) -> f64 {
+        self.final_loss(k).exp()
+    }
+
+    /// Final evaluation perplexity (last eval record).
+    pub fn eval_ppl(&self) -> Option<f64> {
+        self.evals.last().map(|&(_, l)| l.exp())
+    }
+
+    /// Total simulated wall-clock.
+    pub fn total_sim_s(&self) -> f64 {
+        self.steps.iter().map(|r| r.sim_s).sum()
+    }
+
+    /// Total bytes through the inter-node links.
+    pub fn total_inter_bytes(&self) -> usize {
+        self.steps.iter().map(|r| r.traffic.inter_bytes).sum()
+    }
+
+    /// Write the full per-step log as CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "step,loss,ppl,lr_scale,wall_s,sim_s,inter_bytes,intra_bytes,messages"
+        )?;
+        for r in &self.steps {
+            writeln!(
+                f,
+                "{},{:.6},{:.4},{:.5},{:.4},{:.4},{},{},{}",
+                r.step,
+                r.loss,
+                r.loss.exp(),
+                r.lr_scale,
+                r.wall_s,
+                r.sim_s,
+                r.traffic.inter_bytes,
+                r.traffic.intra_bytes,
+                r.traffic.messages
+            )?;
+        }
+        if !self.evals.is_empty() {
+            writeln!(f, "# evals: step,loss")?;
+            for (s, l) in &self.evals {
+                writeln!(f, "# {s},{l:.6}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f64) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            lr_scale: 1.0,
+            wall_s: 0.1,
+            sim_s: 0.2,
+            traffic: TrafficLedger {
+                intra_bytes: 10,
+                inter_bytes: 20,
+                messages: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut log = TrainLog::new();
+        for i in 0..10 {
+            log.push(rec(i, 5.0 - 0.1 * i as f64));
+        }
+        log.push_eval(9, 4.0);
+        assert!((log.final_loss(2) - 4.15).abs() < 1e-9);
+        assert!((log.final_ppl(1) - (4.1f64).exp()).abs() < 1e-9);
+        assert_eq!(log.eval_ppl(), Some((4.0f64).exp()));
+        assert!((log.total_sim_s() - 2.0).abs() < 1e-9);
+        assert_eq!(log.total_inter_bytes(), 200);
+    }
+
+    #[test]
+    fn csv_writes() {
+        let mut log = TrainLog::new();
+        log.push(rec(0, 3.0));
+        log.push_eval(0, 2.9);
+        let p = std::env::temp_dir().join("qsdp_log_test.csv");
+        log.write_csv(p.to_str().unwrap()).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("step,loss"));
+        assert!(s.contains("0,3.000000"));
+        assert!(s.contains("# 0,2.9"));
+    }
+
+    #[test]
+    fn empty_log_is_nan() {
+        let log = TrainLog::new();
+        assert!(log.final_loss(5).is_nan());
+        assert!(log.last_loss().is_none());
+    }
+}

@@ -1,0 +1,6 @@
+//! Model description layer: parameter specs, artifact manifests, and the
+//! paper's model sizes for analytic timing experiments.
+
+pub mod spec;
+
+pub use spec::{GptDims, Manifest, ParamKind, ParamSpec};

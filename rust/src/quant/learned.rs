@@ -1,0 +1,262 @@
+//! Learned quantization levels (paper §5.2, Algorithm 2 / Figure 2).
+//!
+//! Instead of a uniform grid, the 2^bits level locations are optimized
+//! by gradient descent on the quantization error: for each (bucket-
+//! normalized) value v, find the closest level q_i and move it toward v
+//! by `q_i -= lr * (q_i - v)`. The paper runs this per layer, after a
+//! warmup, for bit-widths ≤ 6 where it noticeably reduces error
+//! (Tables 3 & 6, Figures 7–8).
+
+use super::codec::{pack_bits, EncodedTensor};
+use super::minmax::BucketMeta;
+use super::policy::Scheme;
+
+/// A learned level table in normalized [0, 1] space.
+#[derive(Clone, Debug)]
+pub struct LearnedLevels {
+    pub bits: u8,
+    pub levels: Vec<f32>, // sorted, len = 2^bits
+}
+
+impl LearnedLevels {
+    /// Uniform initialization (identical to the uniform grid).
+    pub fn uniform(bits: u8) -> Self {
+        assert!((1..=8).contains(&bits));
+        let k = 1usize << bits;
+        let levels = (0..k).map(|i| i as f32 / (k - 1) as f32).collect();
+        LearnedLevels { bits, levels }
+    }
+
+    /// One pass of Algorithm 2 over bucket-normalized `values`
+    /// (each already mapped to [0,1] by its bucket's min-max).
+    /// Returns the mean squared quantization error before the update.
+    pub fn optimize_pass(&mut self, normalized: &[f32], lr: f32) -> f64 {
+        let mut err = 0.0f64;
+        for &v in normalized {
+            let i = self.nearest(v);
+            let q = self.levels[i];
+            err += ((q - v) as f64).powi(2);
+            self.levels[i] = q - lr * (q - v);
+        }
+        // keep the table sorted (updates are small; a single pass of
+        // adjacent swaps suffices in practice, but sort defensively)
+        self.levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        err / normalized.len().max(1) as f64
+    }
+
+    /// Run Algorithm 2 for `epochs` passes with the paper's defaults
+    /// (lr = 0.01) over a (sub)sample of normalized values.
+    pub fn fit(&mut self, normalized: &[f32], lr: f32, epochs: usize) -> Vec<f64> {
+        (0..epochs)
+            .map(|_| self.optimize_pass(normalized, lr))
+            .collect()
+    }
+
+    /// Index of the nearest level (binary search on the sorted table).
+    #[inline]
+    pub fn nearest(&self, v: f32) -> usize {
+        let ls = &self.levels;
+        match ls.binary_search_by(|x| x.partial_cmp(&v).unwrap()) {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) if i == ls.len() => ls.len() - 1,
+            Err(i) => {
+                if (v - ls[i - 1]).abs() <= (ls[i] - v).abs() {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        }
+    }
+
+    /// Encode a tensor with these levels (bucketed min-max
+    /// normalization, then nearest-level codes).
+    pub fn encode(&self, values: &[f32], bucket: usize) -> EncodedTensor {
+        let mut meta = Vec::with_capacity(values.len().div_ceil(bucket));
+        let mut codes = Vec::with_capacity(values.len());
+        for chunk in values.chunks(bucket) {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in chunk {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let range = hi - lo;
+            meta.push(BucketMeta { lo, scale: range });
+            let inv = if range > 0.0 { 1.0 / range } else { 0.0 };
+            for &v in chunk {
+                codes.push(self.nearest((v - lo) * inv) as u8);
+            }
+        }
+        EncodedTensor {
+            scheme: Scheme::Learned,
+            bits: self.bits,
+            bucket,
+            n: values.len(),
+            meta,
+            levels: self.levels.clone(),
+            payload: pack_bits(&codes, self.bits),
+        }
+    }
+
+    /// Quantize-dequantize in place with these levels.
+    pub fn apply(&self, values: &mut [f32], bucket: usize) {
+        for chunk in values.chunks_mut(bucket) {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in chunk.iter() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let range = hi - lo;
+            if range <= 0.0 {
+                continue;
+            }
+            let inv = 1.0 / range;
+            for v in chunk.iter_mut() {
+                let i = self.nearest((*v - lo) * inv);
+                *v = lo + self.levels[i] * range;
+            }
+        }
+    }
+
+    /// Mean squared error of quantizing bucket-normalized values.
+    pub fn mse(&self, normalized: &[f32]) -> f64 {
+        normalized
+            .iter()
+            .map(|&v| {
+                let q = self.levels[self.nearest(v)];
+                ((q - v) as f64).powi(2)
+            })
+            .sum::<f64>()
+            / normalized.len().max(1) as f64
+    }
+}
+
+/// Bucket-normalize a tensor to [0,1] per bucket (the input Algorithm 2
+/// trains on).
+pub fn normalize_bucketwise(values: &[f32], bucket: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(values.len());
+    for chunk in values.chunks(bucket) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in chunk {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let range = hi - lo;
+        let inv = if range > 0.0 { 1.0 / range } else { 0.0 };
+        for &v in chunk {
+            out.push((v - lo) * inv);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_l2_err;
+    use crate::util::Pcg64;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn uniform_init_matches_grid() {
+        let l = LearnedLevels::uniform(3);
+        assert_eq!(l.levels.len(), 8);
+        assert_eq!(l.levels[0], 0.0);
+        assert_eq!(l.levels[7], 1.0);
+        assert!((l.levels[1] - 1.0 / 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nearest_is_correct() {
+        let l = LearnedLevels::uniform(2); // 0, 1/3, 2/3, 1
+        assert_eq!(l.nearest(0.0), 0);
+        assert_eq!(l.nearest(0.16), 0);
+        assert_eq!(l.nearest(0.17), 1);
+        assert_eq!(l.nearest(0.99), 3);
+        assert_eq!(l.nearest(-5.0), 0);
+        assert_eq!(l.nearest(5.0), 3);
+    }
+
+    #[test]
+    fn learning_reduces_mse_on_gaussian() {
+        // Gaussian data is denser near the bucket center: learned levels
+        // must beat the uniform grid (the paper's Figures 7-8 claim).
+        let v = gaussian(8192, 1);
+        let norm = normalize_bucketwise(&v, 1024);
+        let uniform = LearnedLevels::uniform(3);
+        let mse_before = uniform.mse(&norm);
+        let mut learned = LearnedLevels::uniform(3);
+        learned.fit(&norm, 0.01, 8);
+        let mse_after = learned.mse(&norm);
+        assert!(
+            mse_after < mse_before * 0.95,
+            "learned {mse_after} !< uniform {mse_before}"
+        );
+    }
+
+    #[test]
+    fn levels_stay_sorted() {
+        let v = gaussian(4096, 2);
+        let norm = normalize_bucketwise(&v, 512);
+        let mut l = LearnedLevels::uniform(4);
+        l.fit(&norm, 0.05, 5);
+        for w in l.levels.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = gaussian(2048, 3);
+        let mut l = LearnedLevels::uniform(5);
+        l.fit(&normalize_bucketwise(&v, 1024), 0.01, 4);
+        let e = l.encode(&v, 1024);
+        let mut out = vec![];
+        e.decode(&mut out);
+        assert_eq!(out.len(), v.len());
+        // 5-bit uniform rel err ~ range/(31*sqrt(12)) ~ 7.5%; learned should not be worse than ~2x that
+        assert!(rel_l2_err(&out, &v) < 0.15);
+        // apply() must agree with encode+decode
+        let mut w = v.clone();
+        l.apply(&mut w, 1024);
+        for (a, b) in w.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn learned_beats_uniform_end_to_end_low_bits() {
+        let v = gaussian(16384, 4);
+        let bucket = 1024;
+        // uniform 3-bit
+        let mut wu = v.clone();
+        crate::quant::MinMaxQuantizer::new(3, bucket, false)
+            .apply(&mut wu, &mut Pcg64::seeded(5));
+        let eu = rel_l2_err(&wu, &v);
+        // learned 3-bit
+        let mut l = LearnedLevels::uniform(3);
+        l.fit(&normalize_bucketwise(&v, bucket), 0.01, 10);
+        let mut wl = v.clone();
+        l.apply(&mut wl, bucket);
+        let el = rel_l2_err(&wl, &v);
+        assert!(el < eu, "learned {el} !< uniform {eu}");
+    }
+
+    #[test]
+    fn degenerate_constant_bucket() {
+        let mut v = vec![2.5f32; 100];
+        let l = LearnedLevels::uniform(4);
+        l.apply(&mut v, 64);
+        assert!(v.iter().all(|&x| x == 2.5));
+    }
+}

@@ -1,0 +1,359 @@
+//! Bucketed min–max uniform quantization (paper §5.1).
+//!
+//! Tensors are split into fixed-size buckets; each bucket is scaled by
+//! its (min, max) onto a `2^bits`-level uniform grid and rounded either
+//! stochastically (unbiased, Definition 12 — "quantization by flipping a
+//! coin" on the scaled grid) or to-nearest. This matches the Pallas
+//! kernel `python/compile/kernels/quantize.py` and its jnp oracle
+//! bit-for-bit given the same noise.
+
+use crate::util::Pcg64;
+
+/// Min/max of a slice with 4 parallel accumulators (breaks the serial
+/// minss/maxss dependency chain; ~3x faster than a naive fold).
+#[inline]
+pub(crate) fn minmax4(chunk: &[f32]) -> (f32, f32) {
+    let mut lo = [f32::INFINITY; 4];
+    let mut hi = [f32::NEG_INFINITY; 4];
+    let mut it = chunk.chunks_exact(4);
+    for q in &mut it {
+        for i in 0..4 {
+            lo[i] = lo[i].min(q[i]);
+            hi[i] = hi[i].max(q[i]);
+        }
+    }
+    for &v in it.remainder() {
+        lo[0] = lo[0].min(v);
+        hi[0] = hi[0].max(v);
+    }
+    (
+        lo[0].min(lo[1]).min(lo[2]).min(lo[3]),
+        hi[0].max(hi[1]).max(hi[2]).max(hi[3]),
+    )
+}
+
+/// Bucketed min–max quantizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MinMaxQuantizer {
+    pub bits: u8,
+    pub bucket: usize,
+    pub stochastic: bool,
+}
+
+/// Per-bucket scaling metadata transmitted with the codes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketMeta {
+    pub lo: f32,
+    pub scale: f32,
+}
+
+impl MinMaxQuantizer {
+    pub fn new(bits: u8, bucket: usize, stochastic: bool) -> Self {
+        assert!((1..=8).contains(&bits), "bits must be in 1..=8");
+        assert!(bucket > 0);
+        MinMaxQuantizer {
+            bits,
+            bucket,
+            stochastic,
+        }
+    }
+
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Number of buckets for `n` elements (last bucket may be short).
+    pub fn n_buckets(&self, n: usize) -> usize {
+        n.div_ceil(self.bucket)
+    }
+
+    /// Quantize `values` into `codes` (one u8 per element, unpacked) and
+    /// per-bucket metadata. `rng` supplies stochastic-rounding noise.
+    ///
+    /// Hot path: indexed writes into a pre-sized buffer, integer
+    /// rounding (`(x+r) as i32` truncation == floor for x ≥ -r), and a
+    /// 4-way min/max pass (see EXPERIMENTS.md §Perf).
+    pub fn encode(
+        &self,
+        values: &[f32],
+        codes: &mut Vec<u8>,
+        meta: &mut Vec<BucketMeta>,
+        rng: &mut Pcg64,
+    ) {
+        let levels = self.levels() as i32;
+        let levels_f = levels as f32;
+        codes.clear();
+        codes.resize(values.len(), 0);
+        meta.clear();
+        meta.reserve(self.n_buckets(values.len()));
+        let mut off = 0usize;
+        for chunk in values.chunks(self.bucket) {
+            let (lo, hi) = minmax4(chunk);
+            let scale = (hi - lo) / levels_f;
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            meta.push(BucketMeta { lo, scale });
+            let out = &mut codes[off..off + chunk.len()];
+            if self.stochastic {
+                let mut vo = out.chunks_exact_mut(2);
+                let mut vi = chunk.chunks_exact(2);
+                for (o2, v2) in (&mut vo).zip(&mut vi) {
+                    let (n0, n1) = rng.next_f32_pair();
+                    o2[0] = (((v2[0] - lo) * inv + n0) as i32).clamp(0, levels) as u8;
+                    o2[1] = (((v2[1] - lo) * inv + n1) as i32).clamp(0, levels) as u8;
+                }
+                for (o, &v) in vo.into_remainder().iter_mut().zip(vi.remainder()) {
+                    let x = (v - lo) * inv + rng.next_f32();
+                    *o = (x as i32).clamp(0, levels) as u8;
+                }
+            } else {
+                for (o, &v) in out.iter_mut().zip(chunk) {
+                    let x = (v - lo) * inv + 0.5;
+                    *o = (x as i32).clamp(0, levels) as u8;
+                }
+            }
+            off += chunk.len();
+        }
+    }
+
+    /// Encode with an explicit per-element noise array instead of a
+    /// PRNG — used to cross-validate against the Pallas kernel and the
+    /// jnp oracle, which take the same noise tensor.
+    pub fn encode_with_noise(
+        &self,
+        values: &[f32],
+        noise: &[f32],
+        codes: &mut Vec<u8>,
+        meta: &mut Vec<BucketMeta>,
+    ) {
+        assert_eq!(values.len(), noise.len());
+        let levels = self.levels() as f32;
+        codes.clear();
+        meta.clear();
+        for (chunk, nchunk) in values.chunks(self.bucket).zip(noise.chunks(self.bucket)) {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in chunk {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let scale = (hi - lo) / levels;
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            meta.push(BucketMeta { lo, scale });
+            for (&v, &r) in chunk.iter().zip(nchunk) {
+                let x = (v - lo) * inv;
+                let c = (x + if self.stochastic { r } else { 0.5 }).floor();
+                codes.push(c.clamp(0.0, levels) as u8);
+            }
+        }
+    }
+
+    /// Dequantize codes back to f32 values.
+    pub fn decode(&self, codes: &[u8], meta: &[BucketMeta], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(codes.len());
+        for (bi, chunk) in codes.chunks(self.bucket).enumerate() {
+            let BucketMeta { lo, scale } = meta[bi];
+            for &c in chunk {
+                out.push(c as f32 * scale + lo);
+            }
+        }
+    }
+
+    /// Quantize-dequantize in place (what the training loop applies to
+    /// weights before "transmission").
+    pub fn apply(&self, values: &mut [f32], rng: &mut Pcg64) {
+        let levels = self.levels() as i32;
+        let levels_f = levels as f32;
+        for chunk in values.chunks_mut(self.bucket) {
+            let (lo, hi) = minmax4(chunk);
+            let scale = (hi - lo) / levels_f;
+            if scale <= 0.0 {
+                continue;
+            }
+            let inv = 1.0 / scale;
+            if self.stochastic {
+                let mut it = chunk.chunks_exact_mut(2);
+                for v2 in &mut it {
+                    let (n0, n1) = rng.next_f32_pair();
+                    let c0 = ((((v2[0] - lo) * inv) + n0) as i32).clamp(0, levels) as f32;
+                    let c1 = ((((v2[1] - lo) * inv) + n1) as i32).clamp(0, levels) as f32;
+                    v2[0] = c0 * scale + lo;
+                    v2[1] = c1 * scale + lo;
+                }
+                for v in it.into_remainder() {
+                    let x = (*v - lo) * inv + rng.next_f32();
+                    let c = (x as i32).clamp(0, levels) as f32;
+                    *v = c * scale + lo;
+                }
+            } else {
+                for v in chunk.iter_mut() {
+                    let x = (*v - lo) * inv + 0.5;
+                    let c = (x as i32).clamp(0, levels) as f32;
+                    *v = c * scale + lo;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{l2_norm, rel_l2_err};
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn roundtrip_preserves_endpoints() {
+        let q = MinMaxQuantizer::new(8, 64, false);
+        let v = randv(256, 1);
+        let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
+        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(2));
+        q.decode(&codes, &meta, &mut out);
+        for (chunk, ochunk) in v.chunks(64).zip(out.chunks(64)) {
+            let (lo, hi) = chunk
+                .iter()
+                .fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &x| {
+                    (a.min(x), b.max(x))
+                });
+            let (olo, ohi) = ochunk
+                .iter()
+                .fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &x| {
+                    (a.min(x), b.max(x))
+                });
+            assert!((lo - olo).abs() < 1e-5);
+            assert!((hi - ohi).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_scale() {
+        let q = MinMaxQuantizer::new(4, 128, false);
+        let v = randv(1024, 3);
+        let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
+        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(4));
+        q.decode(&codes, &meta, &mut out);
+        for (bi, (chunk, ochunk)) in v.chunks(128).zip(out.chunks(128)).enumerate() {
+            let scale = meta[bi].scale;
+            for (&x, &y) in chunk.iter().zip(ochunk) {
+                assert!(
+                    (x - y).abs() <= scale / 2.0 + 1e-6,
+                    "bucket {bi}: err {} > scale/2 {}",
+                    (x - y).abs(),
+                    scale / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        let q = MinMaxQuantizer::new(3, 64, true);
+        let v = randv(64, 5);
+        let mut acc = vec![0.0f64; v.len()];
+        let reps = 4000;
+        let mut rng = Pcg64::seeded(6);
+        let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
+        for _ in 0..reps {
+            q.encode(&v, &mut codes, &mut meta, &mut rng);
+            q.decode(&codes, &meta, &mut out);
+            for (a, &o) in acc.iter_mut().zip(&out) {
+                *a += o as f64;
+            }
+        }
+        let mean: Vec<f32> = acc.iter().map(|&a| (a / reps as f64) as f32).collect();
+        // statistical tolerance: scale/sqrt(reps) * few sigmas
+        let scale = meta[0].scale;
+        let tol = scale as f64 / (reps as f64).sqrt() * 4.0;
+        for (&m, &x) in mean.iter().zip(&v) {
+            assert!(
+                ((m - x).abs() as f64) < tol.max(1e-4),
+                "bias {} > {tol}",
+                (m - x).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_variance_bound() {
+        // Lemma 15: E||Q(v)-v||^2 = scale^2 sum z(1-z) <= scale^2 * n / 4.
+        let q = MinMaxQuantizer::new(4, 256, true);
+        let v = randv(256, 7);
+        let mut rng = Pcg64::seeded(8);
+        let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
+        let mut err2 = 0.0f64;
+        let reps = 500;
+        for _ in 0..reps {
+            q.encode(&v, &mut codes, &mut meta, &mut rng);
+            q.decode(&codes, &meta, &mut out);
+            err2 += crate::util::stats::l2_dist_sq(&out, &v);
+        }
+        err2 /= reps as f64;
+        let bound = (meta[0].scale as f64).powi(2) * v.len() as f64 / 4.0;
+        assert!(err2 <= bound * 1.1, "var {err2} > bound {bound}");
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let v = randv(4096, 9);
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 4, 6, 8] {
+            let q = MinMaxQuantizer::new(bits, 1024, false);
+            let mut w = v.clone();
+            q.apply(&mut w, &mut Pcg64::seeded(10));
+            let e = rel_l2_err(&w, &v);
+            assert!(e < prev, "bits {bits}: {e} !< {prev}");
+            prev = e;
+        }
+        assert!(prev < 0.01, "8-bit rel err {prev} too large");
+    }
+
+    #[test]
+    fn constant_bucket_exact() {
+        let q = MinMaxQuantizer::new(4, 16, true);
+        let mut v = vec![3.25f32; 64];
+        let orig = v.clone();
+        q.apply(&mut v, &mut Pcg64::seeded(11));
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn short_tail_bucket() {
+        let q = MinMaxQuantizer::new(8, 1024, false);
+        let v = randv(1500, 12); // 1 full + 1 short bucket
+        let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
+        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(13));
+        assert_eq!(meta.len(), 2);
+        assert_eq!(codes.len(), 1500);
+        q.decode(&codes, &meta, &mut out);
+        assert_eq!(out.len(), 1500);
+        assert!(rel_l2_err(&out, &v) < 0.01);
+    }
+
+    #[test]
+    fn bucketing_beats_global() {
+        // Paper §5.1: bucketing avoids scaling issues. Construct a tensor
+        // with one huge outlier region; per-bucket error must be smaller.
+        let mut v = randv(2048, 14);
+        for x in v[1024..].iter_mut() {
+            *x *= 1000.0;
+        }
+        let bucketed = MinMaxQuantizer::new(4, 1024, false);
+        let global = MinMaxQuantizer::new(4, 2048, false);
+        let (mut a, mut b) = (v.clone(), v.clone());
+        bucketed.apply(&mut a, &mut Pcg64::seeded(15));
+        global.apply(&mut b, &mut Pcg64::seeded(15));
+        let ea = rel_l2_err(&a[..1024], &v[..1024]);
+        let eb = rel_l2_err(&b[..1024], &v[..1024]);
+        assert!(
+            ea < eb / 10.0,
+            "bucketed {ea} not ≪ global {eb} on small-magnitude half"
+        );
+        assert!(l2_norm(&a) > 0.0);
+    }
+}

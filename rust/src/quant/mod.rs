@@ -1,0 +1,31 @@
+//! Quantization substrate: everything QSDP compresses goes through here.
+//!
+//! * [`minmax`] — bucketed min–max uniform quantizer (the paper's
+//!   practical codec for both weights and gradients, §5.1).
+//! * [`lattice`] — random-shift lattice quantizer `Q^w` (Definition 1),
+//!   used by the theory testbed and as the weight-quantization analysis
+//!   object (Lemmas 4–6).
+//! * [`codec`] — bit-packing wire format; byte-exact sizes feed the
+//!   network simulator.
+//! * [`learned`] — learned quantization levels (Algorithm 2 / Figure 2):
+//!   gradient-descent optimization of level locations.
+//! * [`policy`] — which tensors are quantized at which width (norms and
+//!   biases pass through in FP32, per §5.1).
+
+pub mod codec;
+pub mod lattice;
+pub mod learned;
+pub mod minmax;
+pub mod policy;
+pub mod qsgd;
+
+pub use codec::EncodedTensor;
+pub use lattice::LatticeQuantizer;
+pub use learned::LearnedLevels;
+pub use minmax::MinMaxQuantizer;
+pub use policy::{QuantPolicy, Scheme};
+pub use qsgd::SparseGrad;
+
+/// Default bucket size (paper §5.1: 1024 balances compression vs accuracy
+/// and is exactly one 8×128 TPU vector tile).
+pub const DEFAULT_BUCKET: usize = 1024;

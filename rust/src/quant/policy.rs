@@ -1,0 +1,230 @@
+//! Quantization policy: which tensor is compressed how (paper §5.1).
+//!
+//! QSDP filters out normalization layers and biases — they are tiny and
+//! sensitive, so they travel in FP32 — and compresses weight matrices
+//! and gradients with the bucketed codec at configurable bit-widths.
+
+use super::codec::{encode_minmax, EncodedTensor};
+use super::learned::LearnedLevels;
+use crate::model::spec::ParamKind;
+use crate::util::Pcg64;
+
+/// Wire encoding scheme identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Fp32,
+    MinMax,
+    Learned,
+}
+
+/// End-to-end compression policy for a training run.
+#[derive(Clone, Debug)]
+pub struct QuantPolicy {
+    /// Weight bit-width (None = FP32 baseline FSDP).
+    pub weight_bits: Option<u8>,
+    /// Gradient bit-width (None = FP16 baseline — FSDP transmits grads
+    /// in half precision; we account 2 bytes/elem for sizing).
+    pub grad_bits: Option<u8>,
+    pub bucket: usize,
+    /// Stochastic rounding for gradients (weights use round-to-nearest;
+    /// §5.1 observes stochasticity has minimal impact with bucketing).
+    pub stochastic_grads: bool,
+    /// Optional learned level tables (per bit-width), used when set and
+    /// the bit-width matches (§5.2: only worthwhile for ≤ 6 bits).
+    pub learned_weights: Option<LearnedLevels>,
+    pub learned_grads: Option<LearnedLevels>,
+}
+
+impl QuantPolicy {
+    /// The FSDP baseline: FP32 weights, FP16 gradients, no compression.
+    pub fn baseline() -> Self {
+        QuantPolicy {
+            weight_bits: None,
+            grad_bits: None,
+            bucket: super::DEFAULT_BUCKET,
+            stochastic_grads: false,
+            learned_weights: None,
+            learned_grads: None,
+        }
+    }
+
+    /// QSDP defaults: W8G8, bucket 1024 (paper Table 1).
+    pub fn qsdp_default() -> Self {
+        Self::wg(8, 8)
+    }
+
+    /// QSDP with explicit weight/grad bit-widths.
+    pub fn wg(weight_bits: u8, grad_bits: u8) -> Self {
+        QuantPolicy {
+            weight_bits: Some(weight_bits),
+            grad_bits: Some(grad_bits),
+            bucket: super::DEFAULT_BUCKET,
+            stochastic_grads: true,
+            learned_weights: None,
+            learned_grads: None,
+        }
+    }
+
+    pub fn is_baseline(&self) -> bool {
+        self.weight_bits.is_none() && self.grad_bits.is_none()
+    }
+
+    /// Should this parameter kind be quantized at all?
+    pub fn quantizes(&self, kind: ParamKind) -> bool {
+        kind == ParamKind::Matrix
+    }
+
+    /// Encode a *weight* tensor for transmission.
+    pub fn encode_weight(
+        &self,
+        values: &[f32],
+        kind: ParamKind,
+        rng: &mut Pcg64,
+    ) -> EncodedTensor {
+        match (self.weight_bits, self.quantizes(kind)) {
+            (Some(bits), true) => {
+                if let Some(l) = &self.learned_weights {
+                    if l.bits == bits {
+                        return l.encode(values, self.bucket);
+                    }
+                }
+                // weights: round-to-nearest (deterministic)
+                encode_minmax(values, bits, self.bucket, false, rng)
+            }
+            _ => EncodedTensor::fp32(values),
+        }
+    }
+
+    /// Encode a *gradient* tensor for transmission.
+    pub fn encode_grad(
+        &self,
+        values: &[f32],
+        kind: ParamKind,
+        rng: &mut Pcg64,
+    ) -> EncodedTensor {
+        match (self.grad_bits, self.quantizes(kind)) {
+            (Some(bits), true) => {
+                if let Some(l) = &self.learned_grads {
+                    if l.bits == bits {
+                        return l.encode(values, self.bucket);
+                    }
+                }
+                encode_minmax(values, bits, self.bucket, self.stochastic_grads, rng)
+            }
+            _ => EncodedTensor::fp32(values),
+        }
+    }
+
+    /// Bytes a weight tensor of `n` elements occupies on the wire
+    /// (analytic; matches `encode_weight(...).byte_size()` exactly).
+    pub fn weight_wire_bytes(&self, n: usize, kind: ParamKind) -> usize {
+        match (self.weight_bits, self.quantizes(kind)) {
+            (Some(bits), true) => {
+                let nb = n.div_ceil(self.bucket);
+                let levels = if self.learned_weights.as_ref().map(|l| l.bits == bits).unwrap_or(false)
+                {
+                    (1usize << bits) * 4
+                } else {
+                    0
+                };
+                14 + nb * 8 + levels + (n * bits as usize).div_ceil(8)
+            }
+            _ => 14 + n * 4,
+        }
+    }
+
+    /// Bytes a gradient tensor occupies on the wire. The FSDP baseline
+    /// transmits FP16 gradients (2 bytes/elem), per the paper's setup.
+    pub fn grad_wire_bytes(&self, n: usize, kind: ParamKind) -> usize {
+        match (self.grad_bits, self.quantizes(kind)) {
+            (Some(bits), true) => {
+                let nb = n.div_ceil(self.bucket);
+                let levels = if self.learned_grads.as_ref().map(|l| l.bits == bits).unwrap_or(false)
+                {
+                    (1usize << bits) * 4
+                } else {
+                    0
+                };
+                14 + nb * 8 + levels + (n * bits as usize).div_ceil(8)
+            }
+            _ => 14 + n * 2, // FP16 baseline
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ParamKind;
+
+    fn randv(n: usize) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(1);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn baseline_passthrough() {
+        let p = QuantPolicy::baseline();
+        let v = randv(100);
+        let e = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(2));
+        assert_eq!(e.scheme, Scheme::Fp32);
+        let mut out = vec![];
+        e.decode(&mut out);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn norms_never_quantized() {
+        let p = QuantPolicy::wg(4, 4);
+        let v = randv(64);
+        for kind in [ParamKind::Norm, ParamKind::Bias] {
+            let e = p.encode_weight(&v, kind, &mut Pcg64::seeded(3));
+            assert_eq!(e.scheme, Scheme::Fp32);
+            let g = p.encode_grad(&v, kind, &mut Pcg64::seeded(3));
+            assert_eq!(g.scheme, Scheme::Fp32);
+        }
+    }
+
+    #[test]
+    fn matrices_quantized() {
+        let p = QuantPolicy::wg(8, 4);
+        let v = randv(2048);
+        let w = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(4));
+        assert_eq!(w.scheme, Scheme::MinMax);
+        assert_eq!(w.bits, 8);
+        let g = p.encode_grad(&v, ParamKind::Matrix, &mut Pcg64::seeded(4));
+        assert_eq!(g.bits, 4);
+    }
+
+    #[test]
+    fn wire_bytes_match_encoding() {
+        let v = randv(3000);
+        for (wb, gb) in [(8u8, 8u8), (6, 4), (4, 2)] {
+            let p = QuantPolicy::wg(wb, gb);
+            let e = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(5));
+            assert_eq!(e.byte_size(), p.weight_wire_bytes(v.len(), ParamKind::Matrix));
+            let g = p.encode_grad(&v, ParamKind::Matrix, &mut Pcg64::seeded(5));
+            assert_eq!(g.byte_size(), p.grad_wire_bytes(v.len(), ParamKind::Matrix));
+        }
+        // baseline sizes
+        let b = QuantPolicy::baseline();
+        assert_eq!(b.weight_wire_bytes(100, ParamKind::Matrix), 14 + 400);
+        assert_eq!(b.grad_wire_bytes(100, ParamKind::Matrix), 14 + 200);
+    }
+
+    #[test]
+    fn learned_levels_used_when_bits_match() {
+        let mut p = QuantPolicy::wg(4, 4);
+        p.learned_weights = Some(LearnedLevels::uniform(4));
+        let v = randv(1024);
+        let e = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(6));
+        assert_eq!(e.scheme, Scheme::Learned);
+        assert_eq!(e.levels.len(), 16);
+        // mismatched bits -> falls back to uniform
+        p.learned_weights = Some(LearnedLevels::uniform(6));
+        let e2 = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(6));
+        assert_eq!(e2.scheme, Scheme::MinMax);
+    }
+}

@@ -1,0 +1,259 @@
+//! QSGD-style sparse gradient coding (paper §D.3 / Corollary 3).
+//!
+//! For coarse grids (`δ∇ → G_ℓ1`) the quantized gradient becomes sparse:
+//! Lemma 5/15 bound its support by `‖v‖₁/δ`. The paper's Corollary 3
+//! prices communication at `O(‖v‖₁/δ · (ln n + ln ‖v‖₁))` bits — i.e. a
+//! sparse encoding: positions with a variable-length integer code plus
+//! sign bits. This module implements that wire format (Elias-γ coded
+//! position gaps + sign + magnitude code) so the dense-vs-sparse
+//! communication trade-off of §4.2 can be measured, not just cited.
+
+use crate::util::Pcg64;
+
+/// A sparse QSGD-encoded gradient on the grid δZ.
+#[derive(Clone, Debug)]
+pub struct SparseGrad {
+    pub n: usize,
+    pub delta: f32,
+    /// Bit-stream: for each nonzero, Elias-γ(gap+1) ++ sign ++ Elias-γ(|k|).
+    pub bits: BitVec,
+    pub nnz: usize,
+}
+
+/// Minimal append-only bit vector.
+#[derive(Clone, Debug, Default)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn push(&mut self, bit: bool) {
+        let w = self.len / 64;
+        if w == self.words.len() {
+            self.words.push(0);
+        }
+        if bit {
+            self.words[w] |= 1u64 << (self.len % 64);
+        }
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Size in bytes on the wire.
+    pub fn byte_size(&self) -> usize {
+        self.len.div_ceil(8)
+    }
+}
+
+/// Elias-γ encode a positive integer (≥ 1).
+pub fn elias_gamma_encode(x: u64, out: &mut BitVec) {
+    debug_assert!(x >= 1);
+    let nbits = 64 - x.leading_zeros() as usize; // floor(log2 x) + 1
+    for _ in 0..nbits - 1 {
+        out.push(false);
+    }
+    for i in (0..nbits).rev() {
+        out.push((x >> i) & 1 == 1);
+    }
+}
+
+/// Decode one Elias-γ integer starting at bit `pos`; returns (x, next).
+pub fn elias_gamma_decode(bits: &BitVec, mut pos: usize) -> (u64, usize) {
+    let mut zeros = 0usize;
+    while !bits.get(pos) {
+        zeros += 1;
+        pos += 1;
+    }
+    let mut x = 0u64;
+    for _ in 0..zeros + 1 {
+        x = (x << 1) | bits.get(pos) as u64;
+        pos += 1;
+    }
+    (x, pos)
+}
+
+/// Stochastically quantize `values` onto δZ (coin-flip, Definition 12)
+/// and encode the nonzeros sparsely.
+pub fn encode_sparse(values: &[f32], delta: f32, rng: &mut Pcg64) -> SparseGrad {
+    let mut bits = BitVec::new();
+    let mut last = 0usize; // previous nonzero index + 1
+    let mut nnz = 0usize;
+    for (i, &v) in values.iter().enumerate() {
+        let y = v / delta;
+        let lo = y.floor();
+        let k = (lo + (rng.next_f32() < (y - lo)) as i64 as f32) as i64;
+        if k != 0 {
+            let gap = i - last;
+            elias_gamma_encode(gap as u64 + 1, &mut bits);
+            bits.push(k < 0);
+            elias_gamma_encode(k.unsigned_abs(), &mut bits);
+            last = i + 1;
+            nnz += 1;
+        }
+    }
+    SparseGrad {
+        n: values.len(),
+        delta,
+        bits,
+        nnz,
+    }
+}
+
+impl SparseGrad {
+    /// Decode to a dense vector.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        let mut pos = 0usize;
+        let mut idx = 0usize;
+        for _ in 0..self.nnz {
+            let (gap1, p) = elias_gamma_decode(&self.bits, pos);
+            let sign = self.bits.get(p);
+            let (mag, p2) = elias_gamma_decode(&self.bits, p + 1);
+            pos = p2;
+            idx += (gap1 - 1) as usize;
+            out[idx] = self.delta * mag as f32 * if sign { -1.0 } else { 1.0 };
+            idx += 1;
+        }
+        out
+    }
+
+    /// Wire size in bytes (header: n + delta + nnz ≈ 16B).
+    pub fn byte_size(&self) -> usize {
+        16 + self.bits.byte_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{l1_norm, l2_dist_sq};
+
+    #[test]
+    fn elias_roundtrip() {
+        let mut bits = BitVec::new();
+        let xs = [1u64, 2, 3, 7, 8, 100, 12345, u32::MAX as u64];
+        for &x in &xs {
+            elias_gamma_encode(x, &mut bits);
+        }
+        let mut pos = 0;
+        for &x in &xs {
+            let (got, p) = elias_gamma_decode(&bits, pos);
+            assert_eq!(got, x);
+            pos = p;
+        }
+        assert_eq!(pos, bits.len());
+    }
+
+    #[test]
+    fn bitvec_basics() {
+        let mut b = BitVec::new();
+        for i in 0..130 {
+            b.push(i % 3 == 0);
+        }
+        assert_eq!(b.len(), 130);
+        for i in 0..130 {
+            assert_eq!(b.get(i), i % 3 == 0);
+        }
+        assert_eq!(b.byte_size(), 17);
+    }
+
+    #[test]
+    fn sparse_roundtrip_on_grid() {
+        // values already on the grid decode exactly
+        let delta = 0.5f32;
+        let v: Vec<f32> = vec![0.0, 0.5, -1.0, 0.0, 0.0, 2.5, 0.0, -0.5];
+        let mut rng = Pcg64::seeded(1);
+        let e = encode_sparse(&v, delta, &mut rng);
+        assert_eq!(e.decode(), v);
+        assert_eq!(e.nnz, 4);
+    }
+
+    #[test]
+    fn unbiased_estimator() {
+        let v: Vec<f32> = vec![0.3, -0.7, 0.05, 1.2];
+        let delta = 0.5f32;
+        let mut rng = Pcg64::seeded(2);
+        let mut acc = vec![0.0f64; v.len()];
+        let reps = 30_000;
+        for _ in 0..reps {
+            let d = encode_sparse(&v, delta, &mut rng).decode();
+            for (a, &x) in acc.iter_mut().zip(&d) {
+                *a += x as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&v) {
+            let mean = a / reps as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.02,
+                "bias at {x}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparsity_follows_l1_bound() {
+        // E[nnz] <= ||v||_1 / delta (Lemma 15)
+        let mut rng = Pcg64::seeded(3);
+        let mut v = vec![0.0f32; 2048];
+        rng.fill_normal(&mut v, 0.1);
+        let delta = 1.0f32; // coarse: most values quantize to 0
+        let reps = 200;
+        let mut nnz = 0usize;
+        for _ in 0..reps {
+            nnz += encode_sparse(&v, delta, &mut rng).nnz;
+        }
+        let mean_nnz = nnz as f64 / reps as f64;
+        let bound = l1_norm(&v) / delta as f64;
+        assert!(mean_nnz <= bound * 1.1, "nnz {mean_nnz} > bound {bound}");
+        // and it IS sparse: far fewer than n nonzeros
+        assert!(mean_nnz < 2048.0 * 0.2);
+    }
+
+    #[test]
+    fn dense_vs_sparse_communication_tradeoff() {
+        // Corollary 3's trade-off: coarser grids -> fewer bytes but more
+        // variance; finer grids -> more bytes, less variance.
+        let mut rng = Pcg64::seeded(4);
+        let mut v = vec![0.0f32; 4096];
+        rng.fill_normal(&mut v, 1.0);
+        let mut prev_bytes = usize::MAX;
+        let mut prev_var = 0.0f64;
+        for delta in [0.01f32, 0.1, 1.0] {
+            let e = encode_sparse(&v, delta, &mut rng);
+            let d = e.decode();
+            let var = l2_dist_sq(&d, &v);
+            assert!(e.byte_size() < prev_bytes, "bytes not decreasing at δ={delta}");
+            assert!(var > prev_var, "variance not increasing at δ={delta}");
+            prev_bytes = e.byte_size();
+            prev_var = var;
+        }
+    }
+
+    #[test]
+    fn empty_and_all_zero() {
+        let mut rng = Pcg64::seeded(5);
+        let e = encode_sparse(&[], 0.5, &mut rng);
+        assert_eq!(e.decode(), Vec::<f32>::new());
+        let z = encode_sparse(&[0.0; 64], 0.5, &mut rng);
+        assert_eq!(z.nnz, 0);
+        assert_eq!(z.decode(), vec![0.0; 64]);
+    }
+}

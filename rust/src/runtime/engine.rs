@@ -1,0 +1,145 @@
+//! Thin PJRT wrapper with a per-path executable cache.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact path. Compilation is expensive (XLA optimizes the whole
+/// module), so every artifact is compiled at most once per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO text artifact and compile it (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple elements (artifacts are lowered with `return_tuple=True`).
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {:?} != len {}", dims, data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {:?} != len {}", dims, data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::artifacts_root;
+
+    #[test]
+    fn literal_helpers() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn loads_and_runs_kernel_artifact() {
+        let root = artifacts_root();
+        let path = root.join("kernels").join("lattice.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = Engine::cpu().unwrap();
+        let exe = eng.load(&path).unwrap();
+        // (values (64,1024), shift (64,1), delta ()) -> lattice rounding
+        let n = 64 * 1024;
+        let vals: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.013 - 0.6).collect();
+        let shifts = vec![0.05f32; 64];
+        let v = literal_f32(&vals, &[64, 1024]).unwrap();
+        let s = literal_f32(&shifts, &[64, 1]).unwrap();
+        let d = xla::Literal::scalar(0.1f32);
+        let out = eng.run(&exe, &[v, s, d]).unwrap();
+        assert_eq!(out.len(), 1);
+        let got = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(got.len(), n);
+        // cross-check vs the Rust lattice quantizer (same math)
+        let q = crate::quant::LatticeQuantizer::new(0.1, 1024);
+        let mut expect = vals.clone();
+        q.apply_with_shifts(&mut expect, &shifts);
+        let mut max = 0.0f32;
+        for (a, b) in got.iter().zip(&expect) {
+            max = max.max((a - b).abs());
+        }
+        assert!(max < 1e-5, "pallas vs rust lattice mismatch {max}");
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let root = artifacts_root();
+        let path = root.join("kernels").join("lattice.hlo.txt");
+        if !path.exists() {
+            return;
+        }
+        let eng = Engine::cpu().unwrap();
+        let a = eng.load(&path).unwrap();
+        let b = eng.load(&path).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,179 @@
+//! GPT model runtime: init / train-step / eval over the AOT artifacts.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use super::engine::{literal_f32, literal_i32, to_vec_f32, Engine};
+use crate::model::spec::Manifest;
+
+/// Which exported step graph to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepVariant {
+    /// Plain FP32 forward/backward.
+    Plain,
+    /// In-graph Pallas fake-quantized weights at the given bit-width
+    /// (only widths exported by aot.py, currently 8 and 4).
+    QuantWeights(u8),
+}
+
+/// Host-side flat parameter set (one Vec<f32> per tensor, spec order).
+pub type FlatParams = Vec<Vec<f32>>;
+
+/// Loaded model: manifest + compiled executables.
+pub struct GptRuntime {
+    pub manifest: Manifest,
+    engine: Arc<Engine>,
+    init_exe: Arc<xla::PjRtLoadedExecutable>,
+    step_exe: Arc<xla::PjRtLoadedExecutable>,
+    eval_exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl GptRuntime {
+    /// Load config `name` from the artifacts root with the given variant.
+    pub fn load(engine: Arc<Engine>, root: &Path, name: &str, variant: StepVariant) -> Result<Self> {
+        let manifest = Manifest::load(root, name)?;
+        let step_key = match variant {
+            StepVariant::Plain => "step".to_string(),
+            StepVariant::QuantWeights(b) => format!("step_qw{b}"),
+        };
+        let init_exe = engine.load(&manifest.artifact("init")?)?;
+        let step_exe = engine
+            .load(&manifest.artifact(&step_key)?)
+            .with_context(|| format!("loading step variant {step_key}"))?;
+        let eval_exe = engine.load(&manifest.artifact("eval")?)?;
+        Ok(GptRuntime {
+            manifest,
+            engine,
+            init_exe,
+            step_exe,
+            eval_exe,
+        })
+    }
+
+    /// Initialize parameters with the exported seeded initializer, so
+    /// Rust and JAX produce bit-identical starting points.
+    pub fn init_params(&self, seed: u32) -> Result<FlatParams> {
+        let seed_lit = literal_i32(&[seed as i32], &[1])?.convert(xla::PrimitiveType::U32)?;
+        let outs = self.engine.run(&self.init_exe, &[seed_lit])?;
+        anyhow::ensure!(
+            outs.len() == self.manifest.params.len(),
+            "init returned {} tensors, expected {}",
+            outs.len(),
+            self.manifest.params.len()
+        );
+        outs.iter().map(to_vec_f32).collect()
+    }
+
+    /// Run one fwd+bwd microbatch: returns (loss, grads).
+    pub fn step(&self, tokens: &[i32], params: &FlatParams) -> Result<(f32, FlatParams)> {
+        let d = &self.manifest.dims;
+        let mut inputs = Vec::with_capacity(1 + params.len());
+        inputs.push(literal_i32(tokens, &[d.batch_size, d.seq_len])?);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(literal_f32(p, &spec.shape)?);
+        }
+        let outs = self.engine.run(&self.step_exe, &inputs)?;
+        anyhow::ensure!(outs.len() == 1 + params.len(), "bad step output arity");
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let grads = outs[1..]
+            .iter()
+            .map(to_vec_f32)
+            .collect::<Result<FlatParams>>()?;
+        Ok((loss, grads))
+    }
+
+    /// Evaluation loss on one batch (no backward).
+    pub fn eval(&self, tokens: &[i32], params: &FlatParams) -> Result<f32> {
+        let d = &self.manifest.dims;
+        let mut inputs = Vec::with_capacity(1 + params.len());
+        inputs.push(literal_i32(tokens, &[d.batch_size, d.seq_len])?);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(literal_f32(p, &spec.shape)?);
+        }
+        let outs = self.engine.run(&self.eval_exe, &inputs)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::artifacts_root;
+
+    fn skip() -> bool {
+        !artifacts_root().join("nano").join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn init_step_eval_roundtrip() {
+        if skip() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = Arc::new(Engine::cpu().unwrap());
+        let rt = GptRuntime::load(eng, &artifacts_root(), "nano", StepVariant::Plain).unwrap();
+        let params = rt.init_params(7).unwrap();
+        assert_eq!(params.len(), rt.manifest.params.len());
+        for (p, s) in params.iter().zip(&rt.manifest.params) {
+            assert_eq!(p.len(), s.numel());
+        }
+        let d = &rt.manifest.dims;
+        let n_tok = d.batch_size * d.seq_len;
+        let tokens: Vec<i32> = (0..n_tok).map(|i| (i % d.vocab) as i32).collect();
+        let (loss, grads) = rt.step(&tokens, &params).unwrap();
+        // untrained loss ~ ln(vocab)
+        let expect = (d.vocab as f32).ln();
+        assert!(
+            (loss - expect).abs() < 1.0,
+            "loss {loss} far from ln(V)={expect}"
+        );
+        assert_eq!(grads.len(), params.len());
+        let gn: f64 = grads.iter().map(|g| crate::util::stats::l2_norm(g)).sum();
+        assert!(gn > 0.0, "zero gradient");
+        let eloss = rt.eval(&tokens, &params).unwrap();
+        assert!((eloss - loss).abs() < 2e-2, "eval {eloss} vs step {loss}");
+    }
+
+    #[test]
+    fn sgd_on_runtime_reduces_loss() {
+        if skip() {
+            return;
+        }
+        let eng = Arc::new(Engine::cpu().unwrap());
+        let rt = GptRuntime::load(eng, &artifacts_root(), "nano", StepVariant::Plain).unwrap();
+        let mut params = rt.init_params(1).unwrap();
+        let d = &rt.manifest.dims;
+        let n_tok = d.batch_size * d.seq_len;
+        let tokens: Vec<i32> = (0..n_tok).map(|i| ((i * 7) % 50) as i32).collect();
+        let (l0, _) = rt.step(&tokens, &params).unwrap();
+        for _ in 0..3 {
+            let (_, grads) = rt.step(&tokens, &params).unwrap();
+            for (p, g) in params.iter_mut().zip(&grads) {
+                for (x, &dg) in p.iter_mut().zip(g) {
+                    *x -= 0.5 * dg;
+                }
+            }
+        }
+        let (l1, _) = rt.step(&tokens, &params).unwrap();
+        assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn quantized_variant_close_at_8bit() {
+        if skip() {
+            return;
+        }
+        let eng = Arc::new(Engine::cpu().unwrap());
+        let rt = GptRuntime::load(eng.clone(), &artifacts_root(), "nano", StepVariant::Plain).unwrap();
+        let rt_q =
+            GptRuntime::load(eng, &artifacts_root(), "nano", StepVariant::QuantWeights(8)).unwrap();
+        let params = rt.init_params(3).unwrap();
+        let d = &rt.manifest.dims;
+        let tokens: Vec<i32> =
+            (0..d.batch_size * d.seq_len).map(|i| (i % d.vocab) as i32).collect();
+        let (l, _) = rt.step(&tokens, &params).unwrap();
+        let (lq, _) = rt_q.step(&tokens, &params).unwrap();
+        assert!((l - lq).abs() < 0.05, "plain {l} vs qw8 {lq}");
+    }
+}

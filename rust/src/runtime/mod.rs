@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! This is the only place the crate touches XLA. The flow (see
+//! `/opt/xla-example` and DESIGN.md §3) is:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. HLO *text* is the interchange
+//! format — jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects in proto form; the text parser reassigns ids.
+//!
+//! Python runs only at build time (`make artifacts`); the executables
+//! compiled here are the entire compute engine of the training runtime.
+
+pub mod engine;
+pub mod gpt;
+
+pub use engine::Engine;
+pub use gpt::GptRuntime;

@@ -1,0 +1,19 @@
+//! Cluster simulation: topology, network time model, compute time model
+//! and the per-step time composition used by the paper's timing
+//! experiments (Figure 4, Figure 6, Table 5).
+//!
+//! The *data* that moves through the fabric is real (actual encoded
+//! buffers produced by `quant`/`collectives`); only the wall-clock cost
+//! of a transfer is modeled analytically — the same quantity the paper
+//! manipulates with `tc` bandwidth throttling. Calibration constants and
+//! their provenance are documented in DESIGN.md §2 and EXPERIMENTS.md.
+
+pub mod compute;
+pub mod network;
+pub mod steptime;
+pub mod topology;
+
+pub use compute::ComputeModel;
+pub use network::NetworkModel;
+pub use steptime::{StepBreakdown, StepTimeModel};
+pub use topology::Topology;

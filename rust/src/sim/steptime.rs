@@ -1,0 +1,213 @@
+//! Per-step time composition for FSDP/QSDP (the quantity plotted in
+//! Figure 4, Figure 6 and Table 5).
+//!
+//! One optimizer step of FSDP performs, per gradient exchange,
+//! `n_accum + 1` full-model weight AllGathers (the paper's Appendix B:
+//! "weights are communicated 5 times per one gradient exchange" at
+//! 4 accumulations) and one gradient ReduceScatter. Weight payload
+//! sizes come from the byte-exact quantization codec; the baseline
+//! transmits FP32 weights and FP16 gradients (§6.1).
+
+use crate::model::spec::GptDims;
+use crate::quant::QuantPolicy;
+
+use super::compute::ComputeModel;
+use super::network::NetworkModel;
+use super::topology::Topology;
+
+/// Decomposition of one training-step's wall time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepBreakdown {
+    pub compute_s: f64,
+    pub weight_comm_s: f64,
+    pub grad_comm_s: f64,
+}
+
+impl StepBreakdown {
+    pub fn comm(&self) -> f64 {
+        self.weight_comm_s + self.grad_comm_s
+    }
+
+    /// Total step time with `overlap`·comm hidden under compute
+    /// (FSDP prefetches the next layer's AllGather during the current
+    /// layer's compute; hiding is bounded by the compute budget).
+    pub fn total_with_overlap(&self, overlap: f64) -> f64 {
+        let hidden = (overlap * self.comm()).min(self.compute_s);
+        self.compute_s + self.comm() - hidden
+    }
+
+    /// Non-overlapped total (upper bound).
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.weight_comm_s + self.grad_comm_s
+    }
+}
+
+/// Analytic step-time model for a (model, cluster, policy) triple.
+#[derive(Clone, Debug)]
+pub struct StepTimeModel {
+    pub dims: GptDims,
+    pub topo: Topology,
+    pub net: NetworkModel,
+    pub compute: ComputeModel,
+    /// Gradient accumulation microbatches per optimizer step.
+    pub n_accum: usize,
+    /// Fraction of communication FSDP hides under compute via layer
+    /// prefetch (bounded by the compute budget itself).
+    pub overlap: f64,
+}
+
+impl StepTimeModel {
+    /// Paper configuration for a model at an inter-node bandwidth.
+    pub fn paper(model: &str, inter_gbps: f64) -> Option<Self> {
+        Some(StepTimeModel {
+            dims: GptDims::paper(model)?,
+            topo: Topology::paper(),
+            net: NetworkModel::paper(inter_gbps),
+            compute: ComputeModel::paper(),
+            n_accum: 4,
+            overlap: 0.6,
+        })
+    }
+
+    /// Total wire bytes of one full-model weight transmission.
+    pub fn weight_bytes(&self, policy: &QuantPolicy) -> usize {
+        self.dims
+            .param_spec()
+            .iter()
+            .map(|p| policy.weight_wire_bytes(p.numel(), p.kind))
+            .sum()
+    }
+
+    /// Total wire bytes of one full-model gradient transmission.
+    pub fn grad_bytes(&self, policy: &QuantPolicy) -> usize {
+        self.dims
+            .param_spec()
+            .iter()
+            .map(|p| policy.grad_wire_bytes(p.numel(), p.kind))
+            .sum()
+    }
+
+    /// Number of full-model weight AllGathers per optimizer step.
+    pub fn weight_gathers(&self) -> usize {
+        self.n_accum + 1
+    }
+
+    /// Total step seconds under a policy (with the model's overlap).
+    pub fn step_total(&self, policy: &QuantPolicy) -> f64 {
+        self.step(policy).total_with_overlap(self.overlap)
+    }
+
+    /// Total step seconds under fake compression (with overlap).
+    pub fn fake_total(&self, gamma_w: f64, gamma_g: f64) -> f64 {
+        self.step_fake_compression(gamma_w, gamma_g)
+            .total_with_overlap(self.overlap)
+    }
+
+    /// Step-time breakdown under a quantization policy.
+    pub fn step(&self, policy: &QuantPolicy) -> StepBreakdown {
+        let wb = self.weight_bytes(policy);
+        let gb = self.grad_bytes(policy);
+        StepBreakdown {
+            compute_s: self.compute.step_time(&self.dims, &self.topo),
+            weight_comm_s: self.weight_gathers() as f64
+                * self.net.allgather_time(&self.topo, wb),
+            grad_comm_s: self.net.reduce_scatter_time(&self.topo, gb),
+        }
+    }
+
+    /// Appendix-B style "fake compression": transmit only 1/γ of the
+    /// baseline payloads (weights FP32/γw, gradients FP16/γg).
+    pub fn step_fake_compression(&self, gamma_w: f64, gamma_g: f64) -> StepBreakdown {
+        assert!(gamma_w >= 1.0 && gamma_g >= 1.0);
+        let base = QuantPolicy::baseline();
+        let wb = (self.weight_bytes(&base) as f64 / gamma_w) as usize;
+        let gb = (self.grad_bytes(&base) as f64 / gamma_g) as usize;
+        StepBreakdown {
+            compute_s: self.compute.step_time(&self.dims, &self.topo),
+            weight_comm_s: self.weight_gathers() as f64
+                * self.net.allgather_time(&self.topo, wb),
+            grad_comm_s: self.net.reduce_scatter_time(&self.topo, gb),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qsdp_removes_bandwidth_sensitivity() {
+        // Figure 4's headline: QSDP step time is essentially constant
+        // across 10/50/100 Gbps while FSDP degrades sharply at 10 Gbps.
+        let fsdp = QuantPolicy::baseline();
+        let qsdp = QuantPolicy::qsdp_default();
+        let t = |bw: f64, p: &QuantPolicy| {
+            StepTimeModel::paper("gpt1.3b", bw).unwrap().step_total(p)
+        };
+        let f10 = t(10.0, &fsdp);
+        let f100 = t(100.0, &fsdp);
+        let q10 = t(10.0, &qsdp);
+        let q100 = t(100.0, &qsdp);
+        assert!(f10 > 1.2 * f100, "FSDP 10G {f10} not > 100G {f100}");
+        assert!(q10 < 1.2 * q100, "QSDP not flat: {q10} vs {q100}");
+        // end-to-end speedup at 10 Gbps ~2.2x (paper headline)
+        let speedup = f10 / q10;
+        assert!(
+            (1.8..2.8).contains(&speedup),
+            "10G speedup {speedup} out of band (paper: 2.25)"
+        );
+    }
+
+    #[test]
+    fn weight_comm_dominates_grad_comm() {
+        // Appendix B: weights are communicated 5x more often.
+        let m = StepTimeModel::paper("gpt1.3b", 10.0).unwrap();
+        let s = m.step(&QuantPolicy::baseline());
+        assert!(s.weight_comm_s > 2.0 * s.grad_comm_s);
+    }
+
+    #[test]
+    fn fake_compression_monotone() {
+        let m = StepTimeModel::paper("gpt1.3b", 100.0).unwrap();
+        let mut prev = f64::INFINITY;
+        for g in [1.0, 2.0, 4.0, 8.0] {
+            let t = m.fake_total(g, g);
+            assert!(t < prev, "gamma {g}: {t} !< {prev}");
+            prev = t;
+        }
+        // 8x compression approaches the ideal (no-comm) line for 1.3B
+        let ideal = m.fake_total(1e9, 1e9);
+        let t8 = m.fake_total(8.0, 8.0);
+        assert!(t8 < ideal * 1.35, "8x {t8} vs ideal {ideal}");
+    }
+
+    #[test]
+    fn table5_corner_shape() {
+        // Table 5: baseline 23.23s, w8g8 13.21s at 100 Gbps — check we
+        // land in the right neighborhood and preserve the ratio
+        // (paper ratio 23.23/13.21 = 1.76).
+        let m = StepTimeModel::paper("gpt1.3b", 100.0).unwrap();
+        let base = m.fake_total(1.0, 1.0);
+        let w8g8 = m.fake_total(8.0, 8.0);
+        assert!((18.0..32.0).contains(&base), "baseline {base}");
+        let ratio = base / w8g8;
+        assert!((1.5..2.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn wire_bytes_orders() {
+        let m = StepTimeModel::paper("gpt125m", 100.0).unwrap();
+        let base = QuantPolicy::baseline();
+        let q = QuantPolicy::qsdp_default();
+        let wb_base = m.weight_bytes(&base);
+        let wb_q = m.weight_bytes(&q);
+        // 8-bit weights ≈ 4x smaller than FP32 (minus meta overhead)
+        let r = wb_base as f64 / wb_q as f64;
+        assert!((3.5..4.05).contains(&r), "weight ratio {r}");
+        let gb_base = m.grad_bytes(&base);
+        let gb_q = m.grad_bytes(&q);
+        // 8-bit grads ≈ 2x smaller than FP16
+        let rg = gb_base as f64 / gb_q as f64;
+        assert!((1.7..2.05).contains(&rg), "grad ratio {rg}");
+    }
+}

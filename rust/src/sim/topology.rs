@@ -1,0 +1,89 @@
+//! Cluster topology: nodes × GPUs-per-node, shard arithmetic.
+
+/// A two-level cluster (the paper: 4 nodes × 8 V100).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Self {
+        assert!(nodes > 0 && gpus_per_node > 0);
+        Topology { nodes, gpus_per_node }
+    }
+
+    /// The paper's evaluation cluster.
+    pub fn paper() -> Self {
+        Topology::new(4, 8)
+    }
+
+    /// Total world size P.
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Node index of a rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Ranks co-located on a node.
+    pub fn ranks_on_node(&self, node: usize) -> std::ops::Range<usize> {
+        node * self.gpus_per_node..(node + 1) * self.gpus_per_node
+    }
+
+    /// FSDP shard range of `rank` for a tensor of `n` elements:
+    /// contiguous 1/P partition, remainder spread over the first ranks.
+    pub fn shard_range(&self, n: usize, rank: usize) -> std::ops::Range<usize> {
+        let p = self.world();
+        let base = n / p;
+        let rem = n % p;
+        let start = rank * base + rank.min(rem);
+        let len = base + usize::from(rank < rem);
+        start..start + len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_and_nodes() {
+        let t = Topology::paper();
+        assert_eq!(t.world(), 32);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.node_of(31), 3);
+        assert_eq!(t.ranks_on_node(2), 16..24);
+    }
+
+    #[test]
+    fn shards_cover_and_disjoint() {
+        let t = Topology::new(2, 3);
+        for n in [0usize, 1, 5, 6, 7, 100, 101] {
+            let mut covered = 0usize;
+            let mut last_end = 0usize;
+            for r in 0..t.world() {
+                let s = t.shard_range(n, r);
+                assert_eq!(s.start, last_end, "n={n} rank={r}");
+                covered += s.len();
+                last_end = s.end;
+            }
+            assert_eq!(covered, n, "n={n}");
+            assert_eq!(last_end, n);
+        }
+    }
+
+    #[test]
+    fn shard_balance() {
+        let t = Topology::new(4, 2);
+        for n in [16usize, 17, 23] {
+            let sizes: Vec<usize> = (0..8).map(|r| t.shard_range(n, r).len()).collect();
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "unbalanced {sizes:?}");
+        }
+    }
+}

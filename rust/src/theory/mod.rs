@@ -1,0 +1,19 @@
+//! Theory testbed: empirical validation of Theorem 2 / Corollary 3.
+//!
+//! We instantiate a β-smooth, α-PL objective (a quadratic with spectrum
+//! in [α, β] — quadratics are the canonical PL functions, with PL
+//! constant = λ_min), give it a noisy gradient oracle with variance σ²,
+//! and run the paper's iteration
+//!
+//! ```text
+//! x_{t+1} = Q^w_δ( x_t − (η/β) · Q^g(g(x_t)) )
+//! ```
+//!
+//! with δ = η·δ*/⌈16(β/α)²⌉. The experiments check the paper's claims:
+//! linear convergence of E f(x_t) to within ε of the best δ*-lattice
+//! point, degradation when δ violates the theorem's bound, and the
+//! gradient-quantization variance trade-off of Corollary 3.
+
+pub mod pl;
+
+pub use pl::{theorem2_delta, PlQuadratic, QsgdIteration, Trace};

@@ -1,0 +1,267 @@
+//! β-smooth α-PL quadratic testbed and the Theorem-2 iteration.
+
+use crate::quant::{LatticeQuantizer, MinMaxQuantizer};
+use crate::util::Pcg64;
+
+/// f(x) = ½ Σ λ_i (x_i − x*_i)², with λ_i log-spaced in [α, β].
+/// β-smooth, α-PL (in fact α-strongly convex), minimizer x*, f* = 0.
+#[derive(Clone, Debug)]
+pub struct PlQuadratic {
+    pub lambda: Vec<f32>,
+    pub xstar: Vec<f32>,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl PlQuadratic {
+    /// Build a dim-dimensional instance with condition number β/α.
+    pub fn new(dim: usize, alpha: f32, beta: f32, seed: u64) -> Self {
+        assert!(dim >= 2 && beta >= alpha && alpha > 0.0);
+        let mut rng = Pcg64::new(seed, 3);
+        let lambda: Vec<f32> = (0..dim)
+            .map(|i| {
+                let t = i as f32 / (dim - 1) as f32;
+                alpha * (beta / alpha).powf(t)
+            })
+            .collect();
+        let mut xstar = vec![0.0f32; dim];
+        rng.fill_normal(&mut xstar, 1.0);
+        PlQuadratic { lambda, xstar, alpha, beta }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lambda.len()
+    }
+
+    pub fn value(&self, x: &[f32]) -> f64 {
+        x.iter()
+            .zip(&self.xstar)
+            .zip(&self.lambda)
+            .map(|((&xi, &si), &l)| 0.5 * l as f64 * ((xi - si) as f64).powi(2))
+            .sum()
+    }
+
+    pub fn grad(&self, x: &[f32], out: &mut [f32]) {
+        for i in 0..x.len() {
+            out[i] = self.lambda[i] * (x[i] - self.xstar[i]);
+        }
+    }
+
+    /// Noisy oracle: ∇f(x) + N(0, σ²/dim · I) per coordinate, so
+    /// E‖g−∇f‖² = σ².
+    pub fn stoch_grad(&self, x: &[f32], sigma: f32, rng: &mut Pcg64, out: &mut [f32]) {
+        self.grad(x, out);
+        if sigma > 0.0 {
+            let per = sigma / (x.len() as f32).sqrt();
+            for o in out.iter_mut() {
+                *o += rng.next_normal() as f32 * per;
+            }
+        }
+    }
+
+    /// f at the best point of the lattice δ*Z^n + r·1 (coordinate-wise
+    /// nearest works because f is separable).
+    pub fn best_on_lattice(&self, delta_star: f32, r: f32) -> f64 {
+        let mut x = self.xstar.clone();
+        for xi in x.iter_mut() {
+            *xi = delta_star * ((*xi - r) / delta_star).round() + r;
+        }
+        self.value(&x)
+    }
+
+    /// E_r f(x*_{r,δ*}) estimated over random shifts.
+    pub fn expected_best_on_lattice(&self, delta_star: f32, rng: &mut Pcg64, reps: usize) -> f64 {
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            let r = (rng.next_f32() - 0.5) * delta_star;
+            acc += self.best_on_lattice(delta_star, r);
+        }
+        acc / reps as f64
+    }
+}
+
+/// Theorem 2's grid resolution: δ = η δ* / ⌈16 (β/α)²⌉.
+pub fn theorem2_delta(eta: f32, alpha: f32, beta: f32, delta_star: f32) -> f32 {
+    let k = (16.0 * (beta / alpha).powi(2)).ceil();
+    eta * delta_star / k
+}
+
+/// Convergence trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub f_vals: Vec<f64>,
+    pub dist_to_lattice_best: Vec<f64>,
+}
+
+/// The full quantized-SGD iteration of Theorem 2 / Corollary 3.
+#[derive(Clone, Debug)]
+pub struct QsgdIteration {
+    pub eta: f32,
+    pub delta: f32,
+    /// Gradient quantizer (None = exact stochastic gradients).
+    pub grad_quant: Option<MinMaxQuantizer>,
+    pub sigma: f32,
+}
+
+impl QsgdIteration {
+    /// Run T steps from x0; records f(x_t) each step.
+    pub fn run(&self, f: &PlQuadratic, x0: &[f32], steps: usize, rng: &mut Pcg64) -> Trace {
+        let q = LatticeQuantizer::new(self.delta, x0.len());
+        let mut x = x0.to_vec();
+        let mut g = vec![0.0f32; x.len()];
+        let mut trace = Trace::default();
+        let scale = self.eta / f.beta;
+        for _ in 0..steps {
+            trace.f_vals.push(f.value(&x));
+            f.stoch_grad(&x, self.sigma, rng, &mut g);
+            if let Some(gq) = &self.grad_quant {
+                gq.apply(&mut g, rng);
+            }
+            for (xi, &gi) in x.iter_mut().zip(&g) {
+                *xi -= scale * gi;
+            }
+            q.apply(&mut x, rng);
+        }
+        trace.f_vals.push(f.value(&x));
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_basics() {
+        let f = PlQuadratic::new(16, 1.0, 10.0, 1);
+        assert_eq!(f.dim(), 16);
+        assert!(f.value(&f.xstar.clone()) < 1e-12);
+        let x0 = vec![0.0f32; 16];
+        assert!(f.value(&x0) > 0.0);
+        // gradient at minimizer is zero
+        let mut g = vec![0.0f32; 16];
+        f.grad(&f.xstar.clone(), &mut g);
+        assert!(g.iter().all(|&gi| gi.abs() < 1e-6));
+    }
+
+    #[test]
+    fn pl_condition_holds() {
+        // ½‖∇f‖² ≥ α (f − f*) for quadratics with λ ≥ α.
+        let f = PlQuadratic::new(32, 0.5, 8.0, 2);
+        let mut rng = Pcg64::seeded(3);
+        let mut x = vec![0.0f32; 32];
+        let mut g = vec![0.0f32; 32];
+        for _ in 0..50 {
+            rng.fill_normal(&mut x, 2.0);
+            f.grad(&x, &mut g);
+            let gn2: f64 = g.iter().map(|&v| (v as f64).powi(2)).sum();
+            assert!(0.5 * gn2 + 1e-9 >= f.alpha as f64 * f.value(&x));
+        }
+    }
+
+    #[test]
+    fn theorem2_converges_linearly_to_lattice_best() {
+        let alpha = 1.0;
+        let beta = 4.0;
+        let f = PlQuadratic::new(32, alpha, beta, 4);
+        let delta_star = 0.05f32;
+        let eta = 1.0f32;
+        let delta = theorem2_delta(eta, alpha, beta, delta_star);
+        let it = QsgdIteration { eta, delta, grad_quant: None, sigma: 0.0 };
+        let x0 = vec![0.0f32; 32];
+        let mut rng = Pcg64::seeded(5);
+        let trace = it.run(&f, &x0, 400, &mut rng);
+        let bench = f.expected_best_on_lattice(delta_star, &mut rng, 200);
+        let final_f = *trace.f_vals.last().unwrap();
+        assert!(
+            final_f <= bench + 1e-3,
+            "converged to {final_f}, lattice benchmark {bench}"
+        );
+        // linear (geometric) decrease over the first phase
+        let early = trace.f_vals[0];
+        let mid = trace.f_vals[40];
+        assert!(mid < early * 0.05, "not linear: {early} -> {mid} @40");
+    }
+
+    #[test]
+    fn too_coarse_delta_stalls_higher() {
+        // Violating Theorem 2's δ bound (δ = δ*) must leave a higher
+        // floor than the theorem's δ.
+        let alpha = 1.0;
+        let beta = 4.0;
+        let f = PlQuadratic::new(32, alpha, beta, 6);
+        let x0 = vec![0.0f32; 32];
+        let mut rng = Pcg64::seeded(7);
+        let delta_star = 0.2f32;
+        let good = QsgdIteration {
+            eta: 1.0,
+            delta: theorem2_delta(1.0, alpha, beta, delta_star),
+            grad_quant: None,
+            sigma: 0.0,
+        }
+        .run(&f, &x0, 300, &mut rng);
+        let bad = QsgdIteration {
+            eta: 1.0,
+            delta: delta_star,
+            grad_quant: None,
+            sigma: 0.0,
+        }
+        .run(&f, &x0, 300, &mut rng);
+        let gf = good.f_vals.last().unwrap();
+        let bf = bad.f_vals.last().unwrap();
+        assert!(
+            gf * 3.0 < *bf,
+            "fine grid {gf} not clearly better than coarse {bf}"
+        );
+    }
+
+    #[test]
+    fn noise_floor_scales_with_eta() {
+        // Theorem 2: the stall level is O(η σ²/α) — halving η must cut
+        // the floor roughly in half.
+        let alpha = 1.0;
+        let beta = 2.0;
+        let f = PlQuadratic::new(16, alpha, beta, 8);
+        let x0 = vec![0.0f32; 16];
+        let sigma = 1.0f32;
+        let floor = |eta: f32, seed: u64| {
+            let it = QsgdIteration {
+                eta,
+                delta: theorem2_delta(eta, alpha, beta, 0.05),
+                grad_quant: None,
+                sigma,
+            };
+            let mut rng = Pcg64::seeded(seed);
+            let tr = it.run(&f, &x0, 3000, &mut rng);
+            // average the stalled tail
+            tr.f_vals[2000..].iter().sum::<f64>() / 1001.0
+        };
+        let f1 = floor(1.0, 9);
+        let f025 = floor(0.25, 9);
+        assert!(
+            f025 < f1 * 0.55,
+            "floor didn't drop with η: η=1 → {f1}, η=.25 → {f025}"
+        );
+    }
+
+    #[test]
+    fn corollary3_grad_quant_converges() {
+        // Adding an unbiased gradient quantizer must still converge,
+        // to a (possibly) higher noise floor (σ² + σ∇²).
+        let alpha = 1.0;
+        let beta = 4.0;
+        let f = PlQuadratic::new(32, alpha, beta, 10);
+        let x0 = vec![0.0f32; 32];
+        let mut rng = Pcg64::seeded(11);
+        let it = QsgdIteration {
+            eta: 0.5,
+            delta: theorem2_delta(0.5, alpha, beta, 0.05),
+            grad_quant: Some(MinMaxQuantizer::new(4, 32, true)),
+            sigma: 0.1,
+        };
+        let tr = it.run(&f, &x0, 1500, &mut rng);
+        let f0 = tr.f_vals[0];
+        let tail = tr.f_vals[1000..].iter().sum::<f64>() / 501.0;
+        assert!(tail < f0 * 0.01, "no convergence: {f0} -> {tail}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-contained utilities replacing unavailable third-party crates
+//! (offline build): PRNG, argument parsing, statistics, table printing.
+
+pub mod args;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+pub use prng::Pcg64;
+pub use stats::Summary;

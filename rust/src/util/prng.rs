@@ -1,0 +1,167 @@
+//! PCG64 (XSL-RR 128/64) pseudo-random generator.
+//!
+//! Deterministic, seedable, and fast; used for quantization noise,
+//! random shifts, data sampling and property tests. Matches the
+//! reference PCG implementation (O'Neill 2014).
+
+/// 128-bit-state PCG generator producing 64-bit outputs.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MUL: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut g = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        g.next_u64();
+        g.state = g.state.wrapping_add(seed as u128);
+        g.next_u64();
+        g
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MUL).wrapping_add(self.inc);
+        let xored = (((old >> 64) as u64) ^ (old as u64)).rotate_right((old >> 122) as u32);
+        xored
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Two independent uniform f32 in [0, 1) from a single PCG draw —
+    /// halves RNG cost on the stochastic-rounding hot path.
+    #[inline]
+    pub fn next_f32_pair(&mut self) -> (f32, f32) {
+        let r = self.next_u64();
+        const S: f32 = 1.0 / (1u64 << 24) as f32;
+        (
+            ((r >> 40) as u32) as f32 * S,
+            ((r >> 16) as u32 & 0x00FF_FFFF) as f32 * S,
+        )
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless method.
+        let mut m = (self.next_u64() as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                m = (self.next_u64() as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill a slice with N(0, std) f32 samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.next_normal() as f32 * std;
+        }
+    }
+
+    /// Fill a slice with uniform [0,1) f32 samples.
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_f32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut g = Pcg64::seeded(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut g = Pcg64::seeded(4);
+        for _ in 0..1000 {
+            assert!(g.below(7) < 7);
+        }
+        // all residues hit
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[g.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Pcg64::seeded(5);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = g.next_normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Paper-style ASCII table rendering for experiment drivers.
+
+/// Render a table with a header row; columns auto-sized.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut width = vec![0usize; ncol];
+    for (i, h) in headers.iter().enumerate() {
+        width[i] = h.len();
+    }
+    for r in rows {
+        for (i, c) in r.iter().enumerate().take(ncol) {
+            width[i] = width[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String| {
+        for w in &width {
+            out.push('+');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    line(&mut out);
+    out.push('|');
+    for (h, w) in headers.iter().zip(&width) {
+        out.push_str(&format!(" {:<w$} |", h, w = w));
+    }
+    out.push('\n');
+    line(&mut out);
+    for r in rows {
+        out.push('|');
+        for (c, w) in r.iter().zip(&width) {
+            out.push_str(&format!(" {:<w$} |", c, w = w));
+        }
+        out.push('\n');
+    }
+    line(&mut out);
+    out
+}
+
+/// Write CSV alongside the printed table (results/ directory).
+pub fn write_csv(path: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["model", "ppl"],
+            &[
+                vec!["125M".into(), "35.81".into()],
+                vec!["1.3B".into(), "18.00".into()],
+            ],
+        );
+        assert!(t.contains("| model | ppl   |"));
+        assert!(t.contains("| 125M  | 35.81 |"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = std::env::temp_dir().join("qsdp_table_test.csv");
+        write_csv(p.to_str().unwrap(), &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+}

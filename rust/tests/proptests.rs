@@ -1,0 +1,247 @@
+//! Property-based tests (seeded-random harness — the proptest crate is
+//! unavailable offline; `props!` runs each property over many random
+//! cases and reports the failing seed).
+
+use qsdp::collectives::{all_gather, reduce_scatter, TrafficLedger};
+use qsdp::quant::codec::{encode_minmax, pack_bits, unpack_bits};
+use qsdp::quant::{EncodedTensor, LatticeQuantizer, MinMaxQuantizer, QuantPolicy};
+use qsdp::sim::Topology;
+use qsdp::util::Pcg64;
+
+/// Run `f(case_rng, case_index)` for `n` random cases.
+fn props(name: &str, n: usize, mut f: impl FnMut(&mut Pcg64, usize)) {
+    for i in 0..n {
+        let mut rng = Pcg64::new(0xBADC0DE ^ i as u64, 77);
+        // Catch with the seed in the message by just running; panics
+        // inside f already carry case context via the assert messages.
+        let _ = name;
+        f(&mut rng, i);
+    }
+}
+
+fn rand_vec(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, scale);
+    v
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    props("pack", 200, |rng, i| {
+        let bits = 1 + (rng.below(8)) as u8;
+        let n = rng.below(2000) as usize;
+        let mask = (1u64 << bits) - 1;
+        let codes: Vec<u8> = (0..n).map(|_| (rng.next_u64() & mask) as u8).collect();
+        let packed = pack_bits(&codes, bits);
+        assert_eq!(
+            packed.len(),
+            (n * bits as usize).div_ceil(8),
+            "case {i}: bits={bits} n={n}"
+        );
+        let mut out = vec![0u8; n];
+        unpack_bits(&packed, bits, &mut out);
+        assert_eq!(out, codes, "case {i}: bits={bits} n={n}");
+    });
+}
+
+#[test]
+fn prop_shards_partition() {
+    props("shards", 300, |rng, i| {
+        let topo = Topology::new(1 + rng.below(5) as usize, 1 + rng.below(5) as usize);
+        let n = rng.below(10_000) as usize;
+        let mut end = 0usize;
+        for r in 0..topo.world() {
+            let s = topo.shard_range(n, r);
+            assert_eq!(s.start, end, "case {i}");
+            end = s.end;
+        }
+        assert_eq!(end, n, "case {i}: shards must cover [0,{n})");
+    });
+}
+
+#[test]
+fn prop_minmax_error_bound() {
+    // deterministic rounding error per element ≤ scale/2
+    props("minmax", 60, |rng, i| {
+        let bits = 2 + rng.below(7) as u8;
+        let bucket = 1 + rng.below(600) as usize;
+        let n = 1 + rng.below(3000) as usize;
+        let v = rand_vec(rng, n, 2.0);
+        let q = MinMaxQuantizer::new(bits, bucket, false);
+        let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
+        q.encode(&v, &mut codes, &mut meta, rng);
+        q.decode(&codes, &meta, &mut out);
+        for (bi, (c, o)) in v.chunks(bucket).zip(out.chunks(bucket)).enumerate() {
+            let half = meta[bi].scale / 2.0 + 1e-6;
+            for (&a, &b) in c.iter().zip(o) {
+                assert!(
+                    (a - b).abs() <= half,
+                    "case {i}: bits={bits} bucket={bucket} err {} > {half}",
+                    (a - b).abs()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_wire_bytes_match_analytics() {
+    props("wire", 80, |rng, i| {
+        let wb = 1 + rng.below(8) as u8;
+        let gb = 1 + rng.below(8) as u8;
+        let n = 1 + rng.below(5000) as usize;
+        let p = QuantPolicy::wg(wb, gb);
+        let v = rand_vec(rng, n, 1.0);
+        let kind = qsdp::model::ParamKind::Matrix;
+        let e = p.encode_weight(&v, kind, rng);
+        assert_eq!(
+            e.byte_size(),
+            p.weight_wire_bytes(n, kind),
+            "case {i}: w{wb} n={n}"
+        );
+        let g = p.encode_grad(&v, kind, rng);
+        assert_eq!(
+            g.byte_size(),
+            p.grad_wire_bytes(n, kind),
+            "case {i}: g{gb} n={n}"
+        );
+        // encode→decode→encode is idempotent in size
+        let mut dec = vec![];
+        e.decode(&mut dec);
+        let e2 = p.encode_weight(&dec, kind, rng);
+        assert_eq!(e2.byte_size(), e.byte_size(), "case {i}");
+    });
+}
+
+#[test]
+fn prop_quantize_idempotent() {
+    // Quantizing already-quantized values (same grid) is the identity.
+    props("idem", 60, |rng, i| {
+        let bits = 2 + rng.below(7) as u8;
+        let bucket = 16 + rng.below(512) as usize;
+        let n = bucket * (1 + rng.below(4) as usize);
+        let mut v = rand_vec(rng, n, 1.5);
+        let q = MinMaxQuantizer::new(bits, bucket, false);
+        q.apply(&mut v, rng);
+        let w = v.clone();
+        q.apply(&mut v, rng);
+        for (idx, (&a, &b)) in v.iter().zip(&w).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "case {i}: idx {idx} not idempotent ({a} vs {b})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_allgather_is_concat_of_decodes() {
+    props("allgather", 40, |rng, i| {
+        let topo = Topology::new(1 + rng.below(4) as usize, 1 + rng.below(4) as usize);
+        let n = topo.world() * (1 + rng.below(500) as usize) + rng.below(7) as usize;
+        let full = rand_vec(rng, n, 1.0);
+        let bits = 2 + rng.below(7) as u8;
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| encode_minmax(&full[topo.shard_range(n, r)], bits, 256, false, rng))
+            .collect();
+        let mut expect = Vec::new();
+        let mut tmp = Vec::new();
+        for s in &shards {
+            s.decode(&mut tmp);
+            expect.extend_from_slice(&tmp);
+        }
+        let mut ledger = TrafficLedger::new();
+        let got = all_gather(&topo, &shards, &mut ledger);
+        assert_eq!(got, expect, "case {i}");
+        if topo.nodes == 1 {
+            assert_eq!(ledger.inter_bytes, 0, "case {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_reduce_scatter_fp32_equals_sum() {
+    props("rscat", 30, |rng, i| {
+        let topo = Topology::new(1 + rng.below(3) as usize, 1 + rng.below(3) as usize);
+        let n = 1 + rng.below(800) as usize;
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|_| rand_vec(rng, n, 1.0)).collect();
+        let mut expect = vec![0.0f32; n];
+        for inp in &inputs {
+            for (a, &x) in expect.iter_mut().zip(inp) {
+                *a += x;
+            }
+        }
+        let mut ledger = TrafficLedger::new();
+        let outs = reduce_scatter(&topo, &inputs, |s| EncodedTensor::fp32(s), &mut ledger);
+        let got: Vec<f32> = outs.concat();
+        for (idx, (&a, &b)) in got.iter().zip(&expect).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                "case {i}: idx {idx}: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lemma6_inequality() {
+    // (1-{y}){y} ≤ k(1-{y/k}){y/k} for integer k ≥ 1 — the scalar core
+    // of Lemma 4.
+    props("lemma6", 500, |rng, i| {
+        let y = (rng.next_f64() - 0.5) * 100.0;
+        let k = 1 + rng.below(16) as i64;
+        let frac = |x: f64| x - x.floor();
+        let lhs = (1.0 - frac(y)) * frac(y);
+        let z = frac(y / k as f64);
+        let rhs = k as f64 * (1.0 - z) * z;
+        assert!(lhs <= rhs + 1e-9, "case {i}: y={y} k={k}: {lhs} > {rhs}");
+    });
+}
+
+#[test]
+fn prop_lattice_lemma4_random_instances() {
+    // Fine-grid projection error ≤ (δ/δ*) × coarse-grid error, random δ
+    // and integer ratios, statistically.
+    props("lemma4", 6, |rng, case| {
+        let delta = 0.02 + rng.next_f32() * 0.3;
+        let k = 2 + rng.below(6) as u32;
+        let dstar = delta * k as f32;
+        let n = 24;
+        let v = rand_vec(rng, n, 1.0);
+        let qf = LatticeQuantizer::new(delta, n);
+        let qc = LatticeQuantizer::new(dstar, n);
+        let reps = 8000;
+        let (mut fine, mut coarse) = (0.0f64, 0.0f64);
+        for _ in 0..reps {
+            let mut a = v.clone();
+            qf.apply(&mut a, rng);
+            fine += qsdp::util::stats::l2_dist_sq(&a, &v);
+            let mut b = v.clone();
+            qc.apply(&mut b, rng);
+            coarse += qsdp::util::stats::l2_dist_sq(&b, &v);
+        }
+        assert!(
+            fine <= (delta / dstar) as f64 * coarse * 1.10,
+            "case {case}: δ={delta} k={k}: {fine} vs bound {}",
+            (delta / dstar) as f64 * coarse
+        );
+    });
+}
+
+#[test]
+fn prop_policy_spec_roundtrip() {
+    props("policy", 100, |rng, i| {
+        let wb = 1 + rng.below(8) as u8;
+        let gb = 1 + rng.below(8) as u8;
+        let spec = format!("w{wb}g{gb}");
+        let p = qsdp::config::parse_policy(&spec).unwrap();
+        assert_eq!(qsdp::config::policy_name(&p), spec, "case {i}");
+        let p2 = qsdp::config::parse_policy(&format!("{spec}+learned")).unwrap();
+        assert_eq!(
+            qsdp::config::policy_name(&p2),
+            format!("{spec}+learned"),
+            "case {i}"
+        );
+    });
+}
