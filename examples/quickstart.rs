@@ -1,5 +1,12 @@
-//! Quickstart: train a tiny GPT with QSDP (W8G8) on 4 simulated
-//! workers for 30 steps and compare against the FSDP baseline.
+//! Quickstart: the two surfaces of the crate in one file.
+//!
+//! 1. The **Codec / Collective API** — encode a tensor with the codec a
+//!    [`QuantPolicy`] resolves, push it through a pluggable fabric, and
+//!    read the byte-exact traffic ledger. This part runs with no
+//!    artifacts.
+//! 2. The **trainer** — a tiny GPT with QSDP (W8G8) on 4 simulated
+//!    workers for 30 steps vs the FSDP baseline (needs `make
+//!    artifacts` and the real PJRT backend).
 //!
 //! Run with:
 //! ```sh
@@ -7,12 +14,57 @@
 //! ```
 
 use anyhow::Result;
-use qsdp::config::{parse_policy, RunConfig};
+use qsdp::collectives::{Collective, FlatFabric, LockstepFabric, TrafficLedger};
+use qsdp::config::{parse_policy, FabricKind, RunConfig};
 use qsdp::coordinator::{Trainer, TrainerOptions};
 use qsdp::model::spec::artifacts_root;
+use qsdp::model::ParamKind;
+use qsdp::quant::{Codec, EncodedTensor, QuantPolicy, TensorRole};
 use qsdp::runtime::Engine;
 use qsdp::sim::Topology;
+use qsdp::util::Pcg64;
 use std::sync::Arc;
+
+/// Tour the trait API: policy → codec → encoded message → fabric.
+fn codec_and_fabric_tour() {
+    let topo = Topology::new(2, 2); // 2 nodes x 2 GPUs
+    let policy = QuantPolicy::qsdp_default(); // W8G8, bucket 1024
+    let mut rng = Pcg64::seeded(7);
+    let mut tensor = vec![0.0f32; 1 << 16];
+    rng.fill_normal(&mut tensor, 0.02);
+
+    // (1) the policy resolves a codec per (role, tensor-kind) pair
+    let wcodec = policy.codec(TensorRole::Weight, ParamKind::Matrix);
+    let e = wcodec.encode(&tensor, &mut rng);
+    println!(
+        "weight codec '{}' : {} elems -> {} wire bytes ({:.2}x vs fp32), analytic {}",
+        wcodec.name(),
+        e.n,
+        e.byte_size(),
+        e.ratio(),
+        wcodec.wire_bytes(tensor.len()),
+    );
+
+    // (2) collectives are backends implementing the Collective trait —
+    // same data, different traffic pattern.
+    let shards: Vec<EncodedTensor> = (0..topo.world())
+        .map(|r| wcodec.encode(&tensor[topo.shard_range(tensor.len(), r)], &mut rng))
+        .collect();
+    let lock = LockstepFabric::new(topo);
+    let flat = FlatFabric::new(topo);
+    let fabrics: [&dyn Collective; 2] = [&lock, &flat];
+    for fabric in fabrics {
+        let mut ledger = TrafficLedger::new();
+        let gathered = fabric.all_gather(&shards, &mut ledger);
+        println!(
+            "all_gather on {:8} : {} elems | inter {:6.1} KiB | intra {:6.1} KiB",
+            fabric.name(),
+            gathered.len(),
+            ledger.inter_bytes as f64 / 1024.0,
+            ledger.intra_bytes as f64 / 1024.0,
+        );
+    }
+}
 
 fn run(policy: &str, engine: Arc<Engine>) -> Result<()> {
     let cfg = RunConfig {
@@ -29,6 +81,7 @@ fn run(policy: &str, engine: Arc<Engine>) -> Result<()> {
         corpus_len: 100_000,
         inter_gbps: 10.0,
         n_accum: 1,
+        fabric: FabricKind::Lockstep,
     };
     let mut tr = Trainer::new(engine, &artifacts_root(), cfg, TrainerOptions { log_every: 10 })?;
     tr.run(30)?;
@@ -44,6 +97,7 @@ fn run(policy: &str, engine: Arc<Engine>) -> Result<()> {
 }
 
 fn main() -> Result<()> {
+    codec_and_fabric_tour();
     let engine = Arc::new(Engine::cpu()?);
     println!("platform: {}", engine.platform());
     run("baseline", engine.clone())?;

@@ -1,16 +1,18 @@
 //! Collective-path benchmarks: quantized AllGather / ReduceScatter over
-//! the simulated fabric, measuring host-side processing throughput and
-//! reporting the byte-exact wire traffic each policy generates.
+//! the simulated fabric backends, measuring host-side processing
+//! throughput and reporting the byte-exact wire traffic each policy
+//! generates on each transport.
 
-use qsdp::collectives::{all_gather, reduce_scatter, TrafficLedger};
+use qsdp::collectives::{Collective, FlatFabric, LockstepFabric, TrafficLedger};
 use qsdp::model::ParamKind;
-use qsdp::quant::{EncodedTensor, QuantPolicy};
+use qsdp::quant::{Codec, EncodedTensor, QuantPolicy, TensorRole};
 use qsdp::sim::{NetworkModel, Topology};
 use qsdp::util::Pcg64;
 use std::time::Instant;
 
 fn main() {
     let topo = Topology::new(4, 8); // the paper's 32-GPU cluster
+    let fabric = LockstepFabric::new(topo);
     let n = 4 << 20; // 16 MiB tensor
     let mut rng = Pcg64::seeded(3);
     let mut full = vec![0.0f32; n];
@@ -22,15 +24,16 @@ fn main() {
         ("w8 (QSDP)", QuantPolicy::wg(8, 8)),
         ("w4", QuantPolicy::wg(4, 4)),
     ] {
+        let codec = policy.codec(TensorRole::Weight, ParamKind::Matrix);
         let shards: Vec<EncodedTensor> = (0..topo.world())
-            .map(|r| policy.encode_weight(&full[topo.shard_range(n, r)], ParamKind::Matrix, &mut rng))
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut rng))
             .collect();
         let mut ledger = TrafficLedger::new();
         let t0 = Instant::now();
         let reps = 3;
         for _ in 0..reps {
             ledger.reset();
-            let out = all_gather(&topo, &shards, &mut ledger);
+            let out = fabric.all_gather(&shards, &mut ledger);
             std::hint::black_box(&out);
         }
         let dt = t0.elapsed().as_secs_f64() / reps as f64;
@@ -52,18 +55,14 @@ fn main() {
         })
         .collect();
     for (label, policy) in [
-        ("fp32", QuantPolicy::baseline()),
+        ("fp16 (FSDP baseline)", QuantPolicy::baseline()),
         ("g8 (QSDP)", QuantPolicy::wg(8, 8)),
         ("g4", QuantPolicy::wg(4, 4)),
     ] {
+        let codec = policy.codec(TensorRole::Grad, ParamKind::Matrix);
         let mut ledger = TrafficLedger::new();
         let t0 = Instant::now();
-        let out = reduce_scatter(
-            &topo,
-            &inputs,
-            |seg| policy.encode_grad(seg, ParamKind::Matrix, &mut rng),
-            &mut ledger,
-        );
+        let out = fabric.reduce_scatter(&inputs, &codec, &mut rng, &mut ledger);
         std::hint::black_box(&out);
         let dt = t0.elapsed().as_secs_f64();
         let net = NetworkModel::paper(10.0);
@@ -72,6 +71,26 @@ fn main() {
             dt * 1e3,
             ledger.inter_bytes as f64 / (1 << 20) as f64,
             net.ledger_time(&ledger),
+        );
+    }
+
+    println!("== backend comparison: g8 ReduceScatter, lockstep vs flat ==");
+    let policy = QuantPolicy::wg(8, 8);
+    let codec = policy.codec(TensorRole::Grad, ParamKind::Matrix);
+    let flat = FlatFabric::new(topo);
+    let backends: [&dyn Collective; 2] = [&fabric, &flat];
+    for backend in backends {
+        let mut ledger = TrafficLedger::new();
+        let t0 = Instant::now();
+        let out = backend.reduce_scatter(&inputs, &codec, &mut rng, &mut ledger);
+        std::hint::black_box(&out);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:24} host {:7.1} ms | inter {:8.2} MiB | intra {:8.2} MiB",
+            backend.name(),
+            dt * 1e3,
+            ledger.inter_bytes as f64 / (1 << 20) as f64,
+            ledger.intra_bytes as f64 / (1 << 20) as f64,
         );
     }
 }

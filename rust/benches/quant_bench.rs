@@ -6,9 +6,9 @@
 //! the codec must therefore sustain well over 1 GB/s/core to be
 //! negligible, which is the target tracked here (EXPERIMENTS.md §Perf).
 
-use qsdp::quant::codec::{encode_minmax, pack_bits, unpack_bits};
+use qsdp::quant::codec::{pack_bits, unpack_bits, EncodedTensor};
 use qsdp::quant::learned::normalize_bucketwise;
-use qsdp::quant::{LatticeQuantizer, LearnedLevels, MinMaxQuantizer};
+use qsdp::quant::{Codec, LatticeQuantizer, LearnedLevels, MinMaxCodec, MinMaxQuantizer};
 use qsdp::util::Pcg64;
 use std::time::Instant;
 
@@ -55,15 +55,35 @@ fn main() {
 
     println!("== wire codec (encode to packed payload + decode) ==");
     for bits in [2u8, 4, 8] {
+        let codec = MinMaxCodec::new(bits, 1024, true);
         let mut out = Vec::new();
-        let enc = encode_minmax(&values, bits, 1024, true, &mut rng);
-        time(&format!("encode_minmax bits={bits}"), bytes, 5, || {
-            let e = encode_minmax(&values, bits, 1024, true, &mut rng);
+        let enc = codec.encode(&values, &mut rng);
+        time(&format!("encode minmax bits={bits}"), bytes, 5, || {
+            let e = codec.encode(&values, &mut rng);
             std::hint::black_box(&e);
         });
         time(&format!("decode bits={bits}"), bytes, 5, || {
             enc.decode(&mut out);
             std::hint::black_box(&out);
+        });
+    }
+
+    println!("== alloc-per-encode vs encode_into buffer reuse ==");
+    // The Codec hot-path contract: `encode` allocates a fresh message
+    // per call (meta + payload Vecs), `encode_into` reuses one scratch
+    // message — the delta is the per-message allocation cost the
+    // collectives no longer pay (one encode per (node, shard) pair).
+    for bits in [4u8, 8] {
+        let codec = MinMaxCodec::new(bits, 1024, true);
+        time(&format!("alloc: encode bits={bits} (fresh message)"), bytes, 8, || {
+            let e = codec.encode(&values, &mut rng);
+            std::hint::black_box(&e);
+        });
+        let mut scratch = EncodedTensor::default();
+        codec.encode_into(&values, &mut scratch, &mut rng); // warm buffers
+        time(&format!("reuse: encode_into bits={bits} (warm scratch)"), bytes, 8, || {
+            codec.encode_into(&values, &mut scratch, &mut rng);
+            std::hint::black_box(&scratch);
         });
     }
 

@@ -1,19 +1,31 @@
-//! Quantized collectives over the simulated fabric.
+//! Quantized collectives over the simulated fabric, behind the
+//! pluggable [`Collective`] transport trait.
 //!
-//! These move *real encoded payloads* (produced by [`crate::quant`])
-//! between logical ranks, replicating the hierarchical (two-level)
-//! NCCL-P2P algorithms the paper added to CGX (§5.1): an intra-node
-//! phase over NVLink and an inter-node leader exchange through each
-//! node's NIC. Every message's byte size is tallied in a
-//! [`TrafficLedger`], which the network model converts to seconds.
+//! A backend is a *value* implementing [`Collective`]
+//! (`all_gather` / `reduce_scatter` / `all_reduce`): construct the one
+//! you want and pass it where a transport is needed — call sites never
+//! name an algorithm. Encoded payloads come from [`crate::quant`]
+//! codecs (`reduce_scatter` takes `&dyn Codec`; `all_gather` moves
+//! pre-encoded, self-describing [`crate::quant::EncodedTensor`]s), and
+//! every message's byte size is tallied in a [`TrafficLedger`], which
+//! the network model converts to seconds.
 //!
-//! The collectives are implemented as lockstep functions over per-rank
-//! buffers: with P logical workers in one process this is deterministic,
-//! exactly reproduces the data each rank would decode, and accounts
-//! bytes identically to a real execution.
+//! Backends:
+//!
+//! * [`LockstepFabric`] — the paper's hierarchical two-level NCCL-P2P
+//!   scheme (§5.1): an intra-node phase over NVLink and an inter-node
+//!   leader exchange through each node's NIC;
+//! * [`FlatFabric`] — the non-hierarchical ablation baseline (every
+//!   rank talks to every rank).
+//!
+//! Both are lockstep simulations over per-rank buffers: with P logical
+//! workers in one process this is deterministic, exactly reproduces the
+//! data each rank would decode, and accounts bytes identically to a
+//! real execution. A future backend can wrap a real asynchronous
+//! transport (NCCL/CGX) behind the same trait — see ROADMAP.md.
 
+pub mod fabric;
 pub mod ledger;
-pub mod ops;
 
+pub use fabric::{Collective, FlatFabric, LockstepFabric};
 pub use ledger::TrafficLedger;
-pub use ops::{all_gather, all_reduce, reduce_scatter, reduce_scatter_flat};

@@ -7,13 +7,53 @@
 //!   "w5g4"                — any bit pair in 1..=8; g32/w32 = uncompressed
 //!   "w5g4+learned"        — learned level tables for both
 //!   suffix "+det"         — deterministic (round-to-nearest) gradients
+//!
+//! The collective transport is likewise data: `--fabric
+//! lockstep|flat` selects the [`crate::collectives::Collective`]
+//! backend the trainer wires into its parameter store.
 
+use crate::collectives::{Collective, FlatFabric, LockstepFabric};
 use crate::optim::AdamW;
 use crate::quant::QuantPolicy;
 use crate::runtime::gpt::StepVariant;
 use crate::sim::Topology;
 use crate::util::args::Args;
 use anyhow::{bail, Result};
+
+/// Which [`Collective`] transport backend a run uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FabricKind {
+    /// Hierarchical two-level lockstep simulator (the paper's scheme).
+    #[default]
+    Lockstep,
+    /// Flat all-pairs exchange (the ablation baseline).
+    Flat,
+}
+
+impl FabricKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lockstep" | "hier" | "hierarchical" => FabricKind::Lockstep,
+            "flat" => FabricKind::Flat,
+            other => bail!("unknown fabric {other:?} (want lockstep|flat)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FabricKind::Lockstep => "lockstep",
+            FabricKind::Flat => "flat",
+        }
+    }
+
+    /// Construct the backend for a cluster.
+    pub fn build(self, topo: Topology) -> Box<dyn Collective> {
+        match self {
+            FabricKind::Lockstep => Box::new(LockstepFabric::new(topo)),
+            FabricKind::Flat => Box::new(FlatFabric::new(topo)),
+        }
+    }
+}
 
 /// A fully-specified training job.
 #[derive(Clone, Debug)]
@@ -40,6 +80,8 @@ pub struct RunConfig {
     /// uses 4; weights are re-gathered per microbatch, which is exactly
     /// why FSDP's weight traffic dominates — Appendix B).
     pub n_accum: usize,
+    /// Collective transport backend.
+    pub fabric: FabricKind,
 }
 
 impl RunConfig {
@@ -64,6 +106,7 @@ impl RunConfig {
             corpus_len: args.usize_or("corpus-len", 200_000),
             inter_gbps: args.f64_or("bandwidth", 10.0),
             n_accum: args.usize_or("accum", 1),
+            fabric: FabricKind::parse(&args.str_or("fabric", "lockstep"))?,
         })
     }
 
@@ -204,5 +247,24 @@ mod tests {
         assert_eq!(c.topo.world(), 2);
         assert_eq!(c.steps, 10);
         assert_eq!(c.policy.weight_bits, Some(4));
+        assert_eq!(c.fabric, FabricKind::Lockstep);
+    }
+
+    #[test]
+    fn fabric_kind_parses_and_builds() {
+        assert_eq!(FabricKind::parse("lockstep").unwrap(), FabricKind::Lockstep);
+        assert_eq!(FabricKind::parse("hier").unwrap(), FabricKind::Lockstep);
+        assert_eq!(FabricKind::parse("flat").unwrap(), FabricKind::Flat);
+        assert!(FabricKind::parse("ring").is_err());
+        let topo = Topology::new(2, 2);
+        for kind in [FabricKind::Lockstep, FabricKind::Flat] {
+            let fabric = kind.build(topo);
+            assert_eq!(fabric.name(), kind.name());
+            assert_eq!(fabric.topo(), topo);
+        }
+        let a = Args::parse(
+            "train --fabric flat".split_whitespace().map(|s| s.to_string()),
+        );
+        assert_eq!(RunConfig::from_args(&a).unwrap().fabric, FabricKind::Flat);
     }
 }

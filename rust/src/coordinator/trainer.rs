@@ -66,7 +66,8 @@ impl Trainer {
         let rt = GptRuntime::load(engine, root, &cfg.model, cfg.variant)?;
         let dims = rt.manifest.dims.clone();
         let full = rt.init_params(cfg.seed as u32)?;
-        let store = ShardedStore::from_full(rt.manifest.params.clone(), &full, cfg.topo);
+        let store = ShardedStore::from_full(rt.manifest.params.clone(), &full, cfg.topo)
+            .with_fabric(cfg.fabric.build(cfg.topo));
         let world = cfg.topo.world();
         let states: Vec<Vec<AdamState>> = store
             .specs
@@ -284,7 +285,8 @@ impl Trainer {
         for (n, s) in ck.names.iter().zip(&specs) {
             anyhow::ensure!(n == &s.name, "checkpoint tensor {n} != spec {}", s.name);
         }
-        self.store = ShardedStore::from_full(specs.clone(), &ck.params, self.cfg.topo);
+        self.store = ShardedStore::from_full(specs.clone(), &ck.params, self.cfg.topo)
+            .with_fabric(self.cfg.fabric.build(self.cfg.topo));
         let topo = self.cfg.topo;
         let world = topo.world();
         self.states = specs

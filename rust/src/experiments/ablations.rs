@@ -10,10 +10,9 @@
 //!      step as the grid coarsens.
 
 use super::traindrv::{base_cfg, run_job};
-use crate::collectives::{reduce_scatter, reduce_scatter_flat, TrafficLedger};
-use crate::quant::codec::encode_minmax;
+use crate::collectives::{Collective, FlatFabric, LockstepFabric, TrafficLedger};
 use crate::quant::qsgd::encode_sparse;
-use crate::quant::QuantPolicy;
+use crate::quant::{Codec, MinMaxCodec, QuantPolicy};
 use crate::sim::Topology;
 use crate::util::{args::Args, stats::rel_l2_err, table, Pcg64};
 use anyhow::Result;
@@ -78,22 +77,13 @@ fn ablation_hierarchical(_args: &Args) -> Result<()> {
     }
     let mut rows = Vec::new();
     for bits in [4u8, 8] {
+        let codec = MinMaxCodec::new(bits, 1024, true);
         let mut rng_h = Pcg64::seeded(21);
         let mut lh = TrafficLedger::new();
-        let h = reduce_scatter(
-            &topo,
-            &inputs,
-            |s| encode_minmax(s, bits, 1024, true, &mut rng_h),
-            &mut lh,
-        );
+        let h = LockstepFabric::new(topo).reduce_scatter(&inputs, &codec, &mut rng_h, &mut lh);
         let mut rng_f = Pcg64::seeded(21);
         let mut lf = TrafficLedger::new();
-        let f = reduce_scatter_flat(
-            &topo,
-            &inputs,
-            |s| encode_minmax(s, bits, 1024, true, &mut rng_f),
-            &mut lf,
-        );
+        let f = FlatFabric::new(topo).reduce_scatter(&inputs, &codec, &mut rng_f, &mut lf);
         rows.push(vec![
             format!("{bits}"),
             format!("{:.2}", lh.inter_bytes as f64 / (1 << 20) as f64),
@@ -140,7 +130,7 @@ fn ablation_sparse_coding(_args: &Args) -> Result<()> {
     let mut g = vec![0.0f32; n];
     rng.fill_normal(&mut g, 0.02); // gradient-like magnitudes
     let dense_bytes = |bits: u8| {
-        let e = encode_minmax(&g, bits, 1024, true, &mut Pcg64::seeded(32));
+        let e = MinMaxCodec::new(bits, 1024, true).encode(&g, &mut Pcg64::seeded(32));
         e.byte_size()
     };
     let mut rows = Vec::new();

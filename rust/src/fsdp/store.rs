@@ -1,8 +1,8 @@
 //! Sharded master parameter store.
 
-use crate::collectives::{all_gather, reduce_scatter, TrafficLedger};
+use crate::collectives::{Collective, LockstepFabric, TrafficLedger};
 use crate::model::spec::ParamSpec;
-use crate::quant::QuantPolicy;
+use crate::quant::{Codec, EncodedTensor, QuantPolicy, TensorRole};
 use crate::sim::Topology;
 use crate::util::Pcg64;
 
@@ -13,15 +13,19 @@ pub type FlatParams = Vec<Vec<f32>>;
 ///
 /// `shards[param][rank]` holds rank's contiguous 1/P slice of the
 /// flattened tensor (remainder spread over low ranks, matching
-/// [`Topology::shard_range`]).
+/// [`Topology::shard_range`]). All communication goes through the
+/// store's [`Collective`] backend (hierarchical lockstep by default;
+/// swap it with [`Self::with_fabric`]).
 pub struct ShardedStore {
     pub topo: Topology,
     pub specs: Vec<ParamSpec>,
+    fabric: Box<dyn Collective>,
     shards: Vec<Vec<Vec<f32>>>,
 }
 
 impl ShardedStore {
-    /// Partition full parameters into per-rank shards.
+    /// Partition full parameters into per-rank shards (default
+    /// hierarchical [`LockstepFabric`] transport).
     pub fn from_full(specs: Vec<ParamSpec>, params: &FlatParams, topo: Topology) -> Self {
         assert_eq!(specs.len(), params.len());
         let p = topo.world();
@@ -33,7 +37,24 @@ impl ShardedStore {
                 .collect();
             shards.push(per);
         }
-        ShardedStore { topo, specs, shards }
+        ShardedStore {
+            topo,
+            specs,
+            fabric: Box::new(LockstepFabric::new(topo)),
+            shards,
+        }
+    }
+
+    /// Swap the collective transport backend (must match the topology).
+    pub fn with_fabric(mut self, fabric: Box<dyn Collective>) -> Self {
+        assert_eq!(fabric.topo(), self.topo, "fabric wired for a different cluster");
+        self.fabric = fabric;
+        self
+    }
+
+    /// The transport in use.
+    pub fn fabric(&self) -> &dyn Collective {
+        self.fabric.as_ref()
     }
 
     /// Reassemble the exact master parameters (no quantization) —
@@ -53,7 +74,8 @@ impl ShardedStore {
 
     /// Quantized weight AllGather: what every rank's compute sees.
     /// Returns the gathered (dequantized) parameters and tallies the
-    /// wire traffic into `ledger`.
+    /// wire traffic into `ledger`. Per tensor, the policy resolves the
+    /// weight codec once and every shard rides through it.
     pub fn gather_weights(
         &self,
         policy: &QuantPolicy,
@@ -64,11 +86,10 @@ impl ShardedStore {
             .iter()
             .zip(&self.specs)
             .map(|(per, spec)| {
-                let encoded: Vec<_> = per
-                    .iter()
-                    .map(|shard| policy.encode_weight(shard, spec.kind, rng))
-                    .collect();
-                all_gather(&self.topo, &encoded, ledger)
+                let codec = policy.codec(TensorRole::Weight, spec.kind);
+                let encoded: Vec<EncodedTensor> =
+                    per.iter().map(|shard| codec.encode(shard, rng)).collect();
+                self.fabric.all_gather(&encoded, ledger)
             })
             .collect()
     }
@@ -91,14 +112,10 @@ impl ShardedStore {
         (0..self.specs.len())
             .map(|pi| {
                 let spec = &self.specs[pi];
+                let codec = policy.codec(TensorRole::Grad, spec.kind);
                 let inputs: Vec<Vec<f32>> =
                     (0..p).map(|r| local_grads[r][pi].clone()).collect();
-                let mut outs = reduce_scatter(
-                    &self.topo,
-                    &inputs,
-                    |seg| policy.encode_grad(seg, spec.kind, rng),
-                    ledger,
-                );
+                let mut outs = self.fabric.reduce_scatter(&inputs, &codec, rng, ledger);
                 for shard in outs.iter_mut() {
                     for x in shard.iter_mut() {
                         *x *= inv_p;
@@ -136,6 +153,7 @@ impl ShardedStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::FlatFabric;
     use crate::model::spec::{ParamKind, ParamSpec};
     use crate::util::stats::rel_l2_err;
 
@@ -166,6 +184,7 @@ mod tests {
         let back = store.full_master();
         assert_eq!(back, params);
         assert_eq!(store.n_params(), 32 * 64 + 128);
+        assert_eq!(store.fabric().name(), "lockstep");
     }
 
     #[test]
@@ -226,12 +245,15 @@ mod tests {
             &mut Pcg64::seeded(7),
             &mut ledger,
         );
+        // Baseline gradients ride in FP16 (the FSDP wire format), so
+        // the reduce is exact up to half-precision rounding of the two
+        // node partials: |err| ≤ 2·2^-11·|partial| / P ≲ 2e-3 here.
         for (pi, per) in sharded.iter().enumerate() {
             let n = specs[pi].numel();
             for (r, shard) in per.iter().enumerate() {
                 let range = topo.shard_range(n, r);
                 for (a, &b) in shard.iter().zip(&expect[pi][range]) {
-                    assert!((a - b).abs() < 1e-5, "param {pi} rank {r}");
+                    assert!((a - b).abs() < 5e-3, "param {pi} rank {r}: {a} vs {b}");
                 }
             }
         }
@@ -245,16 +267,9 @@ mod tests {
         let zero_grads: Vec<Vec<Vec<f32>>> = store
             .specs
             .iter()
-            .enumerate()
-            .map(|(pi, s)| {
+            .map(|s| {
                 (0..4)
                     .map(|r| vec![0.0f32; topo.shard_range(s.numel(), r).len()])
-                    .collect::<Vec<_>>()
-                    .into_iter()
-                    .map(|v| {
-                        let _ = pi;
-                        v
-                    })
                     .collect()
             })
             .collect();
@@ -283,5 +298,25 @@ mod tests {
         let a = store.gather_weights(&policy, &mut Pcg64::seeded(11), &mut l);
         let b = store.gather_weights(&policy, &mut Pcg64::seeded(11), &mut l);
         assert_eq!(a, b, "gather must be deterministic given the rng seed");
+    }
+
+    #[test]
+    fn flat_fabric_store_reduces_identically_in_fp32() {
+        // Backend choice changes traffic, not FP32 math: the flat
+        // fabric must produce the same gathered weights, at more
+        // inter-node bytes.
+        let topo = Topology::new(2, 2);
+        let params = toy_params(12);
+        let lock_store = ShardedStore::from_full(toy_specs(), &params, topo);
+        let flat_store = ShardedStore::from_full(toy_specs(), &params, topo)
+            .with_fabric(Box::new(FlatFabric::new(topo)));
+        assert_eq!(flat_store.fabric().name(), "flat");
+        let policy = QuantPolicy::baseline();
+        let mut ll = TrafficLedger::new();
+        let a = lock_store.gather_weights(&policy, &mut Pcg64::seeded(13), &mut ll);
+        let mut lf = TrafficLedger::new();
+        let b = flat_store.gather_weights(&policy, &mut Pcg64::seeded(13), &mut lf);
+        assert_eq!(a, b);
+        assert!(lf.inter_bytes > ll.inter_bytes);
     }
 }

@@ -4,34 +4,110 @@
 //! fabric; its `byte_size` drives every communication-time estimate, so
 //! it accounts for everything the real CGX implementation transmits:
 //! a small header, per-bucket (lo, scale) FP32 metadata, optional
-//! learned-level tables, and the bit-packed codes.
+//! learned-level tables, and the packed codes. [`EncodedTensor`] is the
+//! *message*; producing one is the job of a [`super::Codec`]
+//! implementation (see [`super::codecs`]).
+//!
+//! The header is 14 bytes — scheme(1) + bits(1) + bucket(4) + n(8) —
+//! and [`EncodedTensor::to_bytes`] / [`EncodedTensor::from_bytes`]
+//! realize the exact octet stream, so `byte_size()` is the length of a
+//! real serialization, not an estimate.
 
 use super::minmax::{BucketMeta, MinMaxQuantizer};
-use super::policy::Scheme;
-use crate::util::Pcg64;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+
+thread_local! {
+    // Reusable unpacked-codes buffer: decode is called once per message
+    // on the collective hot path, and an n-byte scratch per call would
+    // be the one allocation `encode_into`'s buffer reuse doesn't cover.
+    static CODES_SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Header bytes preceding every encoded tensor on the wire:
+/// scheme(1) + bits(1) + bucket(4) + n(8).
+pub const HEADER_BYTES: usize = 14;
+
+/// Wire encoding scheme identifier (the first header byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Raw little-endian f32 passthrough (norms/biases, FP32 baseline).
+    Fp32,
+    /// IEEE half-precision passthrough (the FSDP baseline ships FP16
+    /// gradients; 2 bytes/elem).
+    Fp16,
+    /// Bucketed min–max uniform grid, bit-packed codes.
+    MinMax,
+    /// Bucketed learned-level codes + the level table (§5.2).
+    Learned,
+    /// Random-shift lattice coordinates `Q^w` (Definition 1), i16 LE.
+    Lattice,
+}
+
+impl Scheme {
+    /// Wire tag (header byte 0).
+    pub fn tag(self) -> u8 {
+        match self {
+            Scheme::Fp32 => 0,
+            Scheme::Fp16 => 1,
+            Scheme::MinMax => 2,
+            Scheme::Learned => 3,
+            Scheme::Lattice => 4,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Scheme> {
+        Ok(match t {
+            0 => Scheme::Fp32,
+            1 => Scheme::Fp16,
+            2 => Scheme::MinMax,
+            3 => Scheme::Learned,
+            4 => Scheme::Lattice,
+            other => bail!("unknown scheme tag {other}"),
+        })
+    }
+}
 
 /// An encoded tensor as it would appear on the wire.
-#[derive(Clone, Debug)]
+///
+/// Reusable: every `Vec` field keeps its capacity across
+/// [`super::Codec::encode_into`] calls, which is what removes
+/// per-message allocations on the collective hot path.
+#[derive(Clone, Debug, PartialEq)]
 pub struct EncodedTensor {
     pub scheme: Scheme,
     pub bits: u8,
     pub bucket: usize,
     pub n: usize,
-    /// Per-bucket scaling metadata (empty for FP32 passthrough).
+    /// Per-bucket scaling metadata (empty for FP32/FP16 passthrough).
     pub meta: Vec<BucketMeta>,
     /// Learned level table in normalized [0,1] space (empty unless
     /// scheme == Learned).
     pub levels: Vec<f32>,
-    /// Bit-packed codes (scheme != Fp32) or raw little-endian f32 bytes
-    /// (scheme == Fp32).
+    /// Packed codes (MinMax/Learned), i16 LE lattice coordinates
+    /// (Lattice), or raw LE float bytes (Fp32/Fp16).
     pub payload: Vec<u8>,
+}
+
+impl Default for EncodedTensor {
+    /// An empty message, ready to be filled by `encode_into`.
+    fn default() -> Self {
+        EncodedTensor {
+            scheme: Scheme::Fp32,
+            bits: 32,
+            bucket: 0,
+            n: 0,
+            meta: vec![],
+            levels: vec![],
+            payload: vec![],
+        }
+    }
 }
 
 impl EncodedTensor {
     /// Exact number of bytes this message occupies on the wire.
     pub fn byte_size(&self) -> usize {
-        // header: scheme(1) + bits(1) + bucket(4) + n(8)
-        14 + self.meta.len() * 8 + self.levels.len() * 4 + self.payload.len()
+        HEADER_BYTES + self.meta.len() * 8 + self.levels.len() * 4 + self.payload.len()
     }
 
     /// Compression ratio vs FP32.
@@ -41,22 +117,14 @@ impl EncodedTensor {
 
     /// FP32 passthrough encoding (norms/biases; the filter policy).
     pub fn fp32(values: &[f32]) -> Self {
-        let mut payload = Vec::with_capacity(values.len() * 4);
-        for v in values {
-            payload.extend_from_slice(&v.to_le_bytes());
-        }
-        EncodedTensor {
-            scheme: Scheme::Fp32,
-            bits: 32,
-            bucket: 0,
-            n: values.len(),
-            meta: vec![],
-            levels: vec![],
-            payload,
-        }
+        let mut out = EncodedTensor::default();
+        super::codecs::Fp32Codec.encode_into(values, &mut out);
+        out
     }
 
-    /// Decode to f32 values.
+    /// Decode to f32 values. Self-describing: the receiver needs no
+    /// codec object, only the message (this is what lets `all_gather`
+    /// move pre-encoded shards from heterogeneous encoders).
     pub fn decode(&self, out: &mut Vec<f32>) {
         out.clear();
         match self.scheme {
@@ -66,14 +134,24 @@ impl EncodedTensor {
                     out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
                 }
             }
-            Scheme::MinMax => {
-                let mut codes = vec![0u8; self.n];
+            Scheme::Fp16 => {
+                out.reserve(self.n);
+                for c in self.payload.chunks_exact(2) {
+                    out.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+                }
+            }
+            Scheme::MinMax => CODES_SCRATCH.with(|cell| {
+                let mut codes = cell.borrow_mut();
+                codes.clear();
+                codes.resize(self.n, 0);
                 unpack_bits(&self.payload, self.bits, &mut codes);
                 let q = MinMaxQuantizer::new(self.bits, self.bucket, false);
                 q.decode(&codes, &self.meta, out);
-            }
-            Scheme::Learned => {
-                let mut codes = vec![0u8; self.n];
+            }),
+            Scheme::Learned => CODES_SCRATCH.with(|cell| {
+                let mut codes = cell.borrow_mut();
+                codes.clear();
+                codes.resize(self.n, 0);
                 unpack_bits(&self.payload, self.bits, &mut codes);
                 out.reserve(self.n);
                 for (bi, chunk) in codes.chunks(self.bucket).enumerate() {
@@ -83,32 +161,175 @@ impl EncodedTensor {
                         out.push(lo + self.levels[c as usize] * scale);
                     }
                 }
+            }),
+            Scheme::Lattice => {
+                out.reserve(self.n);
+                for (bi, chunk) in self.payload.chunks(2 * self.bucket).enumerate() {
+                    // meta.lo holds the bucket's random shift r,
+                    // meta.scale holds δ: value = δ·k + r.
+                    let BucketMeta { lo: shift, scale: delta } = self.meta[bi];
+                    for c in chunk.chunks_exact(2) {
+                        let k = i16::from_le_bytes([c[0], c[1]]) as f32;
+                        out.push(delta * k + shift);
+                    }
+                }
             }
         }
     }
+
+    /// Serialize to the exact wire octets (length == `byte_size()`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_size());
+        out.push(self.scheme.tag());
+        out.push(self.bits);
+        out.extend_from_slice(&(self.bucket as u32).to_le_bytes());
+        out.extend_from_slice(&(self.n as u64).to_le_bytes());
+        for m in &self.meta {
+            out.extend_from_slice(&m.lo.to_le_bytes());
+            out.extend_from_slice(&m.scale.to_le_bytes());
+        }
+        for &l in &self.levels {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        out.extend_from_slice(&self.payload);
+        debug_assert_eq!(out.len(), self.byte_size());
+        out
+    }
+
+    /// Parse a message serialized by [`Self::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<EncodedTensor> {
+        anyhow::ensure!(bytes.len() >= HEADER_BYTES, "short header: {} bytes", bytes.len());
+        let scheme = Scheme::from_tag(bytes[0])?;
+        let bits = bytes[1];
+        let bucket = u32::from_le_bytes([bytes[2], bytes[3], bytes[4], bytes[5]]) as usize;
+        let n = u64::from_le_bytes([
+            bytes[6], bytes[7], bytes[8], bytes[9], bytes[10], bytes[11], bytes[12], bytes[13],
+        ]) as usize;
+        // Reject malformed headers before any size arithmetic: a bits
+        // field outside the scheme's range or an element count no
+        // message of this length could carry would otherwise overflow
+        // the derived-size computations (or panic later in decode).
+        match scheme {
+            Scheme::MinMax | Scheme::Learned => anyhow::ensure!(
+                (1..=8).contains(&bits),
+                "{scheme:?} message with bits={bits} (want 1..=8)"
+            ),
+            Scheme::Fp32 => anyhow::ensure!(bits == 32, "Fp32 message with bits={bits}"),
+            Scheme::Fp16 | Scheme::Lattice => {
+                anyhow::ensure!(bits == 16, "{scheme:?} message with bits={bits}")
+            }
+        }
+        anyhow::ensure!(
+            n <= bytes.len().saturating_mul(8),
+            "implausible element count {n} for a {}-byte message",
+            bytes.len()
+        );
+        let n_meta = match scheme {
+            Scheme::Fp32 | Scheme::Fp16 => 0,
+            _ => {
+                anyhow::ensure!(bucket > 0, "{scheme:?} message with bucket=0");
+                n.div_ceil(bucket)
+            }
+        };
+        let n_levels = if scheme == Scheme::Learned { 1usize << bits } else { 0 };
+        let payload_len = match scheme {
+            Scheme::Fp32 => n * 4,
+            Scheme::Fp16 | Scheme::Lattice => n * 2,
+            Scheme::MinMax | Scheme::Learned => (n * bits as usize).div_ceil(8),
+        };
+        let expect = HEADER_BYTES + n_meta * 8 + n_levels * 4 + payload_len;
+        anyhow::ensure!(
+            bytes.len() == expect,
+            "message length {} != expected {expect} for {scheme:?} n={n}",
+            bytes.len()
+        );
+        let mut off = HEADER_BYTES;
+        let mut meta = Vec::with_capacity(n_meta);
+        for _ in 0..n_meta {
+            let lo = f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+            let scale = f32::from_le_bytes([
+                bytes[off + 4],
+                bytes[off + 5],
+                bytes[off + 6],
+                bytes[off + 7],
+            ]);
+            meta.push(BucketMeta { lo, scale });
+            off += 8;
+        }
+        let mut levels = Vec::with_capacity(n_levels);
+        for _ in 0..n_levels {
+            levels.push(f32::from_le_bytes([
+                bytes[off],
+                bytes[off + 1],
+                bytes[off + 2],
+                bytes[off + 3],
+            ]));
+            off += 4;
+        }
+        let payload = bytes[off..].to_vec();
+        Ok(EncodedTensor { scheme, bits, bucket, n, meta, levels, payload })
+    }
 }
 
-/// Encode with the bucketed min-max quantizer into the wire format.
-pub fn encode_minmax(
-    values: &[f32],
-    bits: u8,
-    bucket: usize,
-    stochastic: bool,
-    rng: &mut Pcg64,
-) -> EncodedTensor {
-    let q = MinMaxQuantizer::new(bits, bucket, stochastic);
-    let mut codes = Vec::new();
-    let mut meta = Vec::new();
-    q.encode(values, &mut codes, &mut meta, rng);
-    let payload = pack_bits(&codes, bits);
-    EncodedTensor {
-        scheme: Scheme::MinMax,
-        bits,
-        bucket,
-        n: values.len(),
-        meta,
-        levels: vec![],
-        payload,
+/// Convert an f32 to IEEE 754 binary16 bits (round-to-nearest-even,
+/// overflow to ±inf, flush below the subnormal range to ±0).
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let man = b & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (quiet payload bit kept for NaN)
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let half_exp = exp - 127 + 15;
+    if half_exp >= 0x1f {
+        return sign | 0x7c00; // ≥ 2^16: overflow to inf
+    }
+    if half_exp <= 0 {
+        // subnormal half (or zero)
+        if half_exp < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - half_exp) as u32;
+        let half_man = man >> shift;
+        let round = (man >> (shift - 1)) & 1;
+        let sticky = man & ((1 << (shift - 1)) - 1) != 0;
+        let mut h = half_man;
+        if round == 1 && (sticky || h & 1 == 1) {
+            h += 1; // may carry into the exponent: subnormal max + ulp
+        }
+        return sign | h as u16;
+    }
+    let half_man = man >> 13;
+    let round = (man >> 12) & 1;
+    let sticky = man & 0x0fff != 0;
+    let mut h = ((half_exp as u32) << 10) | half_man;
+    if round == 1 && (sticky || h & 1 == 1) {
+        h += 1; // carries through exponent; saturates to inf at the top
+    }
+    sign | h as u16
+}
+
+/// Convert IEEE 754 binary16 bits back to f32 (exact).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let negative = h & 0x8000 != 0;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let v = match (exp, man) {
+        (0, 0) => 0.0f32,
+        (0, m) => m as f32 * 2f32.powi(-24), // subnormal: m / 2^24
+        (0x1f, 0) => f32::INFINITY,
+        (0x1f, _) => f32::NAN,
+        (e, m) => f32::from_bits(((e + 112) << 23) | (m << 13)),
+    };
+    if negative {
+        -v
+    } else {
+        v
     }
 }
 
@@ -166,6 +387,38 @@ pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
             out
         }
     }
+}
+
+/// Pack a buffer of unpacked codes into the same bitstream as
+/// [`pack_bits`] *in place*, truncating the buffer to the packed
+/// length. The write cursor never catches the read cursor for
+/// bits ≤ 7 (⌊(i+1)·bits/8⌋ ≤ i), so no scratch allocation is needed —
+/// this is the allocation-free half of `encode_into`.
+pub fn pack_bits_in_place(buf: &mut Vec<u8>, bits: u8) {
+    assert!((1..=8).contains(&bits));
+    if bits == 8 {
+        return;
+    }
+    let n = buf.len();
+    let mut w = 0usize;
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for i in 0..n {
+        acc |= (buf[i] as u64) << nbits;
+        nbits += bits as u32;
+        while nbits >= 8 {
+            buf[w] = acc as u8;
+            acc >>= 8;
+            nbits -= 8;
+            w += 1;
+        }
+    }
+    if nbits > 0 {
+        buf[w] = acc as u8;
+        w += 1;
+    }
+    debug_assert_eq!(w, (n * bits as usize).div_ceil(8));
+    buf.truncate(w);
 }
 
 /// Unpack a bitstream produced by [`pack_bits`] into `out` (len = n).
@@ -226,7 +479,9 @@ pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::codecs::{Codec, MinMaxCodec};
     use crate::util::stats::rel_l2_err;
+    use crate::util::Pcg64;
 
     #[test]
     fn pack_roundtrip_all_widths() {
@@ -245,14 +500,29 @@ mod tests {
     }
 
     #[test]
+    fn pack_in_place_matches_pack_bits() {
+        let mut rng = Pcg64::seeded(17);
+        for bits in 1..=8u8 {
+            for n in [0usize, 1, 7, 8, 9, 255, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+                let want = pack_bits(&codes, bits);
+                let mut buf = codes.clone();
+                pack_bits_in_place(&mut buf, bits);
+                assert_eq!(buf, want, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn wire_size_accounting() {
         let mut rng = Pcg64::seeded(2);
         let mut v = vec![0.0f32; 4096];
         rng.fill_normal(&mut v, 1.0);
-        let e = encode_minmax(&v, 8, 1024, true, &mut rng);
+        let e = MinMaxCodec::new(8, 1024, true).encode(&v, &mut rng);
         // 14 header + 4 buckets * 8 meta + 4096 codes
         assert_eq!(e.byte_size(), 14 + 32 + 4096);
-        let e4 = encode_minmax(&v, 4, 1024, true, &mut rng);
+        let e4 = MinMaxCodec::new(4, 1024, true).encode(&v, &mut rng);
         assert_eq!(e4.byte_size(), 14 + 32 + 2048);
         assert!(e4.ratio() > 7.0 && e4.ratio() < 8.0);
     }
@@ -268,6 +538,34 @@ mod tests {
     }
 
     #[test]
+    fn f16_conversion_properties() {
+        // exactly representable values roundtrip bit-perfectly
+        for &x in &[0.0f32, 1.0, -1.0, 1.5, -2.25, 0.5, 65504.0, -65504.0, 2.0f32.powi(-24)] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(back, x, "{x} -> {back}");
+        }
+        // signs of zero
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        // normal-range relative error ≤ 2^-11
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..2000 {
+            let x = (rng.next_f32() - 0.5) * 100.0;
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!(
+                (back - x).abs() <= x.abs() * (1.0 / 2048.0) + 1e-7,
+                "{x} -> {back}"
+            );
+        }
+        // overflow and specials
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e6)), f32::NEG_INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // tiny values flush to zero
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-10)), 0.0);
+    }
+
+    #[test]
     fn encode_decode_matches_quantizer() {
         let mut rng = Pcg64::seeded(3);
         let mut v = vec![0.0f32; 3000];
@@ -275,7 +573,7 @@ mod tests {
         for bits in [2u8, 3, 4, 5, 6, 8] {
             let mut rng_a = Pcg64::seeded(42);
             let mut rng_b = Pcg64::seeded(42);
-            let e = encode_minmax(&v, bits, 1024, true, &mut rng_a);
+            let e = MinMaxCodec::new(bits, 1024, true).encode(&v, &mut rng_a);
             let mut wire = vec![];
             e.decode(&mut wire);
             // direct quantizer path with same rng must agree exactly
@@ -294,10 +592,81 @@ mod tests {
         let mut rng = Pcg64::seeded(4);
         let mut v = vec![0.0f32; 2048];
         rng.fill_normal(&mut v, 1.0);
-        let e = encode_minmax(&v, 8, 1024, false, &mut rng);
+        let e = MinMaxCodec::new(8, 1024, false).encode(&v, &mut rng);
         let mut out = vec![];
         e.decode(&mut out);
         // det 8-bit RMS err = scale/sqrt(12) ~ range/(255*3.46) ~ 0.9% of sigma
         assert!(rel_l2_err(&out, &v) < 0.02);
+    }
+
+    #[test]
+    fn header_golden_bytes() {
+        // The wire header is a compatibility contract: scheme(1) bits(1)
+        // bucket(4 LE) n(8 LE). Pin it byte-for-byte.
+        let mut rng = Pcg64::seeded(5);
+        let mut v = vec![0.0f32; 6];
+        rng.fill_normal(&mut v, 1.0);
+        let e = MinMaxCodec::new(4, 4, false).encode(&v, &mut rng);
+        let bytes = e.to_bytes();
+        assert_eq!(bytes.len(), e.byte_size());
+        let golden_header: [u8; HEADER_BYTES] = [
+            2, // scheme tag: MinMax
+            4, // bits
+            4, 0, 0, 0, // bucket = 4, u32 LE
+            6, 0, 0, 0, 0, 0, 0, 0, // n = 6, u64 LE
+        ];
+        assert_eq!(&bytes[..HEADER_BYTES], &golden_header);
+        // and the fp32 header
+        let f = EncodedTensor::fp32(&[1.0, 2.0]);
+        let fb = f.to_bytes();
+        assert_eq!(&fb[..HEADER_BYTES], &[0, 32, 0, 0, 0, 0, 2, 0, 0, 0, 0, 0, 0, 0]);
+        // payload is the two LE floats
+        assert_eq!(&fb[HEADER_BYTES..], &[0, 0, 128, 63, 0, 0, 0, 64]);
+    }
+
+    #[test]
+    fn serialize_roundtrip_all_schemes() {
+        use crate::quant::codecs::{Fp16Codec, Fp32Codec, LatticeCodec, LearnedCodec};
+        use crate::quant::LearnedLevels;
+        let mut rng = Pcg64::seeded(6);
+        let mut v = vec![0.0f32; 777];
+        rng.fill_normal(&mut v, 1.0);
+        let levels = LearnedLevels::uniform(5);
+        let codecs: Vec<Box<dyn Codec>> = vec![
+            Box::new(Fp32Codec),
+            Box::new(Fp16Codec),
+            Box::new(MinMaxCodec::new(3, 256, true)),
+            Box::new(LearnedCodec::new(levels.clone(), 128)),
+            Box::new(LatticeCodec::new(0.05, 256)),
+        ];
+        for c in &codecs {
+            let e = c.encode(&v, &mut rng);
+            let bytes = e.to_bytes();
+            assert_eq!(bytes.len(), e.byte_size(), "{}", c.name());
+            let back = EncodedTensor::from_bytes(&bytes).unwrap();
+            assert_eq!(back, e, "{}", c.name());
+            // decode of the parsed message matches decode of the original
+            let (mut a, mut b) = (vec![], vec![]);
+            e.decode(&mut a);
+            back.decode(&mut b);
+            assert_eq!(a, b, "{}", c.name());
+        }
+        // corrupt/truncated inputs fail cleanly
+        assert!(EncodedTensor::from_bytes(&[1, 2, 3]).is_err());
+        let mut bad = EncodedTensor::fp32(&v).to_bytes();
+        bad[0] = 99; // unknown scheme
+        assert!(EncodedTensor::from_bytes(&bad).is_err());
+        bad[0] = 0;
+        bad.pop(); // wrong length
+        assert!(EncodedTensor::from_bytes(&bad).is_err());
+        // malformed bits / implausible n must error, not overflow
+        let mut hdr = [0u8; HEADER_BYTES];
+        hdr[0] = 3; // Learned
+        hdr[1] = 64; // bits way out of range: 1usize << 64 would overflow
+        hdr[2] = 1; // bucket = 1
+        assert!(EncodedTensor::from_bytes(&hdr).is_err());
+        hdr[1] = 4;
+        hdr[6..14].copy_from_slice(&u64::MAX.to_le_bytes()); // absurd n
+        assert!(EncodedTensor::from_bytes(&hdr).is_err());
     }
 }

@@ -1,0 +1,469 @@
+//! The [`Codec`] trait: one uniform interface over every compression
+//! scheme QSDP ships on the wire.
+//!
+//! A codec turns `&[f32]` into a self-describing [`EncodedTensor`] and
+//! back, and can price a message analytically (`wire_bytes`) without
+//! encoding it — the step-time model depends on that being byte-exact.
+//! Implementations:
+//!
+//! * [`Fp32Codec`] — raw passthrough (norms/biases, FP32 baseline
+//!   weights);
+//! * [`Fp16Codec`] — IEEE half precision (the FSDP baseline transmits
+//!   FP16 gradients, §6.1);
+//! * [`MinMaxCodec`] — bucketed min–max uniform grid (§5.1), RTN or
+//!   stochastic rounding;
+//! * [`LearnedCodec`] — learned level tables (Algorithm 2, §5.2);
+//! * [`LatticeCodec`] — random-shift lattice `Q^w` (Definition 1) with
+//!   i16 lattice coordinates on the wire.
+//!
+//! `encode_into` writes into a caller-owned [`EncodedTensor`], reusing
+//! its buffer capacity: on the collective hot path (one message per
+//! (node, shard) pair) this removes every per-message allocation —
+//! `quant_bench` pins the win. [`AnyCodec`] is the dispatch enum the
+//! [`crate::quant::QuantPolicy`] resolver returns.
+
+use super::codec::{
+    f32_to_f16_bits, pack_bits_in_place, EncodedTensor, Scheme, HEADER_BYTES,
+};
+use super::learned::LearnedLevels;
+use super::minmax::{minmax4, BucketMeta, MinMaxQuantizer};
+use crate::util::Pcg64;
+
+/// A wire codec: encode/decode f32 tensors with exact byte accounting.
+pub trait Codec {
+    /// Short stable identifier (for logs and tables).
+    fn name(&self) -> &'static str;
+
+    /// Encode `values` into `out`, reusing its buffers. `rng` feeds
+    /// stochastic rounding / random shifts; deterministic codecs leave
+    /// it untouched (rng stream discipline is part of the contract —
+    /// lockstep simulation depends on it).
+    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64);
+
+    /// Exact bytes a message of `n` elements occupies on the wire;
+    /// always equals `self.encode(..).byte_size()` for len-n input.
+    fn wire_bytes(&self, n: usize) -> usize;
+
+    /// Decode a message into `out` (clears it first). The default
+    /// defers to the self-describing wire format.
+    fn decode_into(&self, enc: &EncodedTensor, out: &mut Vec<f32>) {
+        enc.decode(out);
+    }
+
+    /// Allocating convenience wrapper around [`Self::encode_into`].
+    fn encode(&self, values: &[f32], rng: &mut Pcg64) -> EncodedTensor {
+        let mut out = EncodedTensor::default();
+        self.encode_into(values, &mut out, rng);
+        out
+    }
+}
+
+/// Raw FP32 passthrough (4 bytes/elem).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fp32Codec;
+
+impl Fp32Codec {
+    /// Deterministic encode without an rng (passthrough draws none).
+    pub fn encode_into(&self, values: &[f32], out: &mut EncodedTensor) {
+        out.scheme = Scheme::Fp32;
+        out.bits = 32;
+        out.bucket = 0;
+        out.n = values.len();
+        out.meta.clear();
+        out.levels.clear();
+        out.payload.clear();
+        out.payload.reserve(values.len() * 4);
+        for v in values {
+            out.payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+impl Codec for Fp32Codec {
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, _rng: &mut Pcg64) {
+        Fp32Codec::encode_into(self, values, out);
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        HEADER_BYTES + n * 4
+    }
+}
+
+/// IEEE binary16 passthrough (2 bytes/elem) — the FSDP baseline's
+/// gradient format.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fp16Codec;
+
+impl Codec for Fp16Codec {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, _rng: &mut Pcg64) {
+        out.scheme = Scheme::Fp16;
+        out.bits = 16;
+        out.bucket = 0;
+        out.n = values.len();
+        out.meta.clear();
+        out.levels.clear();
+        out.payload.clear();
+        out.payload.reserve(values.len() * 2);
+        for &v in values {
+            out.payload.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        HEADER_BYTES + n * 2
+    }
+}
+
+/// Bucketed min–max uniform quantization (paper §5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct MinMaxCodec {
+    q: MinMaxQuantizer,
+}
+
+impl MinMaxCodec {
+    pub fn new(bits: u8, bucket: usize, stochastic: bool) -> Self {
+        MinMaxCodec { q: MinMaxQuantizer::new(bits, bucket, stochastic) }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.q.bits
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.q.bucket
+    }
+}
+
+impl Codec for MinMaxCodec {
+    fn name(&self) -> &'static str {
+        "minmax"
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64) {
+        out.scheme = Scheme::MinMax;
+        out.bits = self.q.bits;
+        out.bucket = self.q.bucket;
+        out.n = values.len();
+        out.levels.clear();
+        // quantize straight into the payload buffer (one u8 per code),
+        // then bit-pack in place — no scratch allocation.
+        self.q.encode(values, &mut out.payload, &mut out.meta, rng);
+        pack_bits_in_place(&mut out.payload, self.q.bits);
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        HEADER_BYTES
+            + n.div_ceil(self.q.bucket) * 8
+            + (n * self.q.bits as usize).div_ceil(8)
+    }
+}
+
+/// Learned-level quantization (paper §5.2, Algorithm 2): bucketed
+/// min–max normalization with a trained (instead of uniform) grid. The
+/// level table rides along in every message.
+#[derive(Clone, Debug)]
+pub struct LearnedCodec {
+    levels: LearnedLevels,
+    bucket: usize,
+}
+
+impl LearnedCodec {
+    pub fn new(levels: LearnedLevels, bucket: usize) -> Self {
+        assert!(bucket > 0);
+        LearnedCodec { levels, bucket }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.levels.bits
+    }
+}
+
+impl Codec for LearnedCodec {
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, _rng: &mut Pcg64) {
+        let bits = self.levels.bits;
+        out.scheme = Scheme::Learned;
+        out.bits = bits;
+        out.bucket = self.bucket;
+        out.n = values.len();
+        out.meta.clear();
+        out.meta.reserve(values.len().div_ceil(self.bucket));
+        out.levels.clear();
+        out.levels.extend_from_slice(&self.levels.levels);
+        out.payload.clear();
+        out.payload.resize(values.len(), 0);
+        let mut off = 0usize;
+        for chunk in values.chunks(self.bucket) {
+            let (lo, hi) = minmax4(chunk);
+            let range = hi - lo;
+            out.meta.push(BucketMeta { lo, scale: range });
+            let inv = if range > 0.0 { 1.0 / range } else { 0.0 };
+            for (o, &v) in out.payload[off..off + chunk.len()].iter_mut().zip(chunk) {
+                *o = self.levels.nearest((v - lo) * inv) as u8;
+            }
+            off += chunk.len();
+        }
+        pack_bits_in_place(&mut out.payload, bits);
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        HEADER_BYTES
+            + n.div_ceil(self.bucket) * 8
+            + (1usize << self.levels.bits) * 4
+            + (n * self.levels.bits as usize).div_ceil(8)
+    }
+}
+
+/// Random-shift lattice quantizer `Q^w` (Definition 1) as a wire codec:
+/// one shift r ~ Unif[-δ/2, δ/2) per bucket (carried in the bucket
+/// meta), lattice coordinates k = round((v − r)/δ) clamped to i16 on
+/// the wire (2 bytes/elem; |k| < 2^15 covers any sane δ).
+#[derive(Clone, Copy, Debug)]
+pub struct LatticeCodec {
+    pub delta: f32,
+    pub bucket: usize,
+}
+
+impl LatticeCodec {
+    pub fn new(delta: f32, bucket: usize) -> Self {
+        assert!(delta > 0.0);
+        assert!(bucket > 0);
+        LatticeCodec { delta, bucket }
+    }
+}
+
+impl Codec for LatticeCodec {
+    fn name(&self) -> &'static str {
+        "lattice"
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64) {
+        let d = self.delta;
+        out.scheme = Scheme::Lattice;
+        out.bits = 16;
+        out.bucket = self.bucket;
+        out.n = values.len();
+        out.meta.clear();
+        out.meta.reserve(values.len().div_ceil(self.bucket));
+        out.levels.clear();
+        out.payload.clear();
+        out.payload.reserve(values.len() * 2);
+        for chunk in values.chunks(self.bucket) {
+            let r = (rng.next_f32() - 0.5) * d;
+            out.meta.push(BucketMeta { lo: r, scale: d });
+            for &v in chunk {
+                let k = (((v - r) / d).round() as i32)
+                    .clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+                out.payload.extend_from_slice(&k.to_le_bytes());
+            }
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        HEADER_BYTES + n.div_ceil(self.bucket) * 8 + n * 2
+    }
+}
+
+/// Static-dispatch union of every built-in codec — what the
+/// [`crate::quant::QuantPolicy`] resolver hands out without boxing.
+#[derive(Clone, Debug)]
+pub enum AnyCodec {
+    Fp32(Fp32Codec),
+    Fp16(Fp16Codec),
+    MinMax(MinMaxCodec),
+    Learned(LearnedCodec),
+    Lattice(LatticeCodec),
+}
+
+impl Codec for AnyCodec {
+    fn name(&self) -> &'static str {
+        match self {
+            AnyCodec::Fp32(c) => c.name(),
+            AnyCodec::Fp16(c) => c.name(),
+            AnyCodec::MinMax(c) => c.name(),
+            AnyCodec::Learned(c) => c.name(),
+            AnyCodec::Lattice(c) => c.name(),
+        }
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64) {
+        match self {
+            AnyCodec::Fp32(c) => Codec::encode_into(c, values, out, rng),
+            AnyCodec::Fp16(c) => c.encode_into(values, out, rng),
+            AnyCodec::MinMax(c) => c.encode_into(values, out, rng),
+            AnyCodec::Learned(c) => c.encode_into(values, out, rng),
+            AnyCodec::Lattice(c) => c.encode_into(values, out, rng),
+        }
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        match self {
+            AnyCodec::Fp32(c) => c.wire_bytes(n),
+            AnyCodec::Fp16(c) => c.wire_bytes(n),
+            AnyCodec::MinMax(c) => c.wire_bytes(n),
+            AnyCodec::Learned(c) => c.wire_bytes(n),
+            AnyCodec::Lattice(c) => c.wire_bytes(n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_l2_err;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// Every codec variant the repo can put on the wire, boxed for a
+    /// uniform sweep.
+    fn all_codecs() -> Vec<Box<dyn Codec>> {
+        let mut fitted = LearnedLevels::uniform(4);
+        fitted.fit(&randv(4096, 9).iter().map(|x| x.abs().min(1.0)).collect::<Vec<_>>(), 0.01, 3);
+        vec![
+            Box::new(Fp32Codec),
+            Box::new(Fp16Codec),
+            Box::new(MinMaxCodec::new(2, 1024, false)),
+            Box::new(MinMaxCodec::new(3, 100, true)),
+            Box::new(MinMaxCodec::new(4, 1024, true)),
+            Box::new(MinMaxCodec::new(5, 333, false)),
+            Box::new(MinMaxCodec::new(8, 1024, true)),
+            Box::new(LearnedCodec::new(LearnedLevels::uniform(3), 1024)),
+            Box::new(LearnedCodec::new(fitted, 256)),
+            Box::new(LatticeCodec::new(0.05, 1024)),
+            Box::new(LatticeCodec::new(0.5, 64)),
+        ]
+    }
+
+    #[test]
+    fn wire_bytes_is_byte_size_for_every_codec() {
+        // The shared contract: the analytic size and the real message
+        // agree byte-for-byte, for all codecs and ragged sizes.
+        let mut rng = Pcg64::seeded(1);
+        for codec in all_codecs() {
+            for n in [1usize, 5, 100, 1023, 1024, 1025, 3000] {
+                let v = randv(n, 7 + n as u64);
+                let e = codec.encode(&v, &mut rng);
+                assert_eq!(
+                    e.byte_size(),
+                    codec.wire_bytes(n),
+                    "codec {} n={n}",
+                    codec.name()
+                );
+                assert_eq!(e.n, n, "codec {}", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers_and_matches_fresh_encode() {
+        let mut scratch = EncodedTensor::default();
+        for codec in all_codecs() {
+            // two different inputs through the same scratch message
+            for (n, seed) in [(2048usize, 11u64), (999, 12)] {
+                let v = randv(n, seed);
+                let mut rng_a = Pcg64::seeded(99);
+                let mut rng_b = Pcg64::seeded(99);
+                codec.encode_into(&v, &mut scratch, &mut rng_a);
+                let fresh = codec.encode(&v, &mut rng_b);
+                assert_eq!(scratch, fresh, "codec {} n={n}", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_into_roundtrips_close() {
+        let v = randv(4096, 21);
+        let mut rng = Pcg64::seeded(2);
+        let mut out = Vec::new();
+        let cases: Vec<(Box<dyn Codec>, f64)> = vec![
+            (Box::new(Fp32Codec), 0.0),
+            (Box::new(Fp16Codec), 1e-3),
+            (Box::new(MinMaxCodec::new(8, 1024, false)), 0.02),
+            (Box::new(LearnedCodec::new(LearnedLevels::uniform(8), 1024)), 0.02),
+            (Box::new(LatticeCodec::new(0.01, 1024)), 0.01),
+        ];
+        for (codec, tol) in cases {
+            let e = codec.encode(&v, &mut rng);
+            codec.decode_into(&e, &mut out);
+            assert_eq!(out.len(), v.len(), "codec {}", codec.name());
+            let err = rel_l2_err(&out, &v);
+            assert!(err <= tol, "codec {}: err {err} > {tol}", codec.name());
+        }
+    }
+
+    #[test]
+    fn fp16_codec_halves_fp32_traffic() {
+        let v = randv(1000, 3);
+        let mut rng = Pcg64::seeded(4);
+        let e32 = Fp32Codec.encode(&v, &mut rng);
+        let e16 = Fp16Codec.encode(&v, &mut rng);
+        assert_eq!(e32.byte_size(), 14 + 4000);
+        assert_eq!(e16.byte_size(), 14 + 2000);
+    }
+
+    #[test]
+    fn lattice_codec_matches_lattice_quantizer() {
+        // The codec must reproduce LatticeQuantizer::apply exactly when
+        // fed the same rng stream (one draw per bucket).
+        use crate::quant::LatticeQuantizer;
+        let v = randv(500, 5);
+        let codec = LatticeCodec::new(0.25, 64);
+        let q = LatticeQuantizer::new(0.25, 64);
+        let mut rng_a = Pcg64::seeded(8);
+        let mut rng_b = Pcg64::seeded(8);
+        let e = codec.encode(&v, &mut rng_a);
+        let mut got = Vec::new();
+        e.decode(&mut got);
+        let mut want = v.clone();
+        q.apply(&mut want, &mut rng_b);
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5, "idx {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn learned_codec_matches_apply() {
+        let v = randv(2048, 6);
+        let mut l = LearnedLevels::uniform(5);
+        let norm: Vec<f32> = v.iter().map(|x| (x + 3.0) / 6.0).collect();
+        l.fit(&norm, 0.01, 4);
+        let codec = LearnedCodec::new(l.clone(), 1024);
+        let e = codec.encode(&v, &mut Pcg64::seeded(7));
+        let mut out = vec![];
+        e.decode(&mut out);
+        let mut w = v.clone();
+        l.apply(&mut w, 1024);
+        for (a, b) in w.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn any_codec_delegates() {
+        let v = randv(512, 10);
+        let mut rng_a = Pcg64::seeded(13);
+        let mut rng_b = Pcg64::seeded(13);
+        let any = AnyCodec::MinMax(MinMaxCodec::new(4, 128, true));
+        let direct = MinMaxCodec::new(4, 128, true);
+        assert_eq!(any.name(), "minmax");
+        assert_eq!(any.wire_bytes(512), direct.wire_bytes(512));
+        assert_eq!(any.encode(&v, &mut rng_a), direct.encode(&v, &mut rng_b));
+    }
+}

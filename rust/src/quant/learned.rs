@@ -7,10 +7,6 @@
 //! warmup, for bit-widths ≤ 6 where it noticeably reduces error
 //! (Tables 3 & 6, Figures 7–8).
 
-use super::codec::{pack_bits, EncodedTensor};
-use super::minmax::BucketMeta;
-use super::policy::Scheme;
-
 /// A learned level table in normalized [0, 1] space.
 #[derive(Clone, Debug)]
 pub struct LearnedLevels {
@@ -67,36 +63,6 @@ impl LearnedLevels {
                     i
                 }
             }
-        }
-    }
-
-    /// Encode a tensor with these levels (bucketed min-max
-    /// normalization, then nearest-level codes).
-    pub fn encode(&self, values: &[f32], bucket: usize) -> EncodedTensor {
-        let mut meta = Vec::with_capacity(values.len().div_ceil(bucket));
-        let mut codes = Vec::with_capacity(values.len());
-        for chunk in values.chunks(bucket) {
-            let mut lo = f32::INFINITY;
-            let mut hi = f32::NEG_INFINITY;
-            for &v in chunk {
-                lo = lo.min(v);
-                hi = hi.max(v);
-            }
-            let range = hi - lo;
-            meta.push(BucketMeta { lo, scale: range });
-            let inv = if range > 0.0 { 1.0 / range } else { 0.0 };
-            for &v in chunk {
-                codes.push(self.nearest((v - lo) * inv) as u8);
-            }
-        }
-        EncodedTensor {
-            scheme: Scheme::Learned,
-            bits: self.bits,
-            bucket,
-            n: values.len(),
-            meta,
-            levels: self.levels.clone(),
-            payload: pack_bits(&codes, self.bits),
         }
     }
 
@@ -217,10 +183,11 @@ mod tests {
 
     #[test]
     fn encode_decode_roundtrip() {
+        use crate::quant::codecs::{Codec, LearnedCodec};
         let v = gaussian(2048, 3);
         let mut l = LearnedLevels::uniform(5);
         l.fit(&normalize_bucketwise(&v, 1024), 0.01, 4);
-        let e = l.encode(&v, 1024);
+        let e = LearnedCodec::new(l.clone(), 1024).encode(&v, &mut Pcg64::seeded(9));
         let mut out = vec![];
         e.decode(&mut out);
         assert_eq!(out.len(), v.len());

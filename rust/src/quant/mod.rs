@@ -1,29 +1,45 @@
-//! Quantization substrate: everything QSDP compresses goes through here.
+//! Quantization substrate: everything QSDP compresses goes through the
+//! [`Codec`] trait.
 //!
-//! * [`minmax`] — bucketed min–max uniform quantizer (the paper's
-//!   practical codec for both weights and gradients, §5.1).
-//! * [`lattice`] — random-shift lattice quantizer `Q^w` (Definition 1),
-//!   used by the theory testbed and as the weight-quantization analysis
-//!   object (Lemmas 4–6).
-//! * [`codec`] — bit-packing wire format; byte-exact sizes feed the
-//!   network simulator.
-//! * [`learned`] — learned quantization levels (Algorithm 2 / Figure 2):
-//!   gradient-descent optimization of level locations.
-//! * [`policy`] — which tensors are quantized at which width (norms and
-//!   biases pass through in FP32, per §5.1).
+//! The module is organized around three layers:
+//!
+//! 1. **Wire format** — [`codec::EncodedTensor`] is the byte-exact,
+//!    self-describing message that moves through the simulated fabric
+//!    (14-byte header + per-bucket meta + optional level table +
+//!    packed payload; `to_bytes`/`from_bytes` realize the octets).
+//! 2. **Codecs** — [`codecs`] implements [`Codec`] for every scheme:
+//!    [`Fp32Codec`], [`Fp16Codec`] (the FSDP baseline's gradient
+//!    format), [`MinMaxCodec`] (bucketed min–max uniform grid, §5.1),
+//!    [`LearnedCodec`] (learned levels, Algorithm 2 / §5.2) and
+//!    [`LatticeCodec`] (random-shift lattice `Q^w`, Definition 1).
+//!    `encode_into`/`decode_into` reuse caller buffers so the
+//!    collective hot path allocates nothing per message, and
+//!    `wire_bytes(n)` prices a message without encoding it — the two
+//!    are asserted byte-identical for every codec.
+//! 3. **Policy** — [`QuantPolicy`] is the resolver: it maps a
+//!    `(`[`TensorRole`]`, ParamKind)` pair to the codec that carries
+//!    that tensor (norms and biases pass through uncompressed, per the
+//!    §5.1 filter), so call sites never branch on roles themselves.
+//!
+//! Supporting math lives beside the codecs: [`minmax`] (the §5.1
+//! quantizer, matched bit-for-bit by the Pallas kernel), [`lattice`]
+//! (the theory testbed's `Q^w`), [`learned`] (Algorithm 2 level
+//! fitting), and [`qsgd`] (sparse Elias-coded gradients, §D.3).
 
 pub mod codec;
+pub mod codecs;
 pub mod lattice;
 pub mod learned;
 pub mod minmax;
 pub mod policy;
 pub mod qsgd;
 
-pub use codec::EncodedTensor;
+pub use codec::{EncodedTensor, Scheme};
+pub use codecs::{AnyCodec, Codec, Fp16Codec, Fp32Codec, LatticeCodec, LearnedCodec, MinMaxCodec};
 pub use lattice::LatticeQuantizer;
 pub use learned::LearnedLevels;
 pub use minmax::MinMaxQuantizer;
-pub use policy::{QuantPolicy, Scheme};
+pub use policy::{QuantPolicy, TensorRole};
 pub use qsgd::SparseGrad;
 
 /// Default bucket size (paper §5.1: 1024 balances compression vs accuracy

@@ -1,20 +1,28 @@
 //! Quantization policy: which tensor is compressed how (paper §5.1).
 //!
 //! QSDP filters out normalization layers and biases — they are tiny and
-//! sensitive, so they travel in FP32 — and compresses weight matrices
-//! and gradients with the bucketed codec at configurable bit-widths.
+//! sensitive, so they travel uncompressed — and compresses weight
+//! matrices and gradients with the bucketed codec at configurable
+//! bit-widths. The policy itself is *data*: [`QuantPolicy::codec`]
+//! resolves a `(TensorRole, ParamKind)` pair to the [`Codec`] that
+//! carries that tensor, and every encode/size question is answered by
+//! the returned codec — there is exactly one resolution path for
+//! weights and gradients instead of a per-role method quartet.
 
-use super::codec::{encode_minmax, EncodedTensor};
+use super::codecs::{AnyCodec, Codec, Fp16Codec, Fp32Codec, LearnedCodec, MinMaxCodec};
 use super::learned::LearnedLevels;
 use crate::model::spec::ParamKind;
 use crate::util::Pcg64;
 
-/// Wire encoding scheme identifier.
+pub use super::codec::Scheme;
+
+/// What a tensor is on the communication path: an AllGathered weight or
+/// a ReduceScattered gradient. The two roles may resolve to different
+/// codecs (bit-widths, rounding mode, uncompressed fallback format).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Scheme {
-    Fp32,
-    MinMax,
-    Learned,
+pub enum TensorRole {
+    Weight,
+    Grad,
 }
 
 /// End-to-end compression policy for a training run.
@@ -23,7 +31,7 @@ pub struct QuantPolicy {
     /// Weight bit-width (None = FP32 baseline FSDP).
     pub weight_bits: Option<u8>,
     /// Gradient bit-width (None = FP16 baseline — FSDP transmits grads
-    /// in half precision; we account 2 bytes/elem for sizing).
+    /// in half precision, §6.1).
     pub grad_bits: Option<u8>,
     pub bucket: usize,
     /// Stochastic rounding for gradients (weights use round-to-nearest;
@@ -74,81 +82,53 @@ impl QuantPolicy {
         kind == ParamKind::Matrix
     }
 
-    /// Encode a *weight* tensor for transmission.
-    pub fn encode_weight(
+    /// Resolve the codec that carries a tensor of the given role/kind.
+    ///
+    /// * quantized (`Matrix` under a configured bit-width): learned
+    ///   levels when a matching-width table is set, otherwise the
+    ///   bucketed min–max grid (weights round-to-nearest, gradients per
+    ///   `stochastic_grads`);
+    /// * baseline gradient stream (`grad_bits == None`): FP16, what
+    ///   FSDP actually ships (§6.1) and what the analytic sizing has
+    ///   always charged — 2 bytes/elem;
+    /// * everything else (weights without a bit-width, and norm/bias
+    ///   tensors filtered by §5.1's sensitivity rule): exact FP32.
+    pub fn codec(&self, role: TensorRole, kind: ParamKind) -> AnyCodec {
+        let (bits, learned, stochastic) = match role {
+            TensorRole::Weight => (self.weight_bits, &self.learned_weights, false),
+            TensorRole::Grad => (self.grad_bits, &self.learned_grads, self.stochastic_grads),
+        };
+        match (bits, self.quantizes(kind)) {
+            (Some(b), true) => {
+                if let Some(l) = learned {
+                    if l.bits == b {
+                        return AnyCodec::Learned(LearnedCodec::new(l.clone(), self.bucket));
+                    }
+                }
+                AnyCodec::MinMax(MinMaxCodec::new(b, self.bucket, stochastic))
+            }
+            _ if role == TensorRole::Grad && self.grad_bits.is_none() => {
+                AnyCodec::Fp16(Fp16Codec)
+            }
+            _ => AnyCodec::Fp32(Fp32Codec),
+        }
+    }
+
+    /// Encode one tensor for transmission (resolves, then encodes).
+    pub fn encode(
         &self,
+        role: TensorRole,
         values: &[f32],
         kind: ParamKind,
         rng: &mut Pcg64,
-    ) -> EncodedTensor {
-        match (self.weight_bits, self.quantizes(kind)) {
-            (Some(bits), true) => {
-                if let Some(l) = &self.learned_weights {
-                    if l.bits == bits {
-                        return l.encode(values, self.bucket);
-                    }
-                }
-                // weights: round-to-nearest (deterministic)
-                encode_minmax(values, bits, self.bucket, false, rng)
-            }
-            _ => EncodedTensor::fp32(values),
-        }
+    ) -> super::EncodedTensor {
+        self.codec(role, kind).encode(values, rng)
     }
 
-    /// Encode a *gradient* tensor for transmission.
-    pub fn encode_grad(
-        &self,
-        values: &[f32],
-        kind: ParamKind,
-        rng: &mut Pcg64,
-    ) -> EncodedTensor {
-        match (self.grad_bits, self.quantizes(kind)) {
-            (Some(bits), true) => {
-                if let Some(l) = &self.learned_grads {
-                    if l.bits == bits {
-                        return l.encode(values, self.bucket);
-                    }
-                }
-                encode_minmax(values, bits, self.bucket, self.stochastic_grads, rng)
-            }
-            _ => EncodedTensor::fp32(values),
-        }
-    }
-
-    /// Bytes a weight tensor of `n` elements occupies on the wire
-    /// (analytic; matches `encode_weight(...).byte_size()` exactly).
-    pub fn weight_wire_bytes(&self, n: usize, kind: ParamKind) -> usize {
-        match (self.weight_bits, self.quantizes(kind)) {
-            (Some(bits), true) => {
-                let nb = n.div_ceil(self.bucket);
-                let levels = if self.learned_weights.as_ref().map(|l| l.bits == bits).unwrap_or(false)
-                {
-                    (1usize << bits) * 4
-                } else {
-                    0
-                };
-                14 + nb * 8 + levels + (n * bits as usize).div_ceil(8)
-            }
-            _ => 14 + n * 4,
-        }
-    }
-
-    /// Bytes a gradient tensor occupies on the wire. The FSDP baseline
-    /// transmits FP16 gradients (2 bytes/elem), per the paper's setup.
-    pub fn grad_wire_bytes(&self, n: usize, kind: ParamKind) -> usize {
-        match (self.grad_bits, self.quantizes(kind)) {
-            (Some(bits), true) => {
-                let nb = n.div_ceil(self.bucket);
-                let levels = if self.learned_grads.as_ref().map(|l| l.bits == bits).unwrap_or(false)
-                {
-                    (1usize << bits) * 4
-                } else {
-                    0
-                };
-                14 + nb * 8 + levels + (n * bits as usize).div_ceil(8)
-            }
-            _ => 14 + n * 2, // FP16 baseline
-        }
+    /// Bytes a tensor of `n` elements occupies on the wire (analytic;
+    /// equals `encode(role, ..).byte_size()` exactly for every codec).
+    pub fn wire_bytes(&self, role: TensorRole, n: usize, kind: ParamKind) -> usize {
+        self.codec(role, kind).wire_bytes(n)
     }
 }
 
@@ -168,22 +148,34 @@ mod tests {
     fn baseline_passthrough() {
         let p = QuantPolicy::baseline();
         let v = randv(100);
-        let e = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(2));
+        let e = p.encode(TensorRole::Weight, &v, ParamKind::Matrix, &mut Pcg64::seeded(2));
         assert_eq!(e.scheme, Scheme::Fp32);
         let mut out = vec![];
         e.decode(&mut out);
         assert_eq!(out, v);
+        // baseline grads ride in FP16 (close, not exact)
+        let g = p.encode(TensorRole::Grad, &v, ParamKind::Matrix, &mut Pcg64::seeded(2));
+        assert_eq!(g.scheme, Scheme::Fp16);
+        g.decode(&mut out);
+        for (a, b) in out.iter().zip(&v) {
+            assert!((a - b).abs() <= b.abs() / 2048.0 + 1e-7);
+        }
     }
 
     #[test]
     fn norms_never_quantized() {
+        // §5.1's sensitivity filter: under a quantizing policy the
+        // norm/bias tensors stay exact FP32 in BOTH roles.
         let p = QuantPolicy::wg(4, 4);
         let v = randv(64);
         for kind in [ParamKind::Norm, ParamKind::Bias] {
-            let e = p.encode_weight(&v, kind, &mut Pcg64::seeded(3));
+            let e = p.encode(TensorRole::Weight, &v, kind, &mut Pcg64::seeded(3));
             assert_eq!(e.scheme, Scheme::Fp32);
-            let g = p.encode_grad(&v, kind, &mut Pcg64::seeded(3));
+            let g = p.encode(TensorRole::Grad, &v, kind, &mut Pcg64::seeded(3));
             assert_eq!(g.scheme, Scheme::Fp32);
+            let mut out = vec![];
+            g.decode(&mut out);
+            assert_eq!(out, v, "filtered grads must be lossless");
         }
     }
 
@@ -191,11 +183,28 @@ mod tests {
     fn matrices_quantized() {
         let p = QuantPolicy::wg(8, 4);
         let v = randv(2048);
-        let w = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(4));
+        let w = p.encode(TensorRole::Weight, &v, ParamKind::Matrix, &mut Pcg64::seeded(4));
         assert_eq!(w.scheme, Scheme::MinMax);
         assert_eq!(w.bits, 8);
-        let g = p.encode_grad(&v, ParamKind::Matrix, &mut Pcg64::seeded(4));
+        let g = p.encode(TensorRole::Grad, &v, ParamKind::Matrix, &mut Pcg64::seeded(4));
         assert_eq!(g.bits, 4);
+    }
+
+    #[test]
+    fn resolver_names_and_rounding_modes() {
+        use crate::quant::codecs::AnyCodec;
+        let p = QuantPolicy::wg(8, 8);
+        match p.codec(TensorRole::Weight, ParamKind::Matrix) {
+            AnyCodec::MinMax(c) => assert_eq!(c.bits(), 8),
+            other => panic!("weight codec {:?}", other.name()),
+        }
+        assert_eq!(p.codec(TensorRole::Weight, ParamKind::Norm).name(), "fp32");
+        // filtered grads under a quantizing policy: exact fp32
+        assert_eq!(p.codec(TensorRole::Grad, ParamKind::Bias).name(), "fp32");
+        // the baseline gradient stream is fp16 for every tensor kind
+        let base = QuantPolicy::baseline();
+        assert_eq!(base.codec(TensorRole::Grad, ParamKind::Matrix).name(), "fp16");
+        assert_eq!(base.codec(TensorRole::Grad, ParamKind::Norm).name(), "fp16");
     }
 
     #[test]
@@ -203,15 +212,18 @@ mod tests {
         let v = randv(3000);
         for (wb, gb) in [(8u8, 8u8), (6, 4), (4, 2)] {
             let p = QuantPolicy::wg(wb, gb);
-            let e = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(5));
-            assert_eq!(e.byte_size(), p.weight_wire_bytes(v.len(), ParamKind::Matrix));
-            let g = p.encode_grad(&v, ParamKind::Matrix, &mut Pcg64::seeded(5));
-            assert_eq!(g.byte_size(), p.grad_wire_bytes(v.len(), ParamKind::Matrix));
+            for role in [TensorRole::Weight, TensorRole::Grad] {
+                let e = p.encode(role, &v, ParamKind::Matrix, &mut Pcg64::seeded(5));
+                assert_eq!(e.byte_size(), p.wire_bytes(role, v.len(), ParamKind::Matrix));
+            }
         }
-        // baseline sizes
+        // baseline sizes: FP32 weights, FP16 grads
         let b = QuantPolicy::baseline();
-        assert_eq!(b.weight_wire_bytes(100, ParamKind::Matrix), 14 + 400);
-        assert_eq!(b.grad_wire_bytes(100, ParamKind::Matrix), 14 + 200);
+        assert_eq!(b.wire_bytes(TensorRole::Weight, 100, ParamKind::Matrix), 14 + 400);
+        assert_eq!(b.wire_bytes(TensorRole::Grad, 100, ParamKind::Matrix), 14 + 200);
+        // and the analytic size matches the real encoding there too
+        let e = b.encode(TensorRole::Grad, &v, ParamKind::Matrix, &mut Pcg64::seeded(5));
+        assert_eq!(e.byte_size(), b.wire_bytes(TensorRole::Grad, v.len(), ParamKind::Matrix));
     }
 
     #[test]
@@ -219,12 +231,12 @@ mod tests {
         let mut p = QuantPolicy::wg(4, 4);
         p.learned_weights = Some(LearnedLevels::uniform(4));
         let v = randv(1024);
-        let e = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(6));
+        let e = p.encode(TensorRole::Weight, &v, ParamKind::Matrix, &mut Pcg64::seeded(6));
         assert_eq!(e.scheme, Scheme::Learned);
         assert_eq!(e.levels.len(), 16);
         // mismatched bits -> falls back to uniform
         p.learned_weights = Some(LearnedLevels::uniform(6));
-        let e2 = p.encode_weight(&v, ParamKind::Matrix, &mut Pcg64::seeded(6));
+        let e2 = p.encode(TensorRole::Weight, &v, ParamKind::Matrix, &mut Pcg64::seeded(6));
         assert_eq!(e2.scheme, Scheme::MinMax);
     }
 }

@@ -9,7 +9,7 @@
 //! transmits FP32 weights and FP16 gradients (§6.1).
 
 use crate::model::spec::GptDims;
-use crate::quant::QuantPolicy;
+use crate::quant::{QuantPolicy, TensorRole};
 
 use super::compute::ComputeModel;
 use super::network::NetworkModel;
@@ -69,21 +69,22 @@ impl StepTimeModel {
         })
     }
 
-    /// Total wire bytes of one full-model weight transmission.
+    /// Total wire bytes of one full-model weight transmission
+    /// (analytic, via the per-tensor codec the policy resolves).
     pub fn weight_bytes(&self, policy: &QuantPolicy) -> usize {
-        self.dims
-            .param_spec()
-            .iter()
-            .map(|p| policy.weight_wire_bytes(p.numel(), p.kind))
-            .sum()
+        self.role_bytes(policy, TensorRole::Weight)
     }
 
     /// Total wire bytes of one full-model gradient transmission.
     pub fn grad_bytes(&self, policy: &QuantPolicy) -> usize {
+        self.role_bytes(policy, TensorRole::Grad)
+    }
+
+    fn role_bytes(&self, policy: &QuantPolicy, role: TensorRole) -> usize {
         self.dims
             .param_spec()
             .iter()
-            .map(|p| policy.grad_wire_bytes(p.numel(), p.kind))
+            .map(|p| policy.wire_bytes(role, p.numel(), p.kind))
             .sum()
     }
 

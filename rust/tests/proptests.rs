@@ -2,9 +2,12 @@
 //! unavailable offline; `props!` runs each property over many random
 //! cases and reports the failing seed).
 
-use qsdp::collectives::{all_gather, reduce_scatter, TrafficLedger};
-use qsdp::quant::codec::{encode_minmax, pack_bits, unpack_bits};
-use qsdp::quant::{EncodedTensor, LatticeQuantizer, MinMaxQuantizer, QuantPolicy};
+use qsdp::collectives::{Collective, LockstepFabric, TrafficLedger};
+use qsdp::quant::codec::{pack_bits, unpack_bits};
+use qsdp::quant::{
+    Codec, EncodedTensor, Fp32Codec, LatticeQuantizer, MinMaxCodec, MinMaxQuantizer, QuantPolicy,
+    TensorRole,
+};
 use qsdp::sim::Topology;
 use qsdp::util::Pcg64;
 
@@ -93,23 +96,40 @@ fn prop_wire_bytes_match_analytics() {
         let p = QuantPolicy::wg(wb, gb);
         let v = rand_vec(rng, n, 1.0);
         let kind = qsdp::model::ParamKind::Matrix;
-        let e = p.encode_weight(&v, kind, rng);
+        let e = p.encode(TensorRole::Weight, &v, kind, rng);
         assert_eq!(
             e.byte_size(),
-            p.weight_wire_bytes(n, kind),
+            p.wire_bytes(TensorRole::Weight, n, kind),
             "case {i}: w{wb} n={n}"
         );
-        let g = p.encode_grad(&v, kind, rng);
+        let g = p.encode(TensorRole::Grad, &v, kind, rng);
         assert_eq!(
             g.byte_size(),
-            p.grad_wire_bytes(n, kind),
+            p.wire_bytes(TensorRole::Grad, n, kind),
             "case {i}: g{gb} n={n}"
         );
         // encode→decode→encode is idempotent in size
         let mut dec = vec![];
         e.decode(&mut dec);
-        let e2 = p.encode_weight(&dec, kind, rng);
+        let e2 = p.encode(TensorRole::Weight, &dec, kind, rng);
         assert_eq!(e2.byte_size(), e.byte_size(), "case {i}");
+    });
+}
+
+#[test]
+fn prop_encoded_tensor_serialize_roundtrip() {
+    // Wire-format golden property: to_bytes/from_bytes is the identity
+    // and its length is byte_size(), across codecs and ragged sizes.
+    props("serde", 60, |rng, i| {
+        let n = 1 + rng.below(3000) as usize;
+        let v = rand_vec(rng, n, 1.0);
+        let bits = 1 + rng.below(8) as u8;
+        let bucket = 1 + rng.below(700) as usize;
+        let e = MinMaxCodec::new(bits, bucket, true).encode(&v, rng);
+        let bytes = e.to_bytes();
+        assert_eq!(bytes.len(), e.byte_size(), "case {i}");
+        let back = EncodedTensor::from_bytes(&bytes).unwrap();
+        assert_eq!(back, e, "case {i}: bits={bits} bucket={bucket} n={n}");
     });
 }
 
@@ -141,8 +161,9 @@ fn prop_allgather_is_concat_of_decodes() {
         let n = topo.world() * (1 + rng.below(500) as usize) + rng.below(7) as usize;
         let full = rand_vec(rng, n, 1.0);
         let bits = 2 + rng.below(7) as u8;
+        let codec = MinMaxCodec::new(bits, 256, false);
         let shards: Vec<EncodedTensor> = (0..topo.world())
-            .map(|r| encode_minmax(&full[topo.shard_range(n, r)], bits, 256, false, rng))
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], rng))
             .collect();
         let mut expect = Vec::new();
         let mut tmp = Vec::new();
@@ -151,7 +172,7 @@ fn prop_allgather_is_concat_of_decodes() {
             expect.extend_from_slice(&tmp);
         }
         let mut ledger = TrafficLedger::new();
-        let got = all_gather(&topo, &shards, &mut ledger);
+        let got = LockstepFabric::new(topo).all_gather(&shards, &mut ledger);
         assert_eq!(got, expect, "case {i}");
         if topo.nodes == 1 {
             assert_eq!(ledger.inter_bytes, 0, "case {i}");
@@ -173,7 +194,8 @@ fn prop_reduce_scatter_fp32_equals_sum() {
             }
         }
         let mut ledger = TrafficLedger::new();
-        let outs = reduce_scatter(&topo, &inputs, |s| EncodedTensor::fp32(s), &mut ledger);
+        let outs =
+            LockstepFabric::new(topo).reduce_scatter(&inputs, &Fp32Codec, rng, &mut ledger);
         let got: Vec<f32> = outs.concat();
         for (idx, (&a, &b)) in got.iter().zip(&expect).enumerate() {
             assert!(

@@ -1,0 +1,187 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io access, so the
+//! small slice of `anyhow` the codebase uses is vendored here with the
+//! same names and semantics: [`Error`], [`Result`], the [`Context`]
+//! extension trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Context is flattened into the message chain ("outer: inner"), which
+//! is all the callers rely on.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A flexible, context-carrying error (string-backed in this shim).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause, when this error wraps a std error.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: any std error converts into `Error`. (`Error` itself
+// deliberately does not implement `std::error::Error`, which keeps this
+// blanket impl coherent next to the reflexive `From<T> for T`.)
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting the error to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::*;
+
+    /// Anything that can absorb a context message into an [`Error`].
+    pub trait ErrExt {
+        fn ext_context<C: fmt::Display>(self, c: C) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> ErrExt for E {
+        fn ext_context<C: fmt::Display>(self, c: C) -> Error {
+            Error::from(self).context(c)
+        }
+    }
+
+    impl ErrExt for Error {
+        fn ext_context<C: fmt::Display>(self, c: C) -> Error {
+            self.context(c)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` (any error convertible to [`Error`]) and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ext::ErrExt> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("parsing number")?;
+        ensure!(v < 100, "value {v} too large");
+        Ok(v)
+    }
+
+    #[test]
+    fn conversion_and_context_chain() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("nope").unwrap_err();
+        assert!(e.to_string().starts_with("parsing number: "), "{e}");
+        assert!(e.source().is_some());
+        let e = parse("123").unwrap_err();
+        assert_eq!(e.to_string(), "value 123 too large");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u8> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let e2: Error = anyhow!("x = {}", 7);
+        assert_eq!(e2.to_string(), "x = 7");
+        let with: Result<u8> = None.with_context(|| format!("lazy {}", 1));
+        assert_eq!(with.unwrap_err().to_string(), "lazy 1");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flagged {}", 1);
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 1");
+    }
+}
