@@ -1,9 +1,12 @@
 //! Quickstart: the two surfaces of the crate in one file.
 //!
 //! 1. The **Codec / Collective API** — encode a tensor with the codec a
-//!    [`QuantPolicy`] resolves, push it through a pluggable fabric, and
-//!    read the byte-exact traffic ledger. This part runs with no
-//!    artifacts.
+//!    [`QuantPolicy`] resolves, push it through each of the three
+//!    registered fabrics (`lockstep` hierarchical, `flat` all-pairs,
+//!    and `async` — the threaded ring backend that moves real
+//!    serialized bytes between per-rank OS threads; select one at the
+//!    CLI with `--fabric lockstep|flat|async`), and read the byte-exact
+//!    traffic ledger. This part runs with no artifacts.
 //! 2. The **trainer** — a tiny GPT with QSDP (W8G8) on 4 simulated
 //!    workers for 30 steps vs the FSDP baseline (needs `make
 //!    artifacts` and the real PJRT backend).
@@ -14,7 +17,7 @@
 //! ```
 
 use anyhow::Result;
-use qsdp::collectives::{Collective, FlatFabric, LockstepFabric, TrafficLedger};
+use qsdp::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric, TrafficLedger};
 use qsdp::config::{parse_policy, FabricKind, RunConfig};
 use qsdp::coordinator::{Trainer, TrainerOptions};
 use qsdp::model::spec::artifacts_root;
@@ -46,13 +49,16 @@ fn codec_and_fabric_tour() {
     );
 
     // (2) collectives are backends implementing the Collective trait —
-    // same data, different traffic pattern.
+    // same data, different traffic pattern. `async` runs one OS thread
+    // per rank and ships these exact bytes over channels; all three
+    // decode to the identical gathered tensor.
     let shards: Vec<EncodedTensor> = (0..topo.world())
         .map(|r| wcodec.encode(&tensor[topo.shard_range(tensor.len(), r)], &mut rng))
         .collect();
     let lock = LockstepFabric::new(topo);
     let flat = FlatFabric::new(topo);
-    let fabrics: [&dyn Collective; 2] = [&lock, &flat];
+    let aring = AsyncFabric::new(topo);
+    let fabrics: [&dyn Collective; 3] = [&lock, &flat, &aring];
     for fabric in fabrics {
         let mut ledger = TrafficLedger::new();
         let gathered = fabric.all_gather(&shards, &mut ledger);

@@ -3,7 +3,7 @@
 //! throughput and reporting the byte-exact wire traffic each policy
 //! generates on each transport.
 
-use qsdp::collectives::{Collective, FlatFabric, LockstepFabric, TrafficLedger};
+use qsdp::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric, TrafficLedger};
 use qsdp::model::ParamKind;
 use qsdp::quant::{Codec, EncodedTensor, QuantPolicy, TensorRole};
 use qsdp::sim::{NetworkModel, Topology};
@@ -74,11 +74,12 @@ fn main() {
         );
     }
 
-    println!("== backend comparison: g8 ReduceScatter, lockstep vs flat ==");
+    println!("== backend comparison: g8 ReduceScatter, lockstep vs flat vs async ring ==");
     let policy = QuantPolicy::wg(8, 8);
     let codec = policy.codec(TensorRole::Grad, ParamKind::Matrix);
     let flat = FlatFabric::new(topo);
-    let backends: [&dyn Collective; 2] = [&fabric, &flat];
+    let aring = AsyncFabric::new(topo);
+    let backends: [&dyn Collective; 3] = [&fabric, &flat, &aring];
     for backend in backends {
         let mut ledger = TrafficLedger::new();
         let t0 = Instant::now();
@@ -91,6 +92,27 @@ fn main() {
             dt * 1e3,
             ledger.inter_bytes as f64 / (1 << 20) as f64,
             ledger.intra_bytes as f64 / (1 << 20) as f64,
+        );
+    }
+
+    println!("== async ring: threaded AllGather, host-side scaling ==");
+    // The async backend pays real thread + serialization costs; this
+    // pins how host time scales with message size on the w8 policy.
+    let codec = QuantPolicy::wg(8, 8).codec(TensorRole::Weight, ParamKind::Matrix);
+    for n in [1usize << 16, 1 << 18, 1 << 20] {
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut rng))
+            .collect();
+        let mut ledger = TrafficLedger::new();
+        let t0 = Instant::now();
+        let out = aring.all_gather(&shards, &mut ledger);
+        std::hint::black_box(&out);
+        println!(
+            "n = {:8} elems: host {:7.1} ms | {} msgs | inter {:8.2} MiB",
+            n,
+            t0.elapsed().as_secs_f64() * 1e3,
+            ledger.messages,
+            ledger.inter_bytes as f64 / (1 << 20) as f64,
         );
     }
 }

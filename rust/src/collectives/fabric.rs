@@ -16,7 +16,9 @@
 //! Both run as lockstep functions over per-rank buffers (deterministic,
 //! byte-exact accounting into a [`TrafficLedger`]) and reuse one
 //! scratch [`EncodedTensor`] + decode buffer per call — the hot loop
-//! allocates nothing per message.
+//! allocates nothing per message. The third backend,
+//! [`super::AsyncFabric`], lives in [`super::async_fabric`] and runs
+//! the same trait over real threads and byte channels.
 
 use super::ledger::TrafficLedger;
 use crate::quant::{Codec, EncodedTensor};
@@ -70,7 +72,7 @@ pub trait Collective {
 }
 
 /// Check and return the common input length of a reduce-scatter call.
-fn check_inputs(topo: &Topology, inputs: &[Vec<f32>]) -> usize {
+pub(super) fn check_inputs(topo: &Topology, inputs: &[Vec<f32>]) -> usize {
     assert_eq!(inputs.len(), topo.world(), "one input per rank");
     let n_elems = inputs[0].len();
     for i in inputs {

@@ -1,5 +1,5 @@
-//! Quantized collectives over the simulated fabric, behind the
-//! pluggable [`Collective`] transport trait.
+//! Quantized collectives behind the pluggable [`Collective`] transport
+//! trait — a three-backend registry.
 //!
 //! A backend is a *value* implementing [`Collective`]
 //! (`all_gather` / `reduce_scatter` / `all_reduce`): construct the one
@@ -10,22 +10,33 @@
 //! every message's byte size is tallied in a [`TrafficLedger`], which
 //! the network model converts to seconds.
 //!
-//! Backends:
+//! Registered backends (`--fabric lockstep|flat|async`, see
+//! [`crate::config::FabricKind`]):
 //!
 //! * [`LockstepFabric`] — the paper's hierarchical two-level NCCL-P2P
 //!   scheme (§5.1): an intra-node phase over NVLink and an inter-node
-//!   leader exchange through each node's NIC;
+//!   leader exchange through each node's NIC. Single-threaded lockstep
+//!   simulation over per-rank buffers.
 //! * [`FlatFabric`] — the non-hierarchical ablation baseline (every
-//!   rank talks to every rank).
+//!   rank talks to every rank). Same lockstep execution model.
+//! * [`AsyncFabric`] — threaded message passing: one OS thread per
+//!   rank, ring algorithms, and *only* serialized
+//!   [`crate::quant::EncodedTensor::to_bytes`] octets crossing
+//!   `std::sync::mpsc` channels. Per-rank rng streams keep stochastic
+//!   rounding reproducible regardless of interleaving, and per-link
+//!   ledgers merge into the same [`TrafficLedger`] totals. This is the
+//!   stepping stone to a real NCCL/CGX socket backend: the bytes it
+//!   moves are already the exact wire format.
 //!
-//! Both are lockstep simulations over per-rank buffers: with P logical
-//! workers in one process this is deterministic, exactly reproduces the
-//! data each rank would decode, and accounts bytes identically to a
-//! real execution. A future backend can wrap a real asynchronous
-//! transport (NCCL/CGX) behind the same trait — see ROADMAP.md.
+//! All three produce the same decoded values for lossless codecs (the
+//! cross-backend differential harness in `tests/fabric_differential.rs`
+//! pins FP32 agreement bit-for-bit and bounds the lossy codecs by their
+//! own resolution) and account bytes exactly as a real execution would.
 
+pub mod async_fabric;
 pub mod fabric;
 pub mod ledger;
 
+pub use async_fabric::AsyncFabric;
 pub use fabric::{Collective, FlatFabric, LockstepFabric};
 pub use ledger::TrafficLedger;

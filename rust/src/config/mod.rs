@@ -3,16 +3,23 @@
 //!
 //! Policy spec grammar (the axes of Tables 1–3/6):
 //!   "baseline"            — FSDP: FP32 weights, FP16 grads
+//!   "exact"               — fully lossless: FP32 weights AND FP32 grads
+//!                           (the transport-equivalence reference)
 //!   "w8g8"                — QSDP uniform quantization, 8-bit W and G
-//!   "w5g4"                — any bit pair in 1..=8; g32/w32 = uncompressed
+//!   "w5g4"                — any bit pair in 1..=8; "32" opts a role out
+//!                           of quantization and back into its baseline
+//!                           stream: w32 = FP32 weights, g32 = the FP16
+//!                           gradient stream FSDP actually ships (§6.1)
+//!                           — only "exact" carries FP32 gradients
 //!   "w5g4+learned"        — learned level tables for both
 //!   suffix "+det"         — deterministic (round-to-nearest) gradients
 //!
 //! The collective transport is likewise data: `--fabric
-//! lockstep|flat` selects the [`crate::collectives::Collective`]
-//! backend the trainer wires into its parameter store.
+//! lockstep|flat|async` selects the [`crate::collectives::Collective`]
+//! backend the trainer wires into its parameter store (`async` is the
+//! threaded ring backend, [`crate::collectives::AsyncFabric`]).
 
-use crate::collectives::{Collective, FlatFabric, LockstepFabric};
+use crate::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric};
 use crate::optim::AdamW;
 use crate::quant::QuantPolicy;
 use crate::runtime::gpt::StepVariant;
@@ -28,14 +35,22 @@ pub enum FabricKind {
     Lockstep,
     /// Flat all-pairs exchange (the ablation baseline).
     Flat,
+    /// Threaded ring backend: one OS thread per rank, serialized
+    /// messages over byte channels ([`AsyncFabric`]).
+    Async,
 }
 
 impl FabricKind {
+    /// Every registered backend, in registry order — what the
+    /// cross-fabric differential harness sweeps.
+    pub const ALL: [FabricKind; 3] = [FabricKind::Lockstep, FabricKind::Flat, FabricKind::Async];
+
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "lockstep" | "hier" | "hierarchical" => FabricKind::Lockstep,
             "flat" => FabricKind::Flat,
-            other => bail!("unknown fabric {other:?} (want lockstep|flat)"),
+            "async" | "ring" => FabricKind::Async,
+            other => bail!("unknown fabric {other:?} (want lockstep|flat|async)"),
         })
     }
 
@@ -43,6 +58,7 @@ impl FabricKind {
         match self {
             FabricKind::Lockstep => "lockstep",
             FabricKind::Flat => "flat",
+            FabricKind::Async => "async",
         }
     }
 
@@ -51,6 +67,7 @@ impl FabricKind {
         match self {
             FabricKind::Lockstep => Box::new(LockstepFabric::new(topo)),
             FabricKind::Flat => Box::new(FlatFabric::new(topo)),
+            FabricKind::Async => Box::new(AsyncFabric::new(topo)),
         }
     }
 }
@@ -130,6 +147,8 @@ pub fn parse_policy(spec: &str) -> Result<QuantPolicy> {
     }
     let mut policy = if base == "baseline" || base == "fsdp" {
         QuantPolicy::baseline()
+    } else if base == "exact" {
+        QuantPolicy::exact()
     } else {
         let rest = base
             .strip_prefix('w')
@@ -169,13 +188,16 @@ pub fn parse_policy(spec: &str) -> Result<QuantPolicy> {
 /// Render a policy back to its spec string (for logs/tables).
 pub fn policy_name(p: &QuantPolicy) -> String {
     if p.is_baseline() {
-        return "baseline".into();
+        return if p.exact_grads { "exact" } else { "baseline" }.into();
     }
     let w = p.weight_bits.map(|b| b.to_string()).unwrap_or("32".into());
     let g = p.grad_bits.map(|b| b.to_string()).unwrap_or("32".into());
     let mut s = format!("w{w}g{g}");
     if p.learned_weights.is_some() || p.learned_grads.is_some() {
         s.push_str("+learned");
+    }
+    if p.grad_bits.is_some() && !p.stochastic_grads {
+        s.push_str("+det");
     }
     s
 }
@@ -189,6 +211,17 @@ mod tests {
         let p = parse_policy("baseline").unwrap();
         assert!(p.is_baseline());
         assert_eq!(policy_name(&p), "baseline");
+    }
+
+    #[test]
+    fn parses_exact() {
+        let p = parse_policy("exact").unwrap();
+        assert!(p.is_baseline());
+        assert!(p.exact_grads);
+        assert_eq!(policy_name(&p), "exact");
+        use crate::model::spec::ParamKind;
+        use crate::quant::{Codec, TensorRole};
+        assert_eq!(p.codec(TensorRole::Grad, ParamKind::Matrix).name(), "fp32");
     }
 
     #[test]
@@ -225,6 +258,10 @@ mod tests {
     fn det_suffix() {
         let p = parse_policy("w8g8+det").unwrap();
         assert!(!p.stochastic_grads);
+        // the label must distinguish det runs from stochastic ones
+        assert_eq!(policy_name(&p), "w8g8+det");
+        let p = parse_policy("w4g4+learned+det").unwrap();
+        assert_eq!(policy_name(&p), "w4g4+learned+det");
     }
 
     #[test]
@@ -255,9 +292,11 @@ mod tests {
         assert_eq!(FabricKind::parse("lockstep").unwrap(), FabricKind::Lockstep);
         assert_eq!(FabricKind::parse("hier").unwrap(), FabricKind::Lockstep);
         assert_eq!(FabricKind::parse("flat").unwrap(), FabricKind::Flat);
-        assert!(FabricKind::parse("ring").is_err());
+        assert_eq!(FabricKind::parse("async").unwrap(), FabricKind::Async);
+        assert_eq!(FabricKind::parse("ring").unwrap(), FabricKind::Async);
+        assert!(FabricKind::parse("mesh").is_err());
         let topo = Topology::new(2, 2);
-        for kind in [FabricKind::Lockstep, FabricKind::Flat] {
+        for kind in FabricKind::ALL {
             let fabric = kind.build(topo);
             assert_eq!(fabric.name(), kind.name());
             assert_eq!(fabric.topo(), topo);
@@ -266,5 +305,9 @@ mod tests {
             "train --fabric flat".split_whitespace().map(|s| s.to_string()),
         );
         assert_eq!(RunConfig::from_args(&a).unwrap().fabric, FabricKind::Flat);
+        let a = Args::parse(
+            "train --fabric async".split_whitespace().map(|s| s.to_string()),
+        );
+        assert_eq!(RunConfig::from_args(&a).unwrap().fabric, FabricKind::Async);
     }
 }

@@ -10,7 +10,7 @@
 //!      step as the grid coarsens.
 
 use super::traindrv::{base_cfg, run_job};
-use crate::collectives::{Collective, FlatFabric, LockstepFabric, TrafficLedger};
+use crate::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric, TrafficLedger};
 use crate::quant::qsgd::encode_sparse;
 use crate::quant::{Codec, MinMaxCodec, QuantPolicy};
 use crate::sim::Topology;
@@ -57,7 +57,12 @@ fn ablation_bucket_size(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// A2: hierarchical vs flat ReduceScatter at 4 bits on a 4x4 cluster.
+/// A2: hierarchical vs flat vs threaded-ring ReduceScatter on a 4x4
+/// cluster. Inter-node bytes order as hier < ring < flat (on n nodes x
+/// g GPUs the hierarchical scheme crosses the NIC P·(n-1) times per
+/// shard-sized message, the ring ~P·n - n, flat P·(P-g)), while the
+/// ring re-encodes partials at every hop and so accumulates the most
+/// quantization noise — the table makes all three trade-offs visible.
 fn ablation_hierarchical(_args: &Args) -> Result<()> {
     let topo = Topology::new(4, 4);
     let n = 1 << 16;
@@ -84,17 +89,24 @@ fn ablation_hierarchical(_args: &Args) -> Result<()> {
         let mut rng_f = Pcg64::seeded(21);
         let mut lf = TrafficLedger::new();
         let f = FlatFabric::new(topo).reduce_scatter(&inputs, &codec, &mut rng_f, &mut lf);
+        let mut rng_a = Pcg64::seeded(21);
+        let mut la = TrafficLedger::new();
+        let a = AsyncFabric::new(topo).reduce_scatter(&inputs, &codec, &mut rng_a, &mut la);
         rows.push(vec![
             format!("{bits}"),
             format!("{:.2}", lh.inter_bytes as f64 / (1 << 20) as f64),
             format!("{:.2}", lf.inter_bytes as f64 / (1 << 20) as f64),
+            format!("{:.2}", la.inter_bytes as f64 / (1 << 20) as f64),
             format!("{:.5}", rel_l2_err(&h.concat(), &expect)),
             format!("{:.5}", rel_l2_err(&f.concat(), &expect)),
+            format!("{:.5}", rel_l2_err(&a.concat(), &expect)),
         ]);
     }
-    let headers = ["bits", "hier_MiB", "flat_MiB", "hier_err", "flat_err"];
+    let headers = [
+        "bits", "hier_MiB", "flat_MiB", "ring_MiB", "hier_err", "flat_err", "ring_err",
+    ];
     println!(
-        "Ablation A2 — hierarchical vs flat ReduceScatter, 4x4 ranks (paper §5.1 uses hierarchical to cut inter-node transmissions):\n{}",
+        "Ablation A2 — hierarchical vs flat vs threaded-ring ReduceScatter, 4x4 ranks (paper §5.1 uses hierarchical to cut inter-node transmissions; the ring re-encodes per hop):\n{}",
         table::render(&headers, &rows)
     );
     table::write_csv("results/ablation_hier.csv", &headers, &rows)?;

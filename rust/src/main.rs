@@ -15,7 +15,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: qsdp <command> [flags]\n\
          commands:\n  \
-         train     --config tiny --policy w8g8|baseline --steps N --workers P\n  \
+         train     --config tiny --policy w8g8|baseline|exact --steps N --workers P\n            \
+         --fabric lockstep|flat|async\n  \
          table1 | table2 | table3 | table5 | table6\n  \
          figure3 | figure4 | figure6 | figure7\n  \
          theory    [--dim N] [--kappa K]\n  \

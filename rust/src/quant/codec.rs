@@ -219,6 +219,11 @@ impl EncodedTensor {
                 anyhow::ensure!(bits == 16, "{scheme:?} message with bits={bits}")
             }
         }
+        // Passthrough schemes carry no buckets; their encoders always
+        // write bucket=0, so anything else is header corruption.
+        if matches!(scheme, Scheme::Fp32 | Scheme::Fp16) {
+            anyhow::ensure!(bucket == 0, "{scheme:?} message with bucket={bucket} (want 0)");
+        }
         anyhow::ensure!(
             n <= bytes.len().saturating_mul(8),
             "implausible element count {n} for a {}-byte message",

@@ -30,7 +30,12 @@ use super::minmax::{minmax4, BucketMeta, MinMaxQuantizer};
 use crate::util::Pcg64;
 
 /// A wire codec: encode/decode f32 tensors with exact byte accounting.
-pub trait Codec {
+///
+/// `Sync` is a supertrait because transports may share one codec across
+/// per-rank worker threads (the threaded ring backend encodes on every
+/// rank concurrently); every built-in codec is plain data, so this
+/// costs implementations nothing.
+pub trait Codec: Sync {
     /// Short stable identifier (for logs and tables).
     fn name(&self) -> &'static str;
 

@@ -41,6 +41,12 @@ pub struct QuantPolicy {
     /// the bit-width matches (§5.2: only worthwhile for ≤ 6 bits).
     pub learned_weights: Option<LearnedLevels>,
     pub learned_grads: Option<LearnedLevels>,
+    /// Ship uncompressed gradients in exact FP32 instead of the FSDP
+    /// baseline's FP16 stream (`grad_bits == None` only). This is the
+    /// reference configuration the cross-fabric differential tests use:
+    /// with a lossless codec on both roles, every transport backend
+    /// must produce identical training trajectories.
+    pub exact_grads: bool,
 }
 
 impl QuantPolicy {
@@ -53,7 +59,16 @@ impl QuantPolicy {
             stochastic_grads: false,
             learned_weights: None,
             learned_grads: None,
+            exact_grads: false,
         }
+    }
+
+    /// Fully lossless policy: FP32 weights **and** FP32 gradients.
+    /// Unlike [`Self::baseline`] (whose gradients ride in FP16, what
+    /// FSDP actually ships), every tensor is carried exactly — the
+    /// reference point for transport-equivalence tests.
+    pub fn exact() -> Self {
+        QuantPolicy { exact_grads: true, ..Self::baseline() }
     }
 
     /// QSDP defaults: W8G8, bucket 1024 (paper Table 1).
@@ -70,6 +85,7 @@ impl QuantPolicy {
             stochastic_grads: true,
             learned_weights: None,
             learned_grads: None,
+            exact_grads: false,
         }
     }
 
@@ -90,7 +106,8 @@ impl QuantPolicy {
     ///   `stochastic_grads`);
     /// * baseline gradient stream (`grad_bits == None`): FP16, what
     ///   FSDP actually ships (§6.1) and what the analytic sizing has
-    ///   always charged — 2 bytes/elem;
+    ///   always charged — 2 bytes/elem — unless `exact_grads` asks for
+    ///   the lossless FP32 stream;
     /// * everything else (weights without a bit-width, and norm/bias
     ///   tensors filtered by §5.1's sensitivity rule): exact FP32.
     pub fn codec(&self, role: TensorRole, kind: ParamKind) -> AnyCodec {
@@ -107,7 +124,7 @@ impl QuantPolicy {
                 }
                 AnyCodec::MinMax(MinMaxCodec::new(b, self.bucket, stochastic))
             }
-            _ if role == TensorRole::Grad && self.grad_bits.is_none() => {
+            _ if role == TensorRole::Grad && self.grad_bits.is_none() && !self.exact_grads => {
                 AnyCodec::Fp16(Fp16Codec)
             }
             _ => AnyCodec::Fp32(Fp32Codec),
@@ -159,6 +176,20 @@ mod tests {
         g.decode(&mut out);
         for (a, b) in out.iter().zip(&v) {
             assert!((a - b).abs() <= b.abs() / 2048.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn exact_policy_is_lossless_on_both_roles() {
+        let p = QuantPolicy::exact();
+        assert!(p.is_baseline(), "exact is a baseline variant (no bit-widths)");
+        let v = randv(100);
+        for role in [TensorRole::Weight, TensorRole::Grad] {
+            let e = p.encode(role, &v, ParamKind::Matrix, &mut Pcg64::seeded(9));
+            assert_eq!(e.scheme, Scheme::Fp32, "{role:?}");
+            let mut out = vec![];
+            e.decode(&mut out);
+            assert_eq!(out, v, "{role:?} must roundtrip exactly");
         }
     }
 

@@ -1,0 +1,437 @@
+//! Cross-fabric differential harness.
+//!
+//! Every registered `Collective` backend (`FabricKind::ALL`: lockstep,
+//! flat, async-ring) is run through the same seeded workloads and held
+//! to the same contract:
+//!
+//! * **Lossless codecs agree bit-for-bit.** With FP32 on the wire a
+//!   transport may not change a single value. At world = 2 summation
+//!   order is immaterial (FP addition is commutative), so all three
+//!   backends must agree exactly on every primitive; AllGather — a pure
+//!   decode + concatenate — must agree exactly on *any* topology and
+//!   *any* codec, because the shards are pre-encoded bytes.
+//! * **Lossy codecs agree statistically.** Stochastic MinMax / Lattice
+//!   error is bounded by the codec's own resolution (grid step derived
+//!   from the bit-width carried in the wire format) times the number of
+//!   encodes a backend performs — per-element, in L2, and in mean
+//!   (unbiasedness).
+//! * **The async ring's ledger is analytic.** A ring on an `n × g`
+//!   cluster has exactly `n` node-crossing links; each block traverses
+//!   all links except one. The threaded backend's `TrafficLedger` must
+//!   equal those closed-form byte counts exactly, for every codec.
+//!
+//! This is the test discipline SDP4Bit applies to its sharded
+//! quantization (equivalence against an uncompressed reference),
+//! pointed at the transport layer.
+
+use qsdp::collectives::{AsyncFabric, Collective, TrafficLedger};
+use qsdp::config::FabricKind;
+use qsdp::quant::{
+    Codec, EncodedTensor, Fp16Codec, Fp32Codec, LatticeCodec, LearnedCodec, LearnedLevels,
+    MinMaxCodec,
+};
+use qsdp::sim::Topology;
+use qsdp::util::{stats::rel_l2_err, Pcg64};
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn sum_of(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let mut expect = vec![0.0f32; inputs[0].len()];
+    for i in inputs {
+        for (a, &x) in expect.iter_mut().zip(i) {
+            *a += x;
+        }
+    }
+    expect
+}
+
+/// Every registered backend, built for `topo`.
+fn fabrics(topo: Topology) -> Vec<Box<dyn Collective>> {
+    FabricKind::ALL.iter().map(|k| k.build(topo)).collect()
+}
+
+/// Does the ring link `r -> r+1 (mod P)` cross a node boundary?
+fn ring_link_is_inter(topo: Topology, r: usize) -> bool {
+    topo.node_of(r) != topo.node_of((r + 1) % topo.world())
+}
+
+/// A representative codec zoo: every wire scheme the repo ships.
+fn codec_zoo() -> Vec<(&'static str, Box<dyn Codec>)> {
+    vec![
+        ("fp32", Box::new(Fp32Codec)),
+        ("fp16", Box::new(Fp16Codec)),
+        ("minmax8-stoch", Box::new(MinMaxCodec::new(8, 256, true))),
+        ("minmax4-det", Box::new(MinMaxCodec::new(4, 64, false))),
+        ("learned3", Box::new(LearnedCodec::new(LearnedLevels::uniform(3), 128))),
+        ("lattice", Box::new(LatticeCodec::new(0.05, 256))),
+    ]
+}
+
+#[test]
+fn fabric_differential_fp32_bit_exact_world2() {
+    // World = 2: FP addition is commutative, so the three backends'
+    // different accumulation orders collapse to the same rounding —
+    // a lossless codec must make them agree bit-for-bit on every
+    // primitive.
+    for topo in [Topology::new(2, 1), Topology::new(1, 2)] {
+        let n = 103;
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|r| rand_vec(n, 10 + r as u64)).collect();
+        let full = rand_vec(n, 99);
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| EncodedTensor::fp32(&full[topo.shard_range(n, r)]))
+            .collect();
+        let mut gathered: Vec<Vec<f32>> = Vec::new();
+        let mut reduced: Vec<Vec<Vec<f32>>> = Vec::new();
+        let mut allreduced: Vec<Vec<f32>> = Vec::new();
+        for fabric in fabrics(topo) {
+            let mut ledger = TrafficLedger::new();
+            gathered.push(fabric.all_gather(&shards, &mut ledger));
+            reduced.push(fabric.reduce_scatter(
+                &inputs,
+                &Fp32Codec,
+                &mut Pcg64::seeded(1),
+                &mut ledger,
+            ));
+            allreduced.push(fabric.all_reduce(
+                &inputs,
+                &Fp32Codec,
+                &Fp32Codec,
+                &mut Pcg64::seeded(2),
+                &mut ledger,
+            ));
+        }
+        for i in 1..gathered.len() {
+            let name = FabricKind::ALL[i].name();
+            assert_eq!(gathered[i], gathered[0], "{name}: all_gather diverged");
+            assert_eq!(reduced[i], reduced[0], "{name}: reduce_scatter diverged");
+            assert_eq!(allreduced[i], allreduced[0], "{name}: all_reduce diverged");
+        }
+        // and the shared result is the true sum / the true tensor
+        assert_eq!(gathered[0], full);
+        let got: Vec<f32> = reduced[0].concat();
+        let expect = sum_of(&inputs);
+        for (a, &b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn fabric_differential_all_gather_bit_exact_any_codec() {
+    // AllGather moves pre-encoded self-describing messages; a backend
+    // only forwards and decodes them. Whatever the codec — including
+    // stochastic ones, whose noise is already frozen into the payload —
+    // every backend must decode the identical tensor on any topology.
+    for topo in [Topology::new(2, 3), Topology::new(4, 2), Topology::new(1, 5)] {
+        let n = 1037;
+        let full = rand_vec(n, 3);
+        for (cname, codec) in codec_zoo() {
+            let mut rng = Pcg64::seeded(17);
+            let shards: Vec<EncodedTensor> = (0..topo.world())
+                .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut rng))
+                .collect();
+            let mut outs: Vec<Vec<f32>> = Vec::new();
+            for fabric in fabrics(topo) {
+                let mut ledger = TrafficLedger::new();
+                outs.push(fabric.all_gather(&shards, &mut ledger));
+            }
+            for i in 1..outs.len() {
+                assert_eq!(
+                    outs[i],
+                    outs[0],
+                    "{}: codec {cname} decoded differently than lockstep",
+                    FabricKind::ALL[i].name()
+                );
+            }
+            assert_eq!(outs[0].len(), n, "codec {cname}");
+        }
+    }
+}
+
+#[test]
+fn fabric_differential_fp32_reduce_near_exact_any_world() {
+    // Beyond world 2 the backends accumulate in different orders, so
+    // FP32 agreement is up to rounding: a few ULPs per element, never
+    // more. This pins the transports to the same mathematical sum.
+    for topo in [Topology::new(2, 2), Topology::new(2, 3), Topology::new(1, 4)] {
+        let n = 997; // prime: ragged shards everywhere
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|r| rand_vec(n, 20 + r as u64)).collect();
+        let expect = sum_of(&inputs);
+        for fabric in fabrics(topo) {
+            let mut ledger = TrafficLedger::new();
+            let outs = fabric.reduce_scatter(
+                &inputs,
+                &Fp32Codec,
+                &mut Pcg64::seeded(4),
+                &mut ledger,
+            );
+            let got: Vec<f32> = outs.concat();
+            assert_eq!(got.len(), n, "{}", fabric.name());
+            for (i, (a, &b)) in got.iter().zip(&expect).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                    "{}: elem {i}: {a} vs {b}",
+                    fabric.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fabric_differential_stochastic_minmax_within_codec_bound() {
+    // Statistical agreement under a stochastic codec. Per encode, the
+    // error of bucketed min-max rounding is strictly below one grid
+    // step = range / (2^bits - 1), the resolution the wire format
+    // carries. A backend performs at most P encodes per element-path
+    // (flat: one per rank; lockstep: one per node; async ring: one per
+    // hop, P-1), so P * step bounds the per-element error of ANY
+    // backend, with the empirical range of the true sum as a
+    // conservative cap on every partial's bucket range (safety 2x).
+    let topo = Topology::new(2, 2);
+    let p = topo.world();
+    let n = 4096;
+    let bits = 8u8;
+    let inputs: Vec<Vec<f32>> = (0..p).map(|r| rand_vec(n, 30 + r as u64)).collect();
+    let expect = sum_of(&inputs);
+    let (lo, hi) = expect
+        .iter()
+        .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+    let step = (hi - lo) / ((1u32 << bits) - 1) as f32;
+    let bound = 2.0 * p as f32 * step;
+    let codec = MinMaxCodec::new(bits, 1024, true);
+    for fabric in fabrics(topo) {
+        let mut ledger = TrafficLedger::new();
+        let outs =
+            fabric.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(5), &mut ledger);
+        let got: Vec<f32> = outs.concat();
+        let mut mean_err = 0.0f64;
+        for (i, (a, &b)) in got.iter().zip(&expect).enumerate() {
+            let err = a - b;
+            assert!(
+                err.abs() <= bound,
+                "{}: elem {i} err {err} > codec bound {bound}",
+                fabric.name()
+            );
+            mean_err += err as f64;
+        }
+        mean_err /= n as f64;
+        // stochastic rounding is unbiased: the mean error must be far
+        // below the per-element resolution
+        assert!(
+            mean_err.abs() < 0.1 * step as f64,
+            "{}: biased reduce (mean err {mean_err}, step {step})",
+            fabric.name()
+        );
+        assert!(
+            rel_l2_err(&got, &expect) < 0.06,
+            "{}: rel err too large",
+            fabric.name()
+        );
+    }
+}
+
+#[test]
+fn fabric_differential_lattice_within_codec_bound() {
+    // The lattice codec has a hard per-encode error of delta/2, so
+    // P * delta/2 is a strict cross-backend bound (async: P-1 hops,
+    // flat: P rank encodes, lockstep: one per node).
+    let topo = Topology::new(2, 2);
+    let p = topo.world();
+    let n = 2048;
+    let delta = 0.05f32;
+    let inputs: Vec<Vec<f32>> = (0..p).map(|r| rand_vec(n, 50 + r as u64)).collect();
+    let expect = sum_of(&inputs);
+    let bound = p as f32 * delta / 2.0 + 1e-3;
+    let codec = LatticeCodec::new(delta, 256);
+    for fabric in fabrics(topo) {
+        let mut ledger = TrafficLedger::new();
+        let outs =
+            fabric.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(6), &mut ledger);
+        let got: Vec<f32> = outs.concat();
+        for (i, (a, &b)) in got.iter().zip(&expect).enumerate() {
+            assert!(
+                (a - b).abs() <= bound,
+                "{}: elem {i}: {a} vs {b} exceeds {bound}",
+                fabric.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fabric_differential_world1_lossy_bit_identical() {
+    // World 1 is the degenerate corner where "the transport is
+    // invisible" must hold EXACTLY even for lossy codecs: every backend
+    // applies the codec once from the caller's rng stream, so a
+    // stochastic quantizer produces the identical bits on all three.
+    let topo = Topology::new(1, 1);
+    let n = 777;
+    let inputs = vec![rand_vec(n, 12)];
+    let codec = MinMaxCodec::new(4, 64, true);
+    let mut outs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for fabric in fabrics(topo) {
+        let mut ledger = TrafficLedger::new();
+        outs.push(fabric.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(13), &mut ledger));
+        assert_eq!(ledger.total_bytes(), 0, "{}: world 1 has no wire", fabric.name());
+    }
+    for i in 1..outs.len() {
+        assert_eq!(
+            outs[i],
+            outs[0],
+            "{}: world-1 lossy reduce diverged",
+            FabricKind::ALL[i].name()
+        );
+    }
+    // quantized once, so close to (not exactly) the input; 4-bit
+    // stochastic rounding carries ~step/sqrt(6) rms noise (~0.12 rel)
+    assert_eq!(outs[0][0].len(), n);
+    let err = rel_l2_err(&outs[0][0], &inputs[0]);
+    assert!((0.001..0.3).contains(&err), "one 4-bit quantization pass expected, err {err}");
+}
+
+#[test]
+fn fabric_differential_async_traffic_matches_ring_analytics() {
+    // Satellite: the threaded backend's ledger equals the closed-form
+    // ring byte counts for every codec.
+    //
+    // AllGather: block i (s_i wire bytes) starts at rank i and crosses
+    // links i, i+1, .., i+P-2 — every ring link except (i-1) -> i.
+    // ReduceScatter: block b is sent by ranks b+1 .. b+P-1 over links
+    // b+1, .., b+P-1 — every link except b -> b+1 — at
+    // codec.wire_bytes(len_b) bytes per hop.
+    for topo in [Topology::new(2, 2), Topology::new(2, 3), Topology::new(1, 4), Topology::new(1, 1)]
+    {
+        let p = topo.world();
+        let n = 1009; // prime => ragged blocks on every world size
+        let full = rand_vec(n, 7);
+        let inputs: Vec<Vec<f32>> =
+            (0..p).map(|r| rand_vec(n, 80 + r as u64)).collect();
+        for (cname, codec) in codec_zoo() {
+            let fabric = AsyncFabric::new(topo);
+            // --- AllGather ---
+            let mut rng = Pcg64::seeded(21);
+            let shards: Vec<EncodedTensor> = (0..p)
+                .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut rng))
+                .collect();
+            let mut ledger = TrafficLedger::new();
+            fabric.all_gather(&shards, &mut ledger);
+            let mut expect_ag = TrafficLedger::new();
+            if p > 1 {
+                for (i, s) in shards.iter().enumerate() {
+                    for k in 0..p - 1 {
+                        expect_ag.record(s.byte_size(), ring_link_is_inter(topo, (i + k) % p));
+                    }
+                }
+            }
+            assert_eq!(
+                ledger, expect_ag,
+                "all_gather ledger mismatch: codec {cname}, topo {topo:?}"
+            );
+            // --- ReduceScatter ---
+            let mut ledger = TrafficLedger::new();
+            fabric.reduce_scatter(&inputs, codec.as_ref(), &mut Pcg64::seeded(22), &mut ledger);
+            let mut expect_rs = TrafficLedger::new();
+            if p > 1 {
+                for b in 0..p {
+                    let m = codec.wire_bytes(topo.shard_range(n, b).len());
+                    for k in 1..p {
+                        expect_rs.record(m, ring_link_is_inter(topo, (b + k) % p));
+                    }
+                }
+            }
+            assert_eq!(
+                ledger, expect_rs,
+                "reduce_scatter ledger mismatch: codec {cname}, topo {topo:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fabric_differential_ragged_prime_reduce_scatter() {
+    // Satellite regression: the ring schedule must not assume
+    // len % ranks == 0. Prime tensor sizes give maximally ragged
+    // blocks, including empty ones when n < P.
+    let topo = Topology::new(2, 3);
+    let p = topo.world();
+    for n in [1009usize, 101, 13, 5] {
+        let inputs: Vec<Vec<f32>> = (0..p).map(|r| rand_vec(n, 90 + r as u64)).collect();
+        let expect = sum_of(&inputs);
+        for fabric in fabrics(topo) {
+            let mut ledger = TrafficLedger::new();
+            let outs = fabric.reduce_scatter(
+                &inputs,
+                &Fp32Codec,
+                &mut Pcg64::seeded(8),
+                &mut ledger,
+            );
+            let mut covered = 0usize;
+            for (r, shard) in outs.iter().enumerate() {
+                let range = topo.shard_range(n, r);
+                assert_eq!(
+                    shard.len(),
+                    range.len(),
+                    "{}: n={n} rank {r} shard length",
+                    fabric.name()
+                );
+                covered += shard.len();
+                for (a, &b) in shard.iter().zip(&expect[range]) {
+                    assert!(
+                        (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                        "{}: n={n} rank {r}",
+                        fabric.name()
+                    );
+                }
+            }
+            assert_eq!(covered, n, "{}: shards must partition [0,{n})", fabric.name());
+        }
+        // quantized ring on the same ragged sizes: bounded, not exact
+        let mut ledger = TrafficLedger::new();
+        let outs = AsyncFabric::new(topo).reduce_scatter(
+            &inputs,
+            &MinMaxCodec::new(8, 64, true),
+            &mut Pcg64::seeded(9),
+            &mut ledger,
+        );
+        let got: Vec<f32> = outs.concat();
+        assert_eq!(got.len(), n);
+        assert!(rel_l2_err(&got, &expect) < 0.1, "n={n}");
+    }
+}
+
+#[test]
+fn fabric_differential_async_seed_reproducibility() {
+    // Two runs from the same caller seed must be bit-identical —
+    // including the ledger — independent of thread scheduling; a
+    // different seed must draw different stochastic noise.
+    let topo = Topology::new(2, 2);
+    let n = 2048;
+    let inputs: Vec<Vec<f32>> =
+        (0..topo.world()).map(|r| rand_vec(n, 100 + r as u64)).collect();
+    let codec = MinMaxCodec::new(4, 128, true);
+    let run = |seed: u64| {
+        let mut ledger = TrafficLedger::new();
+        let outs = AsyncFabric::new(topo).reduce_scatter(
+            &inputs,
+            &codec,
+            &mut Pcg64::seeded(seed),
+            &mut ledger,
+        );
+        (outs, ledger)
+    };
+    let (a1, l1) = run(42);
+    let (a2, l2) = run(42);
+    assert_eq!(a1, a2, "same seed must reproduce bit-for-bit");
+    assert_eq!(l1, l2);
+    let (b, lb) = run(43);
+    assert_eq!(l1, lb, "traffic is seed-independent");
+    assert_ne!(a1, b, "different seeds must draw different rounding noise");
+}

@@ -2,7 +2,7 @@
 //! training at world = 1, QSDP-vs-baseline accuracy, in-graph vs
 //! on-the-wire quantization cross-check, and failure injection.
 
-use qsdp::config::{parse_policy, RunConfig};
+use qsdp::config::{parse_policy, FabricKind, RunConfig};
 use qsdp::coordinator::{Trainer, TrainerOptions};
 use qsdp::data::{MarkovCorpus, Sampler};
 use qsdp::model::spec::artifacts_root;
@@ -54,6 +54,34 @@ fn trainer_is_deterministic() {
     let a = run(eng.clone());
     let b = run(eng);
     assert_eq!(a, b, "same seed must give identical loss sequences");
+}
+
+#[test]
+fn fabric_trainer_fp32_loss_identical_across_backends() {
+    // The transport must be invisible to the math: with the fully
+    // lossless `exact` policy (FP32 weights AND FP32 grads) and the
+    // same seed, every registered fabric — including the threaded
+    // async ring, whose payloads really cross thread + byte
+    // boundaries — must produce the identical loss trajectory.
+    // World = 2 keeps FP32 summation order immaterial (commutativity),
+    // so "identical" here is exact equality, not a tolerance.
+    if skip() {
+        return;
+    }
+    let eng = Arc::new(Engine::cpu().unwrap());
+    let run = |kind: FabricKind, eng: Arc<Engine>| {
+        let mut c = cfg("exact", 6, Topology::new(2, 1));
+        c.fabric = kind;
+        let mut tr =
+            Trainer::new(eng, &artifacts_root(), c, TrainerOptions::default()).unwrap();
+        tr.run(6).unwrap();
+        tr.log.steps.iter().map(|r| r.loss).collect::<Vec<_>>()
+    };
+    let lockstep = run(FabricKind::Lockstep, eng.clone());
+    let flat = run(FabricKind::Flat, eng.clone());
+    let ring = run(FabricKind::Async, eng);
+    assert_eq!(lockstep, flat, "flat fabric changed the FP32 loss trajectory");
+    assert_eq!(lockstep, ring, "async fabric changed the FP32 loss trajectory");
 }
 
 #[test]

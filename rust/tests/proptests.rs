@@ -3,10 +3,10 @@
 //! cases and reports the failing seed).
 
 use qsdp::collectives::{Collective, LockstepFabric, TrafficLedger};
-use qsdp::quant::codec::{pack_bits, unpack_bits};
+use qsdp::quant::codec::{pack_bits, unpack_bits, HEADER_BYTES};
 use qsdp::quant::{
-    Codec, EncodedTensor, Fp32Codec, LatticeQuantizer, MinMaxCodec, MinMaxQuantizer, QuantPolicy,
-    TensorRole,
+    Codec, EncodedTensor, Fp16Codec, Fp32Codec, LatticeCodec, LatticeQuantizer, LearnedCodec,
+    LearnedLevels, MinMaxCodec, MinMaxQuantizer, QuantPolicy, TensorRole,
 };
 use qsdp::sim::Topology;
 use qsdp::util::Pcg64;
@@ -130,6 +130,84 @@ fn prop_encoded_tensor_serialize_roundtrip() {
         assert_eq!(bytes.len(), e.byte_size(), "case {i}");
         let back = EncodedTensor::from_bytes(&bytes).unwrap();
         assert_eq!(back, e, "case {i}: bits={bits} bucket={bucket} n={n}");
+    });
+}
+
+#[test]
+fn prop_from_bytes_corruption_never_panics() {
+    // Wire robustness: a message mangled in flight must parse to a
+    // clean `Err` (or, for payload-content corruption that leaves the
+    // structure valid, to a message that still decodes sanely) — never
+    // a panic and never an absurd allocation. Exercised over every
+    // scheme the repo can put on the wire.
+    props("corrupt", 40, |rng, i| {
+        let n = 64 + rng.below(512) as usize;
+        let v = rand_vec(rng, n, 1.0);
+        let bucket = 1 + rng.below(300) as usize;
+        let codec: Box<dyn Codec> = match rng.below(5) {
+            0 => Box::new(Fp32Codec),
+            1 => Box::new(Fp16Codec),
+            2 => Box::new(MinMaxCodec::new(1 + rng.below(8) as u8, bucket, true)),
+            3 => Box::new(LearnedCodec::new(
+                LearnedLevels::uniform(1 + rng.below(8) as u8),
+                bucket,
+            )),
+            _ => Box::new(LatticeCodec::new(0.1, bucket)),
+        };
+        let bytes = codec.encode(&v, rng).to_bytes();
+
+        // (a) every truncation is rejected, never a panic
+        for cut in [
+            0usize,
+            1,
+            HEADER_BYTES - 1,
+            HEADER_BYTES,
+            bytes.len().saturating_sub(7),
+            bytes.len() - 1,
+        ] {
+            assert!(
+                EncodedTensor::from_bytes(&bytes[..cut]).is_err(),
+                "case {i} ({}): truncation to {cut} bytes parsed",
+                codec.name()
+            );
+        }
+
+        // (b) single-bit flips of the scheme tag or bits field are
+        // always structurally inconsistent with the rest of the header
+        assert!(bytes.len() > HEADER_BYTES, "payload-bearing message expected");
+        for byte in [0usize, 1] {
+            for bit in 0..8u8 {
+                let mut bad = bytes.clone();
+                bad[byte] ^= 1u8 << bit;
+                assert!(
+                    EncodedTensor::from_bytes(&bad).is_err(),
+                    "case {i} ({}): header byte {byte} flip bit {bit} parsed",
+                    codec.name()
+                );
+            }
+        }
+
+        // (c) arbitrary single-byte corruption anywhere (header-length
+        // field, bucket field, bucket meta, level table, payload): no
+        // panic, no implausible element count, and any message that
+        // does parse is internally consistent and decodes to exactly
+        // `n` values without panicking.
+        for _ in 0..25 {
+            let pos = rng.below(bytes.len() as u64) as usize;
+            let mut bad = bytes.clone();
+            bad[pos] ^= (1 + rng.below(255)) as u8;
+            if let Ok(parsed) = EncodedTensor::from_bytes(&bad) {
+                assert_eq!(parsed.byte_size(), bad.len(), "case {i}: size drift");
+                assert!(
+                    parsed.n <= bad.len() * 8,
+                    "case {i}: implausible element count {} survived parsing",
+                    parsed.n
+                );
+                let mut out = Vec::new();
+                parsed.decode(&mut out);
+                assert_eq!(out.len(), parsed.n, "case {i}: decode length drift");
+            }
+        }
     });
 }
 
@@ -263,6 +341,12 @@ fn prop_policy_spec_roundtrip() {
         assert_eq!(
             qsdp::config::policy_name(&p2),
             format!("{spec}+learned"),
+            "case {i}"
+        );
+        let p3 = qsdp::config::parse_policy(&format!("{spec}+det")).unwrap();
+        assert_eq!(
+            qsdp::config::policy_name(&p3),
+            format!("{spec}+det"),
             "case {i}"
         );
     });
