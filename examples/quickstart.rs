@@ -88,6 +88,7 @@ fn run(policy: &str, engine: Arc<Engine>) -> Result<()> {
         inter_gbps: 10.0,
         n_accum: 1,
         fabric: FabricKind::Lockstep,
+        fabric_opts: qsdp::config::FabricOptions::default(),
     };
     let mut tr = Trainer::new(engine, &artifacts_root(), cfg, TrainerOptions { log_every: 10 })?;
     tr.run(30)?;

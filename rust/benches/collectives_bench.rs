@@ -2,15 +2,269 @@
 //! the simulated fabric backends, measuring host-side processing
 //! throughput and reporting the byte-exact wire traffic each policy
 //! generates on each transport.
+//!
+//! Two modes:
+//!
+//! * default — the narrative sections (policy sweeps on the paper's
+//!   4x8 cluster) followed by the snapshot grid;
+//! * `--snapshot-only` — just the snapshot grid: median ns/op per
+//!   fabric × codec on a fixed seed, world 4, small tensors. This is
+//!   the repo's perf trajectory anchor: `--json PATH` writes the grid
+//!   to `BENCH_collectives.json` so future PRs can diff against it
+//!   (CI runs `cargo bench --bench collectives_bench --
+//!   --snapshot-only --json ../BENCH_collectives.json`).
+//!
+//! The grid includes the rows the persistent-runtime work is judged
+//! by: `async-persistent` vs `async-spawn-per-call` on small-tensor
+//! all_gather (the spawn/join overhead the persistent runtime
+//! removes), and `to_bytes` vs `to_bytes_into` / `from_bytes+decode`
+//! vs `view_bytes+decode` on the wire path (the allocation + copy the
+//! reusing/borrowing serializers remove).
 
 use qsdp::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric, TrafficLedger};
 use qsdp::model::ParamKind;
-use qsdp::quant::{Codec, EncodedTensor, QuantPolicy, TensorRole};
+use qsdp::quant::{Codec, EncodedTensor, Fp32Codec, MinMaxCodec, QuantPolicy, TensorRole};
 use qsdp::sim::{NetworkModel, Topology};
-use qsdp::util::Pcg64;
+use qsdp::util::args::Args;
+use qsdp::util::{table, Pcg64};
 use std::time::Instant;
 
+/// Snapshot-grid geometry: world 4 (2 nodes x 2 GPUs), small tensors —
+/// the regime where per-call thread spawn/join dominates and the
+/// persistent runtime's win is starkest.
+const SNAP_TOPO: (usize, usize) = (2, 2);
+const SNAP_N: usize = 16_384;
+const SNAP_REPS: usize = 40;
+const SNAP_WARMUP: usize = 6;
+const SNAP_SEED: u64 = 3;
+
 fn main() {
+    let args = Args::from_env();
+    if !args.bool_or("snapshot-only", false) {
+        narrative_sections();
+    }
+    let rows = snapshot_grid();
+    print_snapshot(&rows);
+    if let Some(path) = args.get("json") {
+        write_snapshot_json(path, &rows).expect("write bench snapshot");
+        println!("wrote {path}");
+    }
+}
+
+struct BenchRow {
+    op: &'static str,
+    fabric: &'static str,
+    codec: &'static str,
+    median_ns: f64,
+}
+
+/// Median wall time of `reps` invocations, in nanoseconds.
+fn median_ns<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut samples: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// The fixed-seed snapshot grid: median ns/op per fabric × codec for
+/// both collective primitives, plus the wire-path serializer rows.
+fn snapshot_grid() -> Vec<BenchRow> {
+    let topo = Topology::new(SNAP_TOPO.0, SNAP_TOPO.1);
+    let n = SNAP_N;
+    let mut rng = Pcg64::seeded(SNAP_SEED);
+    let mut full = vec![0.0f32; n];
+    rng.fill_normal(&mut full, 1.0);
+    let inputs: Vec<Vec<f32>> = (0..topo.world())
+        .map(|r| {
+            let mut v = vec![0.0f32; n];
+            Pcg64::seeded(100 + r as u64).fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    let codecs: Vec<(&'static str, Box<dyn Codec>)> = vec![
+        ("fp32", Box::new(Fp32Codec)),
+        ("minmax8", Box::new(MinMaxCodec::new(8, 1024, true))),
+        ("minmax4", Box::new(MinMaxCodec::new(4, 1024, true))),
+    ];
+    // check_every = 0: measure the steady-state (non-cross-check)
+    // release path on both async modes.
+    let lock = LockstepFabric::new(topo);
+    let flat = FlatFabric::new(topo);
+    let persistent = AsyncFabric::with_options(topo, true, 0);
+    let spawned = AsyncFabric::with_options(topo, false, 0);
+    let fabrics: Vec<(&'static str, &dyn Collective)> = vec![
+        ("lockstep", &lock),
+        ("flat", &flat),
+        ("async-persistent", &persistent),
+        ("async-spawn-per-call", &spawned),
+    ];
+
+    let mut rows = Vec::new();
+    for (cname, codec) in &codecs {
+        let mut enc_rng = Pcg64::seeded(7);
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut enc_rng))
+            .collect();
+        for (fname, fabric) in &fabrics {
+            let mut ledger = TrafficLedger::new();
+            for _ in 0..SNAP_WARMUP {
+                ledger.reset();
+                std::hint::black_box(fabric.all_gather(&shards, &mut ledger));
+            }
+            let med = median_ns(SNAP_REPS, || {
+                ledger.reset();
+                std::hint::black_box(fabric.all_gather(&shards, &mut ledger));
+            });
+            rows.push(BenchRow { op: "all_gather", fabric: *fname, codec: *cname, median_ns: med });
+
+            let mut rs_rng = Pcg64::seeded(11);
+            for _ in 0..SNAP_WARMUP {
+                ledger.reset();
+                std::hint::black_box(fabric.reduce_scatter(
+                    &inputs,
+                    codec.as_ref(),
+                    &mut rs_rng,
+                    &mut ledger,
+                ));
+            }
+            let med = median_ns(SNAP_REPS, || {
+                ledger.reset();
+                std::hint::black_box(fabric.reduce_scatter(
+                    &inputs,
+                    codec.as_ref(),
+                    &mut rs_rng,
+                    &mut ledger,
+                ));
+            });
+            rows.push(BenchRow {
+                op: "reduce_scatter",
+                fabric: *fname,
+                codec: *cname,
+                median_ns: med,
+            });
+        }
+
+        // Wire-path rows: the allocating serializers vs their
+        // reusing/borrowing twins, on a full-tensor message.
+        let e = codec.encode(&full, &mut Pcg64::seeded(13));
+        let bytes = e.to_bytes();
+        let med = median_ns(SNAP_REPS, || {
+            std::hint::black_box(e.to_bytes());
+        });
+        rows.push(BenchRow { op: "to_bytes", fabric: "-", codec: *cname, median_ns: med });
+        let mut buf = Vec::new();
+        e.to_bytes_into(&mut buf); // warm the buffer
+        let med = median_ns(SNAP_REPS, || {
+            e.to_bytes_into(&mut buf);
+            std::hint::black_box(&buf);
+        });
+        rows.push(BenchRow { op: "to_bytes_into", fabric: "-", codec: *cname, median_ns: med });
+        let mut out = Vec::new();
+        let med = median_ns(SNAP_REPS, || {
+            let t = EncodedTensor::from_bytes(&bytes).expect("roundtrip");
+            t.decode(&mut out);
+            std::hint::black_box(&out);
+        });
+        rows.push(BenchRow {
+            op: "from_bytes+decode",
+            fabric: "-",
+            codec: *cname,
+            median_ns: med,
+        });
+        let med = median_ns(SNAP_REPS, || {
+            let v = EncodedTensor::view_bytes(&bytes).expect("roundtrip");
+            v.decode(&mut out);
+            std::hint::black_box(&out);
+        });
+        rows.push(BenchRow {
+            op: "view_bytes+decode",
+            fabric: "-",
+            codec: *cname,
+            median_ns: med,
+        });
+    }
+    rows
+}
+
+fn find_ns(rows: &[BenchRow], op: &str, fabric: &str, codec: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.op == op && r.fabric == fabric && r.codec == codec)
+        .map(|r| r.median_ns)
+}
+
+fn print_snapshot(rows: &[BenchRow]) {
+    println!(
+        "== snapshot grid: world {}x{}, n = {} elems, {} reps (median ns/op, seed {}) ==",
+        SNAP_TOPO.0, SNAP_TOPO.1, SNAP_N, SNAP_REPS, SNAP_SEED
+    );
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.op.to_string(),
+                r.fabric.to_string(),
+                r.codec.to_string(),
+                format!("{:.0}", r.median_ns),
+                format!("{:.3}", r.median_ns / 1e6),
+            ]
+        })
+        .collect();
+    let headers = ["op", "fabric", "codec", "median_ns", "median_ms"];
+    println!("{}", table::render(&headers, &table_rows));
+    // The acceptance headline: persistent runtime vs spawn-per-call on
+    // small-tensor all_gather.
+    for codec in ["fp32", "minmax8", "minmax4"] {
+        if let (Some(p), Some(s)) = (
+            find_ns(rows, "all_gather", "async-persistent", codec),
+            find_ns(rows, "all_gather", "async-spawn-per-call", codec),
+        ) {
+            println!(
+                "all_gather {codec:8}: persistent {:9.0} ns vs spawn-per-call {:9.0} ns -> {:.1}x",
+                p,
+                s,
+                s / p
+            );
+        }
+    }
+}
+
+fn write_snapshot_json(path: &str, rows: &[BenchRow]) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str("  \"bench\": \"collectives\",\n");
+    s.push_str(&format!("  \"seed\": {SNAP_SEED},\n"));
+    s.push_str(&format!("  \"topology\": \"{}x{}\",\n", SNAP_TOPO.0, SNAP_TOPO.1));
+    s.push_str(&format!("  \"n_elems\": {SNAP_N},\n"));
+    s.push_str(&format!("  \"reps\": {SNAP_REPS},\n"));
+    s.push_str("  \"unit\": \"ns_per_op_median\",\n");
+    s.push_str(
+        "  \"generated_by\": \"cargo bench --bench collectives_bench -- --snapshot-only --json ../BENCH_collectives.json\",\n",
+    );
+    s.push_str("  \"provenance\": \"measured\",\n");
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"op\": \"{}\", \"fabric\": \"{}\", \"codec\": \"{}\", \"median_ns\": {:.0}}}{}\n",
+            r.op,
+            r.fabric,
+            r.codec,
+            r.median_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+/// The original narrative sections: policy sweeps on the paper's 4x8
+/// cluster plus the backend comparison.
+fn narrative_sections() {
     let topo = Topology::new(4, 8); // the paper's 32-GPU cluster
     let fabric = LockstepFabric::new(topo);
     let n = 4 << 20; // 16 MiB tensor
@@ -95,7 +349,7 @@ fn main() {
         );
     }
 
-    println!("== async ring: threaded AllGather, host-side scaling ==");
+    println!("== async ring: persistent runtime AllGather, host-side scaling ==");
     // The async backend pays real thread + serialization costs; this
     // pins how host time scales with message size on the w8 policy.
     let codec = QuantPolicy::wg(8, 8).codec(TensorRole::Weight, ParamKind::Matrix);

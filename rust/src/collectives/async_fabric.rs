@@ -1,18 +1,58 @@
-//! [`AsyncFabric`]: a threaded message-passing [`Collective`] backend.
+//! [`AsyncFabric`]: a threaded message-passing [`Collective`] backend
+//! with a **persistent per-rank runtime**.
 //!
 //! Where [`super::LockstepFabric`] and [`super::FlatFabric`] simulate
 //! the collectives as single-threaded functions over per-rank buffers,
 //! this backend runs **one OS thread per rank**, and ranks communicate
-//! *only* through `std::sync::mpsc` channels carrying the serialized
-//! octets of [`EncodedTensor::to_bytes`] — exactly the bytes a real
-//! NCCL/CGX socket would move. There is no shared-`Vec<f32>` shortcut:
-//! every payload crosses a genuine thread + byte boundary and is
-//! reconstructed with [`EncodedTensor::from_bytes`] on the receiving
-//! side, so the codec wire format is exercised end to end on every hop.
+//! *only* through byte channels carrying the serialized octets of
+//! [`EncodedTensor::to_bytes`] — exactly the bytes a real NCCL/CGX
+//! socket would move. Every payload crosses a genuine thread + byte
+//! boundary and is dequantized through the borrowing
+//! [`crate::quant::EncodedView`] parser on the receiving side, so the
+//! codec wire format is exercised end to end on every hop.
 //!
-//! Algorithms are the classic **rings** (the building block of NCCL's
-//! bandwidth-optimal collectives): rank `r` sends to `r+1 (mod P)` and
-//! receives from `r-1 (mod P)`.
+//! # Runtime lifecycle (construct once, command, shutdown on drop)
+//!
+//! By default the fabric is **persistent**: `AsyncFabric::new` spawns
+//! the P rank worker threads once, at construction, and they live for
+//! the fabric's lifetime. Each collective call is one round of a small
+//! command protocol —
+//!
+//! * `AllGather` / `ReduceScatter` / `AllReduce` — dispatched to every
+//!   worker over a per-rank command channel; the call blocks until all
+//!   P workers report completion, then merges their per-link ledgers
+//!   in rank order (so totals are deterministic and byte-exact).
+//! * `Shutdown` — sent to every worker when the fabric is dropped; the
+//!   runtime joins all threads before `Drop` returns.
+//!
+//! Each worker owns a scratch pool (outgoing byte buffer, encode
+//! message, f32 accumulator, decoded block slots) that persists across
+//! calls: outgoing messages are serialized with
+//! [`EncodedTensor::to_bytes_into`] into a recycled buffer, received
+//! messages are parsed with [`EncodedTensor::view_bytes`] (header +
+//! meta validated, payload borrowed — codes are read straight out of
+//! the link buffer), and the received buffer becomes the next hop's
+//! outgoing buffer. The only data movement beyond arithmetic is the
+//! channel send itself, which moves the `Vec<u8>` by pointer. A
+//! steady-state `all_gather` (via [`Collective::all_gather_into`])
+//! performs **zero heap allocations** end to end — pinned by
+//! `tests/alloc_counter.rs`; `reduce_scatter` additionally pays
+//! exactly the per-call allocations inherent to its owning return type
+//! (each rank's reduced block is handed to the caller by moving the
+//! warm accumulator out, so the next call's first decode re-grows it —
+//! one allocation per rank per call, none per hop after that).
+//!
+//! The legacy spawn-per-call mode ([`AsyncFabric::spawn_per_call`])
+//! runs the *same* per-rank ring bodies on scoped threads created
+//! fresh for every call — it exists as the baseline for
+//! `benches/collectives_bench.rs`, which pins the persistent runtime's
+//! speedup, and both modes are bit-identical by construction.
+//!
+//! # Algorithms
+//!
+//! Classic **rings** (the building block of NCCL's bandwidth-optimal
+//! collectives): rank `r` sends to `r+1 (mod P)` and receives from
+//! `r-1 (mod P)`.
 //!
 //! * `all_gather` — store-and-forward: each block travels `P-1` hops
 //!   around the ring; every rank decodes all `P` blocks in rank order.
@@ -22,30 +62,33 @@
 //!   `P-1` hops rank `r` owns the fully reduced block `r`. Block
 //!   boundaries come from [`Topology::shard_range`], so ragged sizes
 //!   (`n % P != 0`, even empty blocks for `n < P`) are handled exactly.
-//! * `all_reduce` — the trait's default composition of the two rings.
+//! * `all_reduce` — fused on the runtime: the reduce-scatter ring,
+//!   then each rank encodes its reduced block (continuing its own rng
+//!   stream) and the gather ring runs immediately — one command round
+//!   trip instead of two.
 //!
-//! **Determinism.** Stochastic codecs draw noise from the rng, and
-//! thread scheduling must not change what they draw. The caller's
-//! [`Pcg64`] is therefore split into per-rank streams before any thread
-//! starts (`Pcg64::new(base ^ rank, rank)` with `base` drawn once from
-//! the caller), so each rank's encodes are reproducible regardless of
+//! # Determinism
+//!
+//! Stochastic codecs draw noise from the rng, and thread scheduling
+//! must not change what they draw. The caller's [`Pcg64`] is split
+//! into per-rank streams before any ring starts
+//! (`Pcg64::new(base ^ rank, rank)` with `base` drawn once from the
+//! caller), so each rank's encodes are reproducible regardless of
 //! interleaving, and two runs from the same seed are bit-identical.
 //!
-//! **Accounting.** Each rank tallies the bytes it pushes onto its one
-//! outgoing link `r → r+1` into a private per-link [`TrafficLedger`]
-//! (inter-node iff the link crosses a node boundary); the per-link
-//! ledgers are merged into the caller's ledger after the join, so
-//! totals are deterministic and byte-exact. A ring on an `n × g`
-//! cluster has exactly `n` node-crossing links (0 when `n == 1`), which
-//! is what makes ring totals analytically checkable — see
-//! `tests/fabric_differential.rs`.
+//! # Verification
 //!
-//! **Verification.** `all_gather` results must be identical on every
-//! rank; rank 0's vector is cross-checked against all other ranks
-//! before it is returned (a cheap end-to-end integrity check on the
-//! serialization path). The cross-fabric differential harness in
-//! `tests/fabric_differential.rs` additionally pins this backend
-//! against the two lockstep simulations on shared seeded workloads.
+//! `all_gather` results must be identical on every rank. The full
+//! all-ranks cross-check (compare every rank's decoded vector against
+//! rank 0's, bit-pattern) runs on **every** call in debug builds, and
+//! on a 1-in-N sample of calls in release builds (`check_every`,
+//! default 64, `0` disables release sampling) — the per-call cost of
+//! P-1 full-tensor comparisons is pure overhead once the transport is
+//! trusted, exactly the demotion ROADMAP.md calls for. The
+//! cross-fabric differential harness in `tests/fabric_differential.rs`
+//! additionally pins this backend against the two lockstep simulations
+//! on shared seeded workloads, and `tests/alloc_counter.rs` pins the
+//! zero-allocation steady state with a counting global allocator.
 //!
 //! Note the quantization-noise profile differs from the other backends
 //! by construction: the ring re-encodes partial sums at every hop, so a
@@ -59,35 +102,532 @@ use super::ledger::TrafficLedger;
 use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
 use crate::util::Pcg64;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::cell::Cell;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
 
-/// Threaded ring backend: one OS thread per rank, byte channels only.
-#[derive(Clone, Copy, Debug)]
-pub struct AsyncFabric {
-    topo: Topology,
+/// Release-build gather cross-check sampling period (1-in-N calls).
+pub const DEFAULT_CHECK_EVERY: u64 = 64;
+
+/// Buffered slots per ring link. One is enough for progress (every
+/// rank alternates send/recv), the second hides scheduling jitter.
+const RING_DEPTH: usize = 2;
+
+/// One rank's end of the ring: a sender to its successor's inbox and
+/// the receiving end of its own inbox.
+struct RingLink {
+    tx: SyncSender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
 }
 
-impl AsyncFabric {
-    pub fn new(topo: Topology) -> Self {
-        AsyncFabric { topo }
+/// Per-rank reusable buffers. Persistent workers keep one of these for
+/// the fabric's lifetime, so steady-state collective calls allocate
+/// nothing on the ring hot path; the spawn-per-call mode creates a
+/// fresh (cold) one per rank per call.
+#[derive(Default)]
+struct RankScratch {
+    /// Encode target for outgoing partials / shards.
+    enc: EncodedTensor,
+    /// f32 accumulator for the reduce ring (holds the reduced block
+    /// after the last hop).
+    acc: Vec<f32>,
+    /// Decoded block slots for the gather ring (one per rank).
+    slots: Vec<Vec<f32>>,
+    /// Outgoing serialization buffer; after each call it holds the last
+    /// received buffer, recycled as the next call's first send.
+    wire: Vec<u8>,
+    /// Per-link byte accounting, drained into the caller's ledger at
+    /// the end of every call.
+    ledger: TrafficLedger,
+}
+
+fn prep_slots(scratch: &mut RankScratch, p: usize) {
+    if scratch.slots.len() != p {
+        scratch.slots.resize_with(p, Vec::new);
     }
 }
 
-/// Spawn one thread per rank wired into a ring of byte channels
-/// (`rank r` owns the receiving end of channel `r` and a sender for
-/// channel `r+1 mod p`), run `per_rank` on each, and return the
-/// per-rank `(result, per-link ledger)` pairs in rank order.
+fn concat_slots(slots: &[Vec<f32>], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(slots.iter().map(|s| s.len()).sum());
+    for s in slots {
+        out.extend_from_slice(s);
+    }
+}
+
+/// Bit-pattern comparison: every rank decoded the same octets, so even
+/// NaNs must agree — and unlike `==` on f32, to_bits neither panics on
+/// NaN nor conflates ±0.
+fn assert_same_bits(rank: usize, out0: &[f32], out: &[f32]) {
+    let identical =
+        out.len() == out0.len() && out.iter().zip(out0).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(identical, "rank {rank} decoded a different tensor than rank 0");
+}
+
+/// Complete per-rank gather body: stage the rank's own message (decode
+/// its block into slot `r`, serialize it into the recycled wire
+/// buffer) and run the store-and-forward ring. Every gather — both
+/// execution modes, and both the `AllGather` command and the fused
+/// `AllReduce`'s gather phase — goes through this one function, so
+/// mode equivalence is true by construction.
+fn ag_rank(
+    topo: Topology,
+    r: usize,
+    own: &EncodedTensor,
+    scratch: &mut RankScratch,
+    link: &RingLink,
+) {
+    prep_slots(scratch, topo.world());
+    own.decode(&mut scratch.slots[r]);
+    own.to_bytes_into(&mut scratch.wire);
+    ag_ring(topo, r, scratch, link);
+}
+
+/// Gather epilogue for the spawn-per-call mode: rank 0 (and, on
+/// cross-check calls, every rank) materializes its concatenated
+/// result; the rest return nothing.
+fn gather_epilogue_owned(r: usize, check: bool, slots: &[Vec<f32>]) -> Option<Vec<f32>> {
+    if r == 0 || check {
+        let mut o = Vec::new();
+        concat_slots(slots, &mut o);
+        Some(o)
+    } else {
+        None
+    }
+}
+
+/// Store-and-forward gather ring from rank `r`.
+///
+/// Precondition: `scratch.slots` has P entries, `scratch.slots[r]`
+/// holds the rank's own decoded block and `scratch.wire` its
+/// serialized message. Postcondition: every slot decoded in rank
+/// order; `scratch.wire` holds the last received buffer. Block `i`
+/// travels `P-1` hops; the link `i-1 → i` is the only one it never
+/// crosses.
+fn ag_ring(topo: Topology, r: usize, scratch: &mut RankScratch, link: &RingLink) {
+    let p = topo.world();
+    let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
+    // Decode-on-receipt, store-and-forward: each received message is
+    // decoded (straight out of the link buffer, via the borrowing
+    // view) into its block slot and then *moved* onward as the next
+    // send — no per-hop copy of the octets.
+    let mut outgoing = std::mem::take(&mut scratch.wire);
+    for step in 0..p - 1 {
+        // invariant: `outgoing` holds block (r - step) mod P
+        scratch.ledger.record(outgoing.len(), inter);
+        link.tx.send(outgoing).expect("ring successor hung up");
+        let recv_block = (r + p - step - 1) % p;
+        let msg = link.rx.recv().expect("ring predecessor died");
+        let view = EncodedTensor::view_bytes(&msg).expect("corrupt ring message");
+        view.decode(&mut scratch.slots[recv_block]);
+        outgoing = msg;
+    }
+    scratch.wire = outgoing;
+}
+
+/// Reduce-and-forward ring from rank `r` (`mine` is the rank's full
+/// local contribution). At step `s`, rank `r` ships block
+/// `(r - 1 - s) mod P` — its own contribution on the first step, the
+/// accumulated partial afterwards — and receives block
+/// `(r - 2 - s) mod P` from its predecessor, adding its local data.
+/// After `P-1` steps `scratch.acc` holds the fully reduced block `r`.
+/// Every partial crosses the wire as codec-encoded bytes.
+#[allow(clippy::too_many_arguments)]
+fn rs_ring(
+    topo: Topology,
+    r: usize,
+    n_elems: usize,
+    mine: &[f32],
+    codec: &dyn Codec,
+    rng: &mut Pcg64,
+    scratch: &mut RankScratch,
+    link: &RingLink,
+) {
+    let p = topo.world();
+    let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
+    let mut wire = std::mem::take(&mut scratch.wire);
+    for step in 0..p - 1 {
+        let send_block = (r + p - 1 - step) % p;
+        if step == 0 {
+            let range = topo.shard_range(n_elems, send_block);
+            codec.encode_into(&mine[range], &mut scratch.enc, rng);
+        } else {
+            codec.encode_into(&scratch.acc, &mut scratch.enc, rng);
+        }
+        scratch.enc.to_bytes_into(&mut wire);
+        scratch.ledger.record(wire.len(), inter);
+        link.tx.send(wire).expect("ring successor hung up");
+        let recv_block = (r + 2 * p - 2 - step) % p;
+        let range = topo.shard_range(n_elems, recv_block);
+        let msg = link.rx.recv().expect("ring predecessor died");
+        let view = EncodedTensor::view_bytes(&msg).expect("corrupt ring message");
+        view.decode(&mut scratch.acc);
+        assert_eq!(
+            scratch.acc.len(),
+            range.len(),
+            "ring partial has wrong length at step {step}"
+        );
+        for (a, &x) in scratch.acc.iter_mut().zip(&mine[range]) {
+            *a += x;
+        }
+        wire = msg;
+    }
+    scratch.wire = wire;
+}
+
+// ---------------------------------------------------------------------
+// Raw-pointer plumbing for the persistent runtime.
+//
+// The `Collective` API hands the fabric *borrowed* inputs, but the
+// persistent workers are 'static threads, so the dispatching call
+// smuggles the borrows across the command channel as raw pointers.
+//
+// SAFETY CONTRACT (upheld by `FabricRuntime::run`): the dispatching
+// call blocks until every worker has either sent its `Done` message or
+// died (its done-channel disconnected, which only happens when the
+// worker thread has exited). Workers touch the pointers only between
+// receiving a command and sending `Done` / exiting, so no pointer
+// outlives the caller's borrow. A worker that panics mid-ring drops
+// its ring channels, which cascades `recv`/`send` errors (and thus
+// panics and exits) around the ring — every worker quiesces, the
+// dispatching call observes the disconnects, and only then panics
+// itself.
+// ---------------------------------------------------------------------
+
+/// A `&[T]` lifetime-erased for the command channel.
+struct RawSlice<T> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawSlice<T> {}
+
+// SAFETY: only shared references are ever reconstructed, and `T: Sync`
+// makes those usable from the worker threads.
+unsafe impl<T: Sync> Send for RawSlice<T> {}
+
+impl<T> RawSlice<T> {
+    fn new(s: &[T]) -> Self {
+        RawSlice { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: caller must guarantee the original borrow is still live
+    /// (see the module safety contract).
+    unsafe fn slice<'a>(self) -> &'a [T] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// A `&mut [T]` lifetime-erased for the command channel; distinct
+/// workers must only ever touch distinct indices.
+struct RawSliceMut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for RawSliceMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawSliceMut<T> {}
+
+// SAFETY: reconstructed references are handed to exactly one thread
+// per index (workers write index r; the dispatcher reads index 0 only
+// after rank 0's Done), and `T: Send` covers the ownership transfer.
+unsafe impl<T: Send> Send for RawSliceMut<T> {}
+
+impl<T> RawSliceMut<T> {
+    fn new(s: &mut [T]) -> Self {
+        RawSliceMut { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: original borrow live; no other thread may be accessing
+    /// index `i` concurrently.
+    unsafe fn get_mut<'a>(self, i: usize) -> &'a mut T {
+        assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// SAFETY: as [`Self::get_mut`], but shared — the writer of index
+    /// `i` must have finished (happens-before via its `Done` message).
+    unsafe fn get<'a>(self, i: usize) -> &'a T {
+        assert!(i < self.len);
+        &*self.ptr.add(i)
+    }
+}
+
+/// A `&dyn Codec` lifetime-erased for the command channel.
+#[derive(Clone, Copy)]
+struct RawCodec {
+    ptr: *const dyn Codec,
+}
+
+// SAFETY: `Codec: Sync`, so sharing the reference across worker
+// threads is sound; liveness follows the module safety contract.
+unsafe impl Send for RawCodec {}
+
+impl RawCodec {
+    fn new(c: &dyn Codec) -> Self {
+        // SAFETY: erases the borrow lifetime only; `FabricRuntime::run`
+        // guarantees no worker uses the pointer past the borrow.
+        let erased = unsafe { std::mem::transmute::<&dyn Codec, &'static dyn Codec>(c) };
+        RawCodec { ptr: erased }
+    }
+
+    /// SAFETY: caller must guarantee the original borrow is still live.
+    unsafe fn get<'a>(self) -> &'a dyn Codec {
+        &*self.ptr
+    }
+}
+
+/// The persistent runtime's command protocol (one message per rank per
+/// collective call, plus `Shutdown` on drop).
+#[derive(Clone, Copy)]
+enum Command {
+    AllGather {
+        shards: RawSlice<EncodedTensor>,
+        /// Length-1 slot; rank 0 writes the gathered tensor here.
+        out: RawSliceMut<Vec<f32>>,
+        /// Run the all-ranks cross-check this call.
+        check: bool,
+    },
+    ReduceScatter {
+        inputs: RawSlice<Vec<f32>>,
+        /// Length-P; worker `r` writes its reduced block to index `r`.
+        outs: RawSliceMut<Vec<f32>>,
+        codec: RawCodec,
+        base: u64,
+        n_elems: usize,
+    },
+    AllReduce {
+        inputs: RawSlice<Vec<f32>>,
+        /// Length-1 slot; rank 0 writes the reduced full tensor here.
+        out: RawSliceMut<Vec<f32>>,
+        codec_rs: RawCodec,
+        codec_ag: RawCodec,
+        base: u64,
+        n_elems: usize,
+        check: bool,
+    },
+    Shutdown,
+}
+
+/// Per-rank completion report for one collective call.
+struct Done {
+    ledger: TrafficLedger,
+    /// Ranks > 0 attach their gathered vector on cross-check calls.
+    check_out: Option<Vec<f32>>,
+}
+
+fn worker_loop(
+    topo: Topology,
+    r: usize,
+    cmds: Receiver<Command>,
+    done: SyncSender<Done>,
+    link: RingLink,
+) {
+    let mut scratch = RankScratch::default();
+    while let Ok(cmd) = cmds.recv() {
+        let check_out = match cmd {
+            Command::Shutdown => return,
+            Command::AllGather { shards, out, check } => {
+                // SAFETY: module safety contract — the dispatcher keeps
+                // the borrows alive until every rank's Done.
+                let shards = unsafe { shards.slice() };
+                ag_rank(topo, r, &shards[r], &mut scratch, &link);
+                finish_gather(r, check, &scratch.slots, out)
+            }
+            Command::ReduceScatter { inputs, outs, codec, base, n_elems } => {
+                // SAFETY: module safety contract.
+                let inputs = unsafe { inputs.slice() };
+                let codec = unsafe { codec.get() };
+                let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
+                rs_ring(topo, r, n_elems, &inputs[r], codec, &mut rank_rng, &mut scratch, &link);
+                // SAFETY: worker r is the only writer of outs[r].
+                unsafe {
+                    *outs.get_mut(r) = std::mem::take(&mut scratch.acc);
+                }
+                None
+            }
+            Command::AllReduce { inputs, out, codec_rs, codec_ag, base, n_elems, check } => {
+                // SAFETY: module safety contract.
+                let inputs = unsafe { inputs.slice() };
+                let codec_rs = unsafe { codec_rs.get() };
+                let codec_ag = unsafe { codec_ag.get() };
+                let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
+                rs_ring(
+                    topo,
+                    r,
+                    n_elems,
+                    &inputs[r],
+                    codec_rs,
+                    &mut rank_rng,
+                    &mut scratch,
+                    &link,
+                );
+                // Fused gather phase: encode the reduced block
+                // (continuing this rank's rng stream) and ring it.
+                // The take/put-back keeps the message buffer warm while
+                // satisfying the borrow checker across `ag_rank`.
+                codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng);
+                let enc = std::mem::take(&mut scratch.enc);
+                ag_rank(topo, r, &enc, &mut scratch, &link);
+                scratch.enc = enc;
+                finish_gather(r, check, &scratch.slots, out)
+            }
+        };
+        let msg = Done { ledger: scratch.ledger.take(), check_out };
+        if done.send(msg).is_err() {
+            return;
+        }
+    }
+}
+
+/// Gather epilogue: rank 0 writes the caller's output slot directly
+/// (zero-copy into the caller's reusable buffer); other ranks
+/// materialize their vector only on cross-check calls.
+fn finish_gather(
+    r: usize,
+    check: bool,
+    slots: &[Vec<f32>],
+    out: RawSliceMut<Vec<f32>>,
+) -> Option<Vec<f32>> {
+    if r == 0 {
+        // SAFETY: rank 0 is the only writer of the caller's out slot.
+        let out0 = unsafe { out.get_mut(0) };
+        concat_slots(slots, out0);
+        None
+    } else if check {
+        let mut o = Vec::new();
+        concat_slots(slots, &mut o);
+        Some(o)
+    } else {
+        None
+    }
+}
+
+/// Channel ends the dispatcher holds for the persistent workers.
+struct RuntimeInner {
+    cmd_txs: Vec<SyncSender<Command>>,
+    done_rxs: Vec<Receiver<Done>>,
+}
+
+/// The persistent per-rank runtime: P worker threads spawned once at
+/// fabric construction, joined on drop.
+struct FabricRuntime {
+    inner: Mutex<RuntimeInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FabricRuntime {
+    fn spawn(topo: Topology) -> FabricRuntime {
+        let p = topo.world();
+        let (ring_txs, ring_rxs): (Vec<_>, Vec<_>) =
+            (0..p).map(|_| sync_channel::<Vec<u8>>(RING_DEPTH)).unzip();
+        // Hand rank r the sender for its successor's inbox, then drop
+        // the originals: every inbox keeps exactly one producer, so if
+        // a rank thread dies its successor sees a disconnect instead of
+        // blocking forever, and the failure cascades around the ring.
+        let next_txs: Vec<SyncSender<Vec<u8>>> =
+            (0..p).map(|r| ring_txs[(r + 1) % p].clone()).collect();
+        drop(ring_txs);
+        let mut cmd_txs = Vec::with_capacity(p);
+        let mut done_rxs = Vec::with_capacity(p);
+        let mut workers = Vec::with_capacity(p);
+        for (r, (rx, tx)) in ring_rxs.into_iter().zip(next_txs).enumerate() {
+            let (cmd_tx, cmd_rx) = sync_channel::<Command>(1);
+            let (done_tx, done_rx) = sync_channel::<Done>(1);
+            cmd_txs.push(cmd_tx);
+            done_rxs.push(done_rx);
+            let link = RingLink { tx, rx };
+            let handle = std::thread::Builder::new()
+                .name(format!("fabric-rank-{r}"))
+                .spawn(move || worker_loop(topo, r, cmd_rx, done_tx, link))
+                .expect("spawn fabric worker thread");
+            workers.push(handle);
+        }
+        FabricRuntime { inner: Mutex::new(RuntimeInner { cmd_txs, done_rxs }), workers }
+    }
+
+    /// Dispatch one command to every worker and block until all P have
+    /// reported. Ledgers merge in rank order; `on_check` receives the
+    /// gathered vectors ranks > 0 attach on cross-check calls.
+    ///
+    /// This function is the linchpin of the raw-pointer safety
+    /// contract: it returns (or panics) only after every worker has
+    /// either delivered its `Done` or exited, so no worker can touch
+    /// the command's pointers after the caller's borrows end.
+    fn run(
+        &self,
+        cmd: Command,
+        ledger: &mut TrafficLedger,
+        mut on_check: impl FnMut(usize, Vec<f32>),
+    ) {
+        let inner = self.inner.lock().expect("async fabric runtime poisoned");
+        let mut failed = false;
+        for tx in &inner.cmd_txs {
+            failed |= tx.send(cmd).is_err();
+        }
+        // Drain every done-channel before surfacing any failure OR
+        // running any cross-check: a recv error means that worker's
+        // thread has exited, so once all P recvs return, no worker
+        // still holds the command's pointers — only then is it safe to
+        // panic (from the failure assert or from an on_check mismatch)
+        // and unwind through the caller's borrows.
+        let mut checks: Vec<(usize, Vec<f32>)> = Vec::new();
+        for (r, rx) in inner.done_rxs.iter().enumerate() {
+            match rx.recv() {
+                Ok(d) => {
+                    ledger.merge(&d.ledger);
+                    if let Some(o) = d.check_out {
+                        checks.push((r, o));
+                    }
+                }
+                Err(_) => failed = true,
+            }
+        }
+        assert!(!failed, "async fabric worker thread died");
+        for (r, o) in checks {
+            on_check(r, o);
+        }
+    }
+}
+
+impl Drop for FabricRuntime {
+    fn drop(&mut self) {
+        let inner = match self.inner.get_mut() {
+            Ok(i) => i,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for tx in &inner.cmd_txs {
+            let _ = tx.send(Command::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn one thread per rank wired into a ring of byte channels, run
+/// `per_rank` on each, and return the per-rank
+/// `(result, per-link ledger)` pairs in rank order — the legacy
+/// spawn-per-call execution mode, kept as the benchmark baseline for
+/// the persistent runtime.
 fn run_ring<T, F>(p: usize, per_rank: F) -> Vec<(T, TrafficLedger)>
 where
     T: Send,
-    F: Fn(usize, Sender<Vec<u8>>, Receiver<Vec<u8>>) -> (T, TrafficLedger) + Sync,
+    F: Fn(usize, RingLink) -> (T, TrafficLedger) + Sync,
 {
-    let (txs, rxs): (Vec<_>, Vec<_>) = (0..p).map(|_| channel::<Vec<u8>>()).unzip();
-    // Hand rank r the sender for its successor's inbox, then drop the
-    // originals: every inbox keeps exactly one producer, so if a rank
-    // thread dies its successor sees a disconnect instead of blocking
-    // forever, and the failure cascades around the ring to the join.
-    let next_txs: Vec<Sender<Vec<u8>>> = (0..p).map(|r| txs[(r + 1) % p].clone()).collect();
+    let (txs, rxs): (Vec<_>, Vec<_>) =
+        (0..p).map(|_| sync_channel::<Vec<u8>>(RING_DEPTH)).unzip();
+    let next_txs: Vec<SyncSender<Vec<u8>>> = (0..p).map(|r| txs[(r + 1) % p].clone()).collect();
     drop(txs);
     std::thread::scope(|s| {
         let handles: Vec<_> = rxs
@@ -96,7 +636,7 @@ where
             .enumerate()
             .map(|(r, (rx, tx))| {
                 let per_rank = &per_rank;
-                s.spawn(move || per_rank(r, tx, rx))
+                s.spawn(move || per_rank(r, RingLink { tx, rx }))
             })
             .collect();
         handles
@@ -104,6 +644,89 @@ where
             .map(|h| h.join().expect("ring rank thread panicked"))
             .collect()
     })
+}
+
+/// Threaded ring backend: one OS thread per rank, byte channels only.
+/// Persistent by default (workers spawned once, at construction).
+pub struct AsyncFabric {
+    topo: Topology,
+    check_every: u64,
+    calls: Cell<u64>,
+    /// Configured mode. At world 1 no runtime is spawned even when
+    /// persistent (the collectives short-circuit before reaching it),
+    /// but the fabric still reports the mode it was configured with.
+    persistent: bool,
+    runtime: Option<FabricRuntime>,
+}
+
+impl std::fmt::Debug for AsyncFabric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AsyncFabric")
+            .field("topo", &self.topo)
+            .field("persistent", &self.persistent)
+            .field("check_every", &self.check_every)
+            .finish()
+    }
+}
+
+impl AsyncFabric {
+    /// Persistent runtime with the default cross-check sampling.
+    pub fn new(topo: Topology) -> Self {
+        Self::with_options(topo, true, DEFAULT_CHECK_EVERY)
+    }
+
+    /// Legacy mode: spawn (and join) P scoped threads on every
+    /// collective call. Same rings, same numerics — kept as the
+    /// benchmark baseline the persistent runtime is measured against.
+    pub fn spawn_per_call(topo: Topology) -> Self {
+        Self::with_options(topo, false, DEFAULT_CHECK_EVERY)
+    }
+
+    /// Full control: `persistent` selects the execution mode,
+    /// `check_every` the release-build gather cross-check sampling
+    /// period (every Nth call; 0 = never — debug builds always check).
+    pub fn with_options(topo: Topology, persistent: bool, check_every: u64) -> Self {
+        let runtime = (persistent && topo.world() > 1).then(|| FabricRuntime::spawn(topo));
+        AsyncFabric { topo, check_every, calls: Cell::new(0), persistent, runtime }
+    }
+
+    /// Execution mode label (for logs and benches).
+    pub fn mode(&self) -> &'static str {
+        if self.persistent {
+            "persistent"
+        } else {
+            "spawn-per-call"
+        }
+    }
+
+    /// Should this call run the all-ranks gather cross-check? Always in
+    /// debug builds; 1-in-`check_every` calls in release.
+    fn check_due(&self) -> bool {
+        let k = self.calls.get();
+        self.calls.set(k.wrapping_add(1));
+        cfg!(debug_assertions) || (self.check_every > 0 && k % self.check_every == 0)
+    }
+
+}
+
+/// Legacy-mode gather epilogue: take rank 0's vector as the result,
+/// bit-compare any cross-check vectors against it, merge ledgers in
+/// rank order.
+fn collect_gathered(
+    results: Vec<(Option<Vec<f32>>, TrafficLedger)>,
+    out: &mut Vec<f32>,
+    ledger: &mut TrafficLedger,
+) {
+    let mut iter = results.into_iter();
+    let (o0, l0) = iter.next().expect("world > 0");
+    *out = o0.expect("rank 0 always builds its result");
+    ledger.merge(&l0);
+    for (i, (o, l)) in iter.enumerate() {
+        if let Some(o) = o {
+            assert_same_bits(i + 1, out, &o);
+        }
+        ledger.merge(&l);
+    }
 }
 
 impl Collective for AsyncFabric {
@@ -115,65 +738,52 @@ impl Collective for AsyncFabric {
         self.topo
     }
 
-    /// Ring AllGather. Block `i` starts on rank `i` and is forwarded
-    /// `P-1` hops; the link `i-1 → i` is the only one it never crosses.
-    /// Every rank ends up decoding the identical full tensor; rank 0's
-    /// copy is cross-checked against all other ranks before returning.
+    /// Ring AllGather (see [`Collective::all_gather_into`] for the
+    /// allocation-free variant).
     fn all_gather(&self, shards: &[EncodedTensor], ledger: &mut TrafficLedger) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.all_gather_into(shards, &mut out, ledger);
+        out
+    }
+
+    /// Ring AllGather into a caller-owned output buffer. On the
+    /// persistent runtime with a warm buffer this performs zero heap
+    /// allocations (rank 0 concatenates straight into `out`) — pinned
+    /// by `tests/alloc_counter.rs`.
+    fn all_gather_into(
+        &self,
+        shards: &[EncodedTensor],
+        out: &mut Vec<f32>,
+        ledger: &mut TrafficLedger,
+    ) {
         let topo = self.topo;
         let p = topo.world();
         assert_eq!(shards.len(), p, "one shard per rank");
         if p == 1 {
-            let mut out = Vec::new();
-            shards[0].decode(&mut out);
-            return out;
+            shards[0].decode(out);
+            return;
         }
-        let results = run_ring(p, |r, tx, rx| {
-            let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
-            let mut local = TrafficLedger::new();
-            // Decode-on-receipt, store-and-forward: each received
-            // message is decoded into its block slot and then *moved*
-            // onward as the next send — no per-hop copy of the octets.
-            let mut slots: Vec<Vec<f32>> = vec![Vec::new(); p];
-            shards[r].decode(&mut slots[r]);
-            let mut outgoing: Vec<u8> = shards[r].to_bytes();
-            for step in 0..p - 1 {
-                // invariant: `outgoing` holds block (r - step) mod P
-                local.record(outgoing.len(), inter);
-                tx.send(outgoing).expect("ring successor hung up");
-                let recv_block = (r + p - step - 1) % p;
-                let msg = rx.recv().expect("ring predecessor died");
-                let parsed = EncodedTensor::from_bytes(&msg).expect("corrupt ring message");
-                parsed.decode(&mut slots[recv_block]);
-                outgoing = msg;
-            }
-            let mut out = Vec::with_capacity(slots.iter().map(|s| s.len()).sum());
-            for s in &slots {
-                out.extend_from_slice(s);
-            }
-            (out, local)
+        let check = self.check_due();
+        if let Some(rt) = &self.runtime {
+            let out_slot = RawSliceMut::new(std::slice::from_mut(out));
+            let cmd = Command::AllGather { shards: RawSlice::new(shards), out: out_slot, check };
+            rt.run(cmd, ledger, |r, o| {
+                // SAFETY: rank 0's write completed before its Done, and
+                // check vectors arrive only after rank 0's Done.
+                let out0: &Vec<f32> = unsafe { out_slot.get(0) };
+                assert_same_bits(r, out0, &o);
+            });
+            return;
+        }
+        let results = run_ring(p, |r, link| {
+            let mut scratch = RankScratch::default();
+            ag_rank(topo, r, &shards[r], &mut scratch, &link);
+            (gather_epilogue_owned(r, check, &scratch.slots), scratch.ledger.take())
         });
-        let mut iter = results.into_iter();
-        let (out0, l0) = iter.next().unwrap();
-        ledger.merge(&l0);
-        for (r, (out, l)) in iter.enumerate() {
-            // Bit-pattern comparison: every rank decoded the same
-            // octets, so even NaNs must agree — and unlike `==` on
-            // f32, to_bits neither panics on NaN nor conflates ±0.
-            let identical = out.len() == out0.len()
-                && out.iter().zip(&out0).all(|(a, b)| a.to_bits() == b.to_bits());
-            assert!(identical, "rank {} decoded a different tensor than rank 0", r + 1);
-            ledger.merge(&l);
-        }
-        out0
+        collect_gathered(results, out, ledger);
     }
 
-    /// Ring ReduceScatter (reduce-and-forward). At step `s`, rank `r`
-    /// ships block `(r - 1 - s) mod P` — its own contribution on the
-    /// first step, the accumulated partial afterwards — and receives
-    /// block `(r - 2 - s) mod P` from its predecessor, adding its local
-    /// data. After `P-1` steps rank `r` holds the fully reduced block
-    /// `r`. Every partial crosses the wire as codec-encoded bytes.
+    /// Ring ReduceScatter (reduce-and-forward); see [`rs_ring`].
     fn reduce_scatter(
         &self,
         inputs: &[Vec<f32>],
@@ -186,59 +796,47 @@ impl Collective for AsyncFabric {
         let n_elems = check_inputs(&topo, inputs);
         if p == 1 {
             // Degenerate world: no ring steps, but the data still takes
-            // one trip through the codec + wire format — exactly what
-            // the lockstep backends do at world 1, so switching fabrics
-            // never changes numerics (they share the caller's rng
-            // stream here, making even stochastic codecs bit-identical
-            // across backends).
+            // one trip through the codec — exactly what the lockstep
+            // backends do at world 1, so switching fabrics never
+            // changes numerics (they share the caller's rng stream
+            // here, making even stochastic codecs bit-identical across
+            // backends). The wire round trip is a pure validity check,
+            // so release builds skip the double copy.
             let mut enc = EncodedTensor::default();
             codec.encode_into(&inputs[0], &mut enc, rng);
-            let parsed =
-                EncodedTensor::from_bytes(&enc.to_bytes()).expect("corrupt self-message");
+            #[cfg(debug_assertions)]
+            {
+                // Octet-level identity: NaN-safe, unlike the derived
+                // f32 PartialEq on the parsed struct.
+                let bytes = enc.to_bytes();
+                let parsed = EncodedTensor::from_bytes(&bytes).expect("corrupt self-message");
+                assert_eq!(parsed.to_bytes(), bytes, "wire round trip altered the self-message");
+            }
             let mut out = Vec::new();
-            parsed.decode(&mut out);
+            enc.decode(&mut out);
             return vec![out];
         }
         // Split the caller's rng into per-rank streams *before* any
-        // thread exists: stochastic rounding draws become a pure
-        // function of (seed, rank), independent of thread interleaving.
+        // ring starts: stochastic rounding draws become a pure function
+        // of (seed, rank), independent of thread interleaving.
         let base = rng.next_u64();
-        let results = run_ring(p, |r, tx, rx| {
+        if let Some(rt) = &self.runtime {
+            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); p];
+            let cmd = Command::ReduceScatter {
+                inputs: RawSlice::new(inputs),
+                outs: RawSliceMut::new(&mut outs),
+                codec: RawCodec::new(codec),
+                base,
+                n_elems,
+            };
+            rt.run(cmd, ledger, |_, _| {});
+            return outs;
+        }
+        let results = run_ring(p, |r, link| {
+            let mut scratch = RankScratch::default();
             let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
-            let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
-            let mut local = TrafficLedger::new();
-            let mine = &inputs[r];
-            let mut enc = EncodedTensor::default();
-            let mut acc: Vec<f32> = Vec::new();
-            let mut tmp: Vec<f32> = Vec::new();
-            for step in 0..p - 1 {
-                let send_block = (r + p - 1 - step) % p;
-                if step == 0 {
-                    let range = topo.shard_range(n_elems, send_block);
-                    codec.encode_into(&mine[range], &mut enc, &mut rank_rng);
-                } else {
-                    codec.encode_into(&acc, &mut enc, &mut rank_rng);
-                }
-                let bytes = enc.to_bytes();
-                local.record(bytes.len(), inter);
-                tx.send(bytes).expect("ring successor hung up");
-                let recv_block = (r + 2 * p - 2 - step) % p;
-                let range = topo.shard_range(n_elems, recv_block);
-                let msg = rx.recv().expect("ring predecessor died");
-                let parsed = EncodedTensor::from_bytes(&msg).expect("corrupt ring message");
-                parsed.decode(&mut tmp);
-                assert_eq!(
-                    tmp.len(),
-                    range.len(),
-                    "ring partial has wrong length at step {step}"
-                );
-                acc.clear();
-                acc.extend_from_slice(&tmp);
-                for (a, &x) in acc.iter_mut().zip(&mine[range]) {
-                    *a += x;
-                }
-            }
-            (acc, local)
+            rs_ring(topo, r, n_elems, &inputs[r], codec, &mut rank_rng, &mut scratch, &link);
+            (std::mem::take(&mut scratch.acc), scratch.ledger.take())
         });
         let mut outputs = Vec::with_capacity(p);
         for (shard, l) in results {
@@ -246,6 +844,73 @@ impl Collective for AsyncFabric {
             outputs.push(shard);
         }
         outputs
+    }
+
+    /// Fused ring AllReduce: the reduce-scatter ring, then each rank
+    /// encodes its reduced block (continuing its per-rank rng stream)
+    /// and the gather ring runs back to back — one runtime command
+    /// instead of two, no caller-side re-encode of the shards.
+    fn all_reduce(
+        &self,
+        inputs: &[Vec<f32>],
+        codec_rs: &dyn Codec,
+        codec_ag: &dyn Codec,
+        rng: &mut Pcg64,
+        ledger: &mut TrafficLedger,
+    ) -> Vec<f32> {
+        let topo = self.topo;
+        let p = topo.world();
+        let n_elems = check_inputs(&topo, inputs);
+        if p == 1 {
+            // Match the trait's default composition exactly (shared
+            // caller rng stream — see `reduce_scatter`'s world-1 note).
+            let shards = self.reduce_scatter(inputs, codec_rs, rng, ledger);
+            let encoded: Vec<EncodedTensor> =
+                shards.iter().map(|s| codec_ag.encode(s, rng)).collect();
+            return self.all_gather(&encoded, ledger);
+        }
+        let base = rng.next_u64();
+        let check = self.check_due();
+        let mut out = Vec::new();
+        if let Some(rt) = &self.runtime {
+            let out_slot = RawSliceMut::new(std::slice::from_mut(&mut out));
+            let cmd = Command::AllReduce {
+                inputs: RawSlice::new(inputs),
+                out: out_slot,
+                codec_rs: RawCodec::new(codec_rs),
+                codec_ag: RawCodec::new(codec_ag),
+                base,
+                n_elems,
+                check,
+            };
+            rt.run(cmd, ledger, |r, o| {
+                // SAFETY: see `all_gather_into`.
+                let out0: &Vec<f32> = unsafe { out_slot.get(0) };
+                assert_same_bits(r, out0, &o);
+            });
+            return out;
+        }
+        let results = run_ring(p, |r, link| {
+            let mut scratch = RankScratch::default();
+            let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
+            rs_ring(
+                topo,
+                r,
+                n_elems,
+                &inputs[r],
+                codec_rs,
+                &mut rank_rng,
+                &mut scratch,
+                &link,
+            );
+            codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng);
+            let enc = std::mem::take(&mut scratch.enc);
+            ag_rank(topo, r, &enc, &mut scratch, &link);
+            scratch.enc = enc;
+            (gather_epilogue_owned(r, check, &scratch.slots), scratch.ledger.take())
+        });
+        collect_gathered(results, &mut out, ledger);
+        out
     }
 }
 
@@ -322,7 +987,8 @@ mod tests {
     // NOTE: ragged/prime sizes, seed reproducibility under stochastic
     // codecs, error bounds, and ledger analytics are covered by the
     // cross-backend harness in tests/fabric_differential.rs; the unit
-    // tests here pin only the ring-local basics.
+    // tests here pin only the ring-local basics plus the
+    // persistent-vs-spawn-per-call mode equivalence.
 
     #[test]
     fn ring_single_rank_matches_lockstep_with_zero_traffic() {
@@ -386,5 +1052,70 @@ mod tests {
         }
         // RS ring + AG ring: 2·P·(P-1) messages
         assert_eq!(ledger.messages, 24);
+    }
+
+    #[test]
+    fn persistent_and_spawn_per_call_bit_identical() {
+        // The two execution modes share the per-rank ring bodies; this
+        // pins that results AND ledgers agree bit-for-bit on every
+        // primitive, including under a stochastic codec.
+        let topo = Topology::new(2, 2);
+        let n = 1037; // ragged blocks
+        let full = rand_vec(n, 41);
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|r| rand_vec(n, 50 + r as u64)).collect();
+        let codec = MinMaxCodec::new(4, 128, true);
+        let mut enc_rng = Pcg64::seeded(42);
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut enc_rng))
+            .collect();
+        let persistent = AsyncFabric::new(topo);
+        let legacy = AsyncFabric::spawn_per_call(topo);
+        assert_eq!(persistent.mode(), "persistent");
+        assert_eq!(legacy.mode(), "spawn-per-call");
+        let (mut lp, mut ll) = (TrafficLedger::new(), TrafficLedger::new());
+        let gp = persistent.all_gather(&shards, &mut lp);
+        let gl = legacy.all_gather(&shards, &mut ll);
+        assert_eq!(gp, gl, "all_gather diverged across modes");
+        let rp =
+            persistent.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(7), &mut lp);
+        let rl = legacy.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(7), &mut ll);
+        assert_eq!(rp, rl, "reduce_scatter diverged across modes");
+        let ap = persistent.all_reduce(
+            &inputs,
+            &codec,
+            &codec,
+            &mut Pcg64::seeded(8),
+            &mut lp,
+        );
+        let al = legacy.all_reduce(&inputs, &codec, &codec, &mut Pcg64::seeded(8), &mut ll);
+        assert_eq!(ap, al, "all_reduce diverged across modes");
+        assert_eq!(lp, ll, "ledgers diverged across modes");
+    }
+
+    #[test]
+    fn persistent_all_gather_into_reuses_buffer() {
+        // Back-to-back calls into the same output buffer on the same
+        // fabric instance: scratch reuse must not leak state.
+        let topo = Topology::new(1, 4);
+        let n = 512;
+        let full = rand_vec(n, 9);
+        let codec = MinMaxCodec::new(8, 64, false);
+        let mut rng = Pcg64::seeded(10);
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut rng))
+            .collect();
+        let fabric = AsyncFabric::new(topo);
+        let mut out = Vec::new();
+        let mut ledger = TrafficLedger::new();
+        fabric.all_gather_into(&shards, &mut out, &mut ledger);
+        let first = out.clone();
+        let first_ledger = ledger;
+        for _ in 0..3 {
+            ledger.reset();
+            fabric.all_gather_into(&shards, &mut out, &mut ledger);
+            assert_eq!(out, first, "repeat call changed the result");
+            assert_eq!(ledger, first_ledger, "repeat call changed the traffic");
+        }
     }
 }

@@ -42,6 +42,22 @@ pub trait Collective {
     /// rank — what lets the lockstep simulation return one vector).
     fn all_gather(&self, shards: &[EncodedTensor], ledger: &mut TrafficLedger) -> Vec<f32>;
 
+    /// AllGather into a caller-owned buffer. The default delegates to
+    /// [`Self::all_gather`] and *replaces* `out` with the fresh result
+    /// (the old capacity is dropped, not reused); the async persistent
+    /// runtime overrides it to concatenate straight into the warm
+    /// buffer, making its steady-state gather allocation-free. Callers
+    /// holding a `Box<dyn Collective>` get whichever the backend
+    /// provides.
+    fn all_gather_into(
+        &self,
+        shards: &[EncodedTensor],
+        out: &mut Vec<f32>,
+        ledger: &mut TrafficLedger,
+    ) {
+        *out = self.all_gather(shards, ledger);
+    }
+
     /// ReduceScatter: `inputs[rank]` is that rank's full-length local
     /// contribution. Output is, per rank, the sum over all ranks
     /// restricted to the rank's shard.

@@ -37,6 +37,14 @@ impl TrafficLedger {
     pub fn reset(&mut self) {
         *self = Self::default();
     }
+
+    /// Drain: return the accumulated totals and reset to zero — what a
+    /// per-link ring worker hands to the caller-side merge at the end
+    /// of a collective call, leaving its scratch ledger clean for the
+    /// next one.
+    pub fn take(&mut self) -> TrafficLedger {
+        std::mem::take(self)
+    }
 }
 
 #[cfg(test)]
@@ -58,5 +66,17 @@ mod tests {
         assert_eq!(b.total_bytes(), 151);
         b.reset();
         assert_eq!(b, TrafficLedger::default());
+    }
+
+    #[test]
+    fn take_drains_and_resets() {
+        let mut a = TrafficLedger::new();
+        a.record(7, true);
+        a.record(3, false);
+        let t = a.take();
+        assert_eq!(t.inter_bytes, 7);
+        assert_eq!(t.intra_bytes, 3);
+        assert_eq!(t.messages, 2);
+        assert_eq!(a, TrafficLedger::default());
     }
 }

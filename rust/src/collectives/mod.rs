@@ -19,19 +19,39 @@
 //!   simulation over per-rank buffers.
 //! * [`FlatFabric`] — the non-hierarchical ablation baseline (every
 //!   rank talks to every rank). Same lockstep execution model.
-//! * [`AsyncFabric`] — threaded message passing: one OS thread per
-//!   rank, ring algorithms, and *only* serialized
-//!   [`crate::quant::EncodedTensor::to_bytes`] octets crossing
-//!   `std::sync::mpsc` channels. Per-rank rng streams keep stochastic
-//!   rounding reproducible regardless of interleaving, and per-link
-//!   ledgers merge into the same [`TrafficLedger`] totals. This is the
-//!   stepping stone to a real NCCL/CGX socket backend: the bytes it
-//!   moves are already the exact wire format.
+//! * [`AsyncFabric`] — threaded message passing with a **persistent
+//!   per-rank runtime**: P worker threads are spawned once at fabric
+//!   construction and live until drop (shutdown is a protocol command,
+//!   sent from `Drop`, which joins them). Each collective call is one
+//!   round of a small command protocol
+//!   (`AllGather` / `ReduceScatter` / `AllReduce` / `Shutdown`) over
+//!   per-rank channels; the rings move *only* serialized
+//!   [`crate::quant::EncodedTensor`] wire octets, serialized into
+//!   recycled per-rank buffers (`to_bytes_into`) and dequantized
+//!   straight out of the link buffer through the borrowing
+//!   [`crate::quant::EncodedView`] parser — the steady-state hot loop
+//!   performs zero heap allocations and zero payload copies beyond the
+//!   channel send itself. Per-rank rng streams keep stochastic
+//!   rounding reproducible regardless of interleaving, per-link
+//!   ledgers merge into the same [`TrafficLedger`] totals, and the
+//!   all-ranks gather cross-check runs on every call in debug builds
+//!   but only on a 1-in-N sample in release. The legacy
+//!   spawn-P-threads-per-call mode survives as
+//!   [`AsyncFabric::spawn_per_call`], the measured baseline in
+//!   `benches/collectives_bench.rs`. This is the stepping stone to a
+//!   real NCCL/CGX socket backend: the bytes it moves are already the
+//!   exact wire format, and the long-lived worker group mirrors a real
+//!   process group's lifecycle.
 //!
 //! All three produce the same decoded values for lossless codecs (the
 //! cross-backend differential harness in `tests/fabric_differential.rs`
-//! pins FP32 agreement bit-for-bit and bounds the lossy codecs by their
-//! own resolution) and account bytes exactly as a real execution would.
+//! pins FP32 agreement bit-for-bit, bounds the lossy codecs by their
+//! own resolution, and pins that reusing one fabric instance across
+//! back-to-back calls is bit-identical to fresh instances) and account
+//! bytes exactly as a real execution would; `tests/alloc_counter.rs`
+//! pins the persistent runtime's zero-allocation steady state with a
+//! counting global allocator. See EXPERIMENTS.md §Perf for the
+//! runtime's before/after benchmark record.
 
 pub mod async_fabric;
 pub mod fabric;

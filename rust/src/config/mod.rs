@@ -18,6 +18,14 @@
 //! lockstep|flat|async` selects the [`crate::collectives::Collective`]
 //! backend the trainer wires into its parameter store (`async` is the
 //! threaded ring backend, [`crate::collectives::AsyncFabric`]).
+//! [`FabricOptions`] carries the async runtime's knobs:
+//! `--fabric-persistent true|false` (default true: spawn the per-rank
+//! worker threads once, at fabric construction, instead of per call)
+//! and `--fabric-check-every N` (release-build gather cross-check
+//! sampling period; 0 disables, debug builds always check). Fabrics
+//! are constructed **once per run** and reused across every step —
+//! checkpoint restore re-shards parameters in place rather than
+//! tearing down a running transport.
 
 use crate::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric};
 use crate::optim::AdamW;
@@ -62,12 +70,41 @@ impl FabricKind {
         }
     }
 
-    /// Construct the backend for a cluster.
+    /// Construct the backend for a cluster with default options.
     pub fn build(self, topo: Topology) -> Box<dyn Collective> {
+        self.build_with(topo, FabricOptions::default())
+    }
+
+    /// Construct the backend for a cluster. `opts` only affects the
+    /// async backend (the lockstep simulators have no runtime).
+    pub fn build_with(self, topo: Topology, opts: FabricOptions) -> Box<dyn Collective> {
         match self {
             FabricKind::Lockstep => Box::new(LockstepFabric::new(topo)),
             FabricKind::Flat => Box::new(FlatFabric::new(topo)),
-            FabricKind::Async => Box::new(AsyncFabric::new(topo)),
+            FabricKind::Async => {
+                Box::new(AsyncFabric::with_options(topo, opts.persistent, opts.check_every))
+            }
+        }
+    }
+}
+
+/// Runtime knobs for the async transport (`--fabric async`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FabricOptions {
+    /// Spawn the per-rank worker threads once at fabric construction
+    /// (the persistent runtime) instead of per collective call.
+    pub persistent: bool,
+    /// Release-build gather cross-check sampling period: verify the
+    /// gathered tensor across all ranks every Nth call (0 = never;
+    /// debug builds always check).
+    pub check_every: u64,
+}
+
+impl Default for FabricOptions {
+    fn default() -> Self {
+        FabricOptions {
+            persistent: true,
+            check_every: crate::collectives::async_fabric::DEFAULT_CHECK_EVERY,
         }
     }
 }
@@ -99,6 +136,9 @@ pub struct RunConfig {
     pub n_accum: usize,
     /// Collective transport backend.
     pub fabric: FabricKind,
+    /// Async-transport runtime knobs (persistent workers, cross-check
+    /// sampling rate).
+    pub fabric_opts: FabricOptions,
 }
 
 impl RunConfig {
@@ -124,6 +164,13 @@ impl RunConfig {
             inter_gbps: args.f64_or("bandwidth", 10.0),
             n_accum: args.usize_or("accum", 1),
             fabric: FabricKind::parse(&args.str_or("fabric", "lockstep"))?,
+            fabric_opts: FabricOptions {
+                persistent: args.bool_or("fabric-persistent", true),
+                check_every: args.u64_or(
+                    "fabric-check-every",
+                    crate::collectives::async_fabric::DEFAULT_CHECK_EVERY,
+                ),
+            },
         })
     }
 
@@ -309,5 +356,27 @@ mod tests {
             "train --fabric async".split_whitespace().map(|s| s.to_string()),
         );
         assert_eq!(RunConfig::from_args(&a).unwrap().fabric, FabricKind::Async);
+    }
+
+    #[test]
+    fn fabric_options_flags_parse_and_build() {
+        // defaults: persistent runtime, sampled release cross-check
+        let a = Args::parse("train".split_whitespace().map(|s| s.to_string()));
+        let c = RunConfig::from_args(&a).unwrap();
+        assert_eq!(c.fabric_opts, FabricOptions::default());
+        assert!(c.fabric_opts.persistent);
+        assert!(c.fabric_opts.check_every > 0);
+        // explicit overrides
+        let a = Args::parse(
+            "train --fabric async --fabric-persistent false --fabric-check-every 7"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let c = RunConfig::from_args(&a).unwrap();
+        assert!(!c.fabric_opts.persistent);
+        assert_eq!(c.fabric_opts.check_every, 7);
+        let fabric = c.fabric.build_with(c.topo, c.fabric_opts);
+        assert_eq!(fabric.name(), "async");
+        assert_eq!(fabric.topo(), c.topo);
     }
 }

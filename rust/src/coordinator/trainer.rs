@@ -66,8 +66,11 @@ impl Trainer {
         let rt = GptRuntime::load(engine, root, &cfg.model, cfg.variant)?;
         let dims = rt.manifest.dims.clone();
         let full = rt.init_params(cfg.seed as u32)?;
+        // The fabric is constructed exactly once per run (a persistent
+        // async fabric spawns its rank workers here) and reused across
+        // every step and checkpoint restore.
         let store = ShardedStore::from_full(rt.manifest.params.clone(), &full, cfg.topo)
-            .with_fabric(cfg.fabric.build(cfg.topo));
+            .with_fabric(cfg.fabric.build_with(cfg.topo, cfg.fabric_opts));
         let world = cfg.topo.world();
         let states: Vec<Vec<AdamState>> = store
             .specs
@@ -285,8 +288,9 @@ impl Trainer {
         for (n, s) in ck.names.iter().zip(&specs) {
             anyhow::ensure!(n == &s.name, "checkpoint tensor {n} != spec {}", s.name);
         }
-        self.store = ShardedStore::from_full(specs.clone(), &ck.params, self.cfg.topo)
-            .with_fabric(self.cfg.fabric.build(self.cfg.topo));
+        // Re-shard in place: the store's fabric (and its persistent
+        // worker runtime, if async) survives the restore.
+        self.store.reset_from_full(&ck.params);
         let topo = self.cfg.topo;
         let world = topo.world();
         self.states = specs

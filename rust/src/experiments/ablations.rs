@@ -80,18 +80,22 @@ fn ablation_hierarchical(_args: &Args) -> Result<()> {
             *a += x;
         }
     }
+    // One fabric per backend for the whole sweep: the async backend's
+    // persistent rank workers spawn here, once, and serve every row.
+    let (hier_fab, flat_fab, ring_fab) =
+        (LockstepFabric::new(topo), FlatFabric::new(topo), AsyncFabric::new(topo));
     let mut rows = Vec::new();
     for bits in [4u8, 8] {
         let codec = MinMaxCodec::new(bits, 1024, true);
         let mut rng_h = Pcg64::seeded(21);
         let mut lh = TrafficLedger::new();
-        let h = LockstepFabric::new(topo).reduce_scatter(&inputs, &codec, &mut rng_h, &mut lh);
+        let h = hier_fab.reduce_scatter(&inputs, &codec, &mut rng_h, &mut lh);
         let mut rng_f = Pcg64::seeded(21);
         let mut lf = TrafficLedger::new();
-        let f = FlatFabric::new(topo).reduce_scatter(&inputs, &codec, &mut rng_f, &mut lf);
+        let f = flat_fab.reduce_scatter(&inputs, &codec, &mut rng_f, &mut lf);
         let mut rng_a = Pcg64::seeded(21);
         let mut la = TrafficLedger::new();
-        let a = AsyncFabric::new(topo).reduce_scatter(&inputs, &codec, &mut rng_a, &mut la);
+        let a = ring_fab.reduce_scatter(&inputs, &codec, &mut rng_a, &mut la);
         rows.push(vec![
             format!("{bits}"),
             format!("{:.2}", lh.inter_bytes as f64 / (1 << 20) as f64),

@@ -27,22 +27,15 @@ impl ShardedStore {
     /// Partition full parameters into per-rank shards (default
     /// hierarchical [`LockstepFabric`] transport).
     pub fn from_full(specs: Vec<ParamSpec>, params: &FlatParams, topo: Topology) -> Self {
-        assert_eq!(specs.len(), params.len());
-        let p = topo.world();
-        let mut shards = Vec::with_capacity(specs.len());
-        for (spec, full) in specs.iter().zip(params) {
-            assert_eq!(spec.numel(), full.len(), "{}", spec.name);
-            let per: Vec<Vec<f32>> = (0..p)
-                .map(|r| full[topo.shard_range(full.len(), r)].to_vec())
-                .collect();
-            shards.push(per);
-        }
-        ShardedStore {
+        let shards = vec![Vec::new(); specs.len()];
+        let mut store = ShardedStore {
             topo,
             specs,
             fabric: Box::new(LockstepFabric::new(topo)),
             shards,
-        }
+        };
+        store.reset_from_full(params);
+        store
     }
 
     /// Swap the collective transport backend (must match the topology).
@@ -55,6 +48,21 @@ impl ShardedStore {
     /// The transport in use.
     pub fn fabric(&self) -> &dyn Collective {
         self.fabric.as_ref()
+    }
+
+    /// Re-shard new full parameters into the existing store, keeping
+    /// specs and the transport alive. Fabrics are constructed once per
+    /// run — a checkpoint restore must not tear down a running
+    /// persistent runtime just to swap parameter values.
+    pub fn reset_from_full(&mut self, params: &FlatParams) {
+        assert_eq!(params.len(), self.specs.len(), "parameter arity mismatch");
+        let topo = self.topo;
+        let p = topo.world();
+        for ((spec, full), per) in self.specs.iter().zip(params).zip(self.shards.iter_mut()) {
+            assert_eq!(spec.numel(), full.len(), "{}", spec.name);
+            per.clear();
+            per.extend((0..p).map(|r| full[topo.shard_range(full.len(), r)].to_vec()));
+        }
     }
 
     /// Reassemble the exact master parameters (no quantization) —
@@ -185,6 +193,22 @@ mod tests {
         assert_eq!(back, params);
         assert_eq!(store.n_params(), 32 * 64 + 128);
         assert_eq!(store.fabric().name(), "lockstep");
+    }
+
+    #[test]
+    fn reset_from_full_reshards_and_keeps_fabric() {
+        let topo = Topology::new(2, 3);
+        let mut store = ShardedStore::from_full(toy_specs(), &toy_params(20), topo)
+            .with_fabric(Box::new(FlatFabric::new(topo)));
+        let fabric_before = store.fabric() as *const dyn Collective as *const ();
+        let new_params = toy_params(21);
+        store.reset_from_full(&new_params);
+        assert_eq!(store.full_master(), new_params);
+        // the transport object itself survived the reset (same data
+        // pointer, metadata ignored)
+        assert_eq!(store.fabric().name(), "flat");
+        let fabric_after = store.fabric() as *const dyn Collective as *const ();
+        assert!(std::ptr::eq(fabric_after, fabric_before));
     }
 
     #[test]

@@ -12,6 +12,20 @@
 //! and [`EncodedTensor::to_bytes`] / [`EncodedTensor::from_bytes`]
 //! realize the exact octet stream, so `byte_size()` is the length of a
 //! real serialization, not an estimate.
+//!
+//! Two call styles exist for each direction of the wire:
+//!
+//! * **Owning** — [`EncodedTensor::to_bytes`] allocates the message,
+//!   [`EncodedTensor::from_bytes`] materializes owned `meta`/`levels`/
+//!   `payload` vectors. Convenient, one allocation per message.
+//! * **Reusing / borrowing** — [`EncodedTensor::to_bytes_into`] writes
+//!   into a caller-owned buffer (zero allocations once the buffer is
+//!   warm), and [`EncodedTensor::view_bytes`] parses a message into an
+//!   [`EncodedView`] whose sections *borrow* the wire buffer: the
+//!   header and section boundaries are validated, but per-bucket meta
+//!   and the packed codes are read straight out of the received bytes
+//!   at decode time. This is what lets the threaded ring backend run
+//!   its hot loop with zero payload copies beyond the channel send.
 
 use super::minmax::{BucketMeta, MinMaxQuantizer};
 use anyhow::{bail, Result};
@@ -179,7 +193,18 @@ impl EncodedTensor {
 
     /// Serialize to the exact wire octets (length == `byte_size()`).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.byte_size());
+        let mut out = Vec::new();
+        self.to_bytes_into(&mut out);
+        out
+    }
+
+    /// Serialize into a caller-owned buffer (cleared first), reusing
+    /// its capacity: the allocation-free twin of [`Self::to_bytes`],
+    /// used by the ring backend to recycle one outgoing byte buffer
+    /// per rank across every hop and every collective call.
+    pub fn to_bytes_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.byte_size());
         out.push(self.scheme.tag());
         out.push(self.bits);
         out.extend_from_slice(&(self.bucket as u32).to_le_bytes());
@@ -193,11 +218,22 @@ impl EncodedTensor {
         }
         out.extend_from_slice(&self.payload);
         debug_assert_eq!(out.len(), self.byte_size());
-        out
     }
 
-    /// Parse a message serialized by [`Self::to_bytes`].
+    /// Parse a message serialized by [`Self::to_bytes`] into an owned
+    /// tensor. Validation is shared with [`Self::view_bytes`]; this
+    /// additionally copies the meta/levels/payload sections out of the
+    /// wire buffer.
     pub fn from_bytes(bytes: &[u8]) -> Result<EncodedTensor> {
+        Ok(Self::view_bytes(bytes)?.to_owned_tensor())
+    }
+
+    /// Parse a message into a zero-copy [`EncodedView`]: the header is
+    /// validated and the section boundaries are computed, but meta,
+    /// level table and payload stay *borrowed* from `bytes`. Decoding
+    /// through the view reads codes straight out of the wire buffer —
+    /// no intermediate `EncodedTensor` is materialized.
+    pub fn view_bytes(bytes: &[u8]) -> Result<EncodedView<'_>> {
         anyhow::ensure!(bytes.len() >= HEADER_BYTES, "short header: {} bytes", bytes.len());
         let scheme = Scheme::from_tag(bytes[0])?;
         let bits = bytes[1];
@@ -248,31 +284,159 @@ impl EncodedTensor {
             "message length {} != expected {expect} for {scheme:?} n={n}",
             bytes.len()
         );
-        let mut off = HEADER_BYTES;
+        let meta_end = HEADER_BYTES + n_meta * 8;
+        let levels_end = meta_end + n_levels * 4;
+        Ok(EncodedView {
+            scheme,
+            bits,
+            bucket,
+            n,
+            meta: &bytes[HEADER_BYTES..meta_end],
+            levels: &bytes[meta_end..levels_end],
+            payload: &bytes[levels_end..],
+        })
+    }
+}
+
+/// A validated, borrowing view of one serialized [`EncodedTensor`]:
+/// header fields parsed, meta / level-table / payload sections still
+/// pointing into the wire buffer. Produced by
+/// [`EncodedTensor::view_bytes`]; decode reads per-bucket metadata and
+/// packed codes lazily, so a ring hop can dequantize a received message
+/// without copying a single payload byte.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodedView<'a> {
+    pub scheme: Scheme,
+    pub bits: u8,
+    pub bucket: usize,
+    pub n: usize,
+    meta: &'a [u8],
+    levels: &'a [u8],
+    payload: &'a [u8],
+}
+
+impl<'a> EncodedView<'a> {
+    /// Number of per-bucket metadata entries carried by the message.
+    pub fn n_meta(&self) -> usize {
+        self.meta.len() / 8
+    }
+
+    /// Per-bucket (lo, scale) metadata, parsed on demand from the wire
+    /// bytes.
+    #[inline]
+    pub fn meta_at(&self, i: usize) -> BucketMeta {
+        let b = &self.meta[i * 8..i * 8 + 8];
+        BucketMeta {
+            lo: f32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+            scale: f32::from_le_bytes([b[4], b[5], b[6], b[7]]),
+        }
+    }
+
+    /// Number of learned-level table entries (0 unless Learned).
+    pub fn n_levels(&self) -> usize {
+        self.levels.len() / 4
+    }
+
+    /// Learned-level table entry, parsed on demand.
+    #[inline]
+    pub fn level_at(&self, i: usize) -> f32 {
+        let b = &self.levels[i * 4..i * 4 + 4];
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    /// The packed-codes / raw-float section, borrowed from the wire.
+    pub fn payload(&self) -> &'a [u8] {
+        self.payload
+    }
+
+    /// Total message length (equals the source buffer's length).
+    pub fn byte_size(&self) -> usize {
+        HEADER_BYTES + self.meta.len() + self.levels.len() + self.payload.len()
+    }
+
+    /// Materialize an owned [`EncodedTensor`] (what
+    /// [`EncodedTensor::from_bytes`] returns).
+    pub fn to_owned_tensor(&self) -> EncodedTensor {
+        let n_meta = self.n_meta();
         let mut meta = Vec::with_capacity(n_meta);
-        for _ in 0..n_meta {
-            let lo = f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
-            let scale = f32::from_le_bytes([
-                bytes[off + 4],
-                bytes[off + 5],
-                bytes[off + 6],
-                bytes[off + 7],
-            ]);
-            meta.push(BucketMeta { lo, scale });
-            off += 8;
+        for i in 0..n_meta {
+            meta.push(self.meta_at(i));
         }
+        let n_levels = self.n_levels();
         let mut levels = Vec::with_capacity(n_levels);
-        for _ in 0..n_levels {
-            levels.push(f32::from_le_bytes([
-                bytes[off],
-                bytes[off + 1],
-                bytes[off + 2],
-                bytes[off + 3],
-            ]));
-            off += 4;
+        for i in 0..n_levels {
+            levels.push(self.level_at(i));
         }
-        let payload = bytes[off..].to_vec();
-        Ok(EncodedTensor { scheme, bits, bucket, n, meta, levels, payload })
+        EncodedTensor {
+            scheme: self.scheme,
+            bits: self.bits,
+            bucket: self.bucket,
+            n: self.n,
+            meta,
+            levels,
+            payload: self.payload.to_vec(),
+        }
+    }
+
+    /// Decode to f32 values straight out of the borrowed wire bytes.
+    /// Bit-identical to `from_bytes(..).decode(..)` for every scheme
+    /// (same arithmetic, same order), without materializing the owned
+    /// message.
+    pub fn decode(&self, out: &mut Vec<f32>) {
+        out.clear();
+        match self.scheme {
+            Scheme::Fp32 => {
+                out.reserve(self.n);
+                for c in self.payload.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            Scheme::Fp16 => {
+                out.reserve(self.n);
+                for c in self.payload.chunks_exact(2) {
+                    out.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+                }
+            }
+            Scheme::MinMax => CODES_SCRATCH.with(|cell| {
+                let mut codes = cell.borrow_mut();
+                codes.clear();
+                codes.resize(self.n, 0);
+                unpack_bits(self.payload, self.bits, &mut codes);
+                out.reserve(self.n);
+                for (bi, chunk) in codes.chunks(self.bucket).enumerate() {
+                    let BucketMeta { lo, scale } = self.meta_at(bi);
+                    for &c in chunk {
+                        out.push(c as f32 * scale + lo);
+                    }
+                }
+            }),
+            Scheme::Learned => CODES_SCRATCH.with(|cell| {
+                let mut codes = cell.borrow_mut();
+                codes.clear();
+                codes.resize(self.n, 0);
+                unpack_bits(self.payload, self.bits, &mut codes);
+                out.reserve(self.n);
+                for (bi, chunk) in codes.chunks(self.bucket).enumerate() {
+                    // scale stores (hi - lo); levels are in [0,1]
+                    let BucketMeta { lo, scale } = self.meta_at(bi);
+                    for &c in chunk {
+                        out.push(lo + self.level_at(c as usize) * scale);
+                    }
+                }
+            }),
+            Scheme::Lattice => {
+                out.reserve(self.n);
+                for (bi, chunk) in self.payload.chunks(2 * self.bucket).enumerate() {
+                    // meta.lo holds the bucket's random shift r,
+                    // meta.scale holds δ: value = δ·k + r.
+                    let BucketMeta { lo: shift, scale: delta } = self.meta_at(bi);
+                    for c in chunk.chunks_exact(2) {
+                        let k = i16::from_le_bytes([c[0], c[1]]) as f32;
+                        out.push(delta * k + shift);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -339,12 +503,25 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 }
 
 /// Pack `codes` (each < 2^bits) into a little-endian bitstream.
+/// Allocating wrapper around [`pack_bits_into`].
 pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_bits_into(codes, bits, &mut out);
+    out
+}
+
+/// Pack `codes` into `out` (cleared first), reusing its capacity — the
+/// allocation-free packing primitive for callers that must keep the
+/// unpacked codes around. Encoders that quantize directly into the
+/// message payload use the aliasing-safe [`pack_bits_in_place`]
+/// instead; both produce byte-identical streams.
+pub fn pack_bits_into(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
     assert!((1..=8).contains(&bits));
+    out.clear();
+    out.reserve((codes.len() * bits as usize).div_ceil(8));
     match bits {
-        8 => codes.to_vec(),
+        8 => out.extend_from_slice(codes),
         4 => {
-            let mut out = Vec::with_capacity(codes.len().div_ceil(2));
             let mut it = codes.chunks_exact(2);
             for p in &mut it {
                 out.push(p[0] | (p[1] << 4));
@@ -352,10 +529,8 @@ pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
             if let [last] = it.remainder() {
                 out.push(*last);
             }
-            out
         }
         2 => {
-            let mut out = Vec::with_capacity(codes.len().div_ceil(4));
             let mut it = codes.chunks_exact(4);
             for p in &mut it {
                 out.push(p[0] | (p[1] << 2) | (p[2] << 4) | (p[3] << 6));
@@ -368,13 +543,10 @@ pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
                 }
                 out.push(b);
             }
-            out
         }
         _ => {
             // generic bitstream via a u64 shift accumulator (no per-code
             // byte indexing; flushes whole bytes as they fill)
-            let total_bits = codes.len() * bits as usize;
-            let mut out = Vec::with_capacity(total_bits.div_ceil(8));
             let mut acc: u64 = 0;
             let mut nbits: u32 = 0;
             for &c in codes {
@@ -389,7 +561,6 @@ pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
             if nbits > 0 {
                 out.push(acc as u8);
             }
-            out
         }
     }
 }
@@ -500,6 +671,20 @@ mod tests {
                 let mut out = vec![0u8; n];
                 unpack_bits(&packed, bits, &mut out);
                 assert_eq!(out, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_bits_into_reuses_buffer_and_matches() {
+        let mut rng = Pcg64::seeded(23);
+        let mut buf = Vec::new();
+        for bits in 1..=8u8 {
+            for n in [0usize, 1, 9, 255, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+                pack_bits_into(&codes, bits, &mut buf);
+                assert_eq!(buf, pack_bits(&codes, bits), "bits={bits} n={n}");
             }
         }
     }
@@ -658,6 +843,7 @@ mod tests {
         }
         // corrupt/truncated inputs fail cleanly
         assert!(EncodedTensor::from_bytes(&[1, 2, 3]).is_err());
+        assert!(EncodedTensor::view_bytes(&[1, 2, 3]).is_err());
         let mut bad = EncodedTensor::fp32(&v).to_bytes();
         bad[0] = 99; // unknown scheme
         assert!(EncodedTensor::from_bytes(&bad).is_err());
@@ -673,5 +859,65 @@ mod tests {
         hdr[1] = 4;
         hdr[6..14].copy_from_slice(&u64::MAX.to_le_bytes()); // absurd n
         assert!(EncodedTensor::from_bytes(&hdr).is_err());
+    }
+
+    #[test]
+    fn to_bytes_into_matches_to_bytes_with_dirty_buffer() {
+        use crate::quant::codecs::{Fp16Codec, LatticeCodec, LearnedCodec};
+        use crate::quant::LearnedLevels;
+        let mut rng = Pcg64::seeded(31);
+        let mut v = vec![0.0f32; 513];
+        rng.fill_normal(&mut v, 1.0);
+        let codecs: Vec<Box<dyn Codec>> = vec![
+            Box::new(crate::quant::codecs::Fp32Codec),
+            Box::new(Fp16Codec),
+            Box::new(MinMaxCodec::new(5, 128, true)),
+            Box::new(LearnedCodec::new(LearnedLevels::uniform(4), 64)),
+            Box::new(LatticeCodec::new(0.1, 128)),
+        ];
+        // a deliberately dirty, over-sized buffer: reuse must clear it
+        let mut buf = vec![0xAAu8; 100_000];
+        for c in &codecs {
+            let e = c.encode(&v, &mut rng);
+            e.to_bytes_into(&mut buf);
+            assert_eq!(buf, e.to_bytes(), "{}", c.name());
+            assert_eq!(buf.len(), e.byte_size(), "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn view_bytes_decodes_bit_identical_to_from_bytes() {
+        use crate::quant::codecs::{Fp16Codec, Fp32Codec, LatticeCodec, LearnedCodec};
+        use crate::quant::LearnedLevels;
+        let mut rng = Pcg64::seeded(37);
+        let mut v = vec![0.0f32; 1023]; // ragged vs every bucket below
+        rng.fill_normal(&mut v, 1.0);
+        let codecs: Vec<Box<dyn Codec>> = vec![
+            Box::new(Fp32Codec),
+            Box::new(Fp16Codec),
+            Box::new(MinMaxCodec::new(3, 256, true)),
+            Box::new(MinMaxCodec::new(8, 100, false)),
+            Box::new(LearnedCodec::new(LearnedLevels::uniform(5), 128)),
+            Box::new(LatticeCodec::new(0.05, 256)),
+        ];
+        for c in &codecs {
+            let e = c.encode(&v, &mut rng);
+            let bytes = e.to_bytes();
+            let view = EncodedTensor::view_bytes(&bytes).unwrap();
+            assert_eq!(view.byte_size(), bytes.len(), "{}", c.name());
+            assert_eq!(view.n, e.n, "{}", c.name());
+            assert_eq!(view.n_meta(), e.meta.len(), "{}", c.name());
+            assert_eq!(view.n_levels(), e.levels.len(), "{}", c.name());
+            // the view materializes back to the identical owned message
+            assert_eq!(view.to_owned_tensor(), e, "{}", c.name());
+            // and decodes to the identical bits without materializing
+            let (mut a, mut b) = (vec![], vec![]);
+            view.decode(&mut a);
+            EncodedTensor::from_bytes(&bytes).unwrap().decode(&mut b);
+            assert_eq!(a.len(), b.len(), "{}", c.name());
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} elem {i}", c.name());
+            }
+        }
     }
 }

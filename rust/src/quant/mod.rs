@@ -6,7 +6,10 @@
 //! 1. **Wire format** — [`codec::EncodedTensor`] is the byte-exact,
 //!    self-describing message that moves through the simulated fabric
 //!    (14-byte header + per-bucket meta + optional level table +
-//!    packed payload; `to_bytes`/`from_bytes` realize the octets).
+//!    packed payload; `to_bytes`/`from_bytes` realize the octets;
+//!    `to_bytes_into` and the borrowing [`codec::EncodedView`]
+//!    deserializer are their allocation-free twins for the transport
+//!    hot path).
 //! 2. **Codecs** — [`codecs`] implements [`Codec`] for every scheme:
 //!    [`Fp32Codec`], [`Fp16Codec`] (the FSDP baseline's gradient
 //!    format), [`MinMaxCodec`] (bucketed min–max uniform grid, §5.1),
@@ -34,7 +37,7 @@ pub mod minmax;
 pub mod policy;
 pub mod qsgd;
 
-pub use codec::{EncodedTensor, Scheme};
+pub use codec::{EncodedTensor, EncodedView, Scheme};
 pub use codecs::{AnyCodec, Codec, Fp16Codec, Fp32Codec, LatticeCodec, LearnedCodec, MinMaxCodec};
 pub use lattice::LatticeQuantizer;
 pub use learned::LearnedLevels;

@@ -408,6 +408,71 @@ fn fabric_differential_ragged_prime_reduce_scatter() {
 }
 
 #[test]
+fn fabric_differential_same_instance_reuse_matches_fresh() {
+    // Persistent-runtime regression: every registered fabric must give
+    // bit-identical results (and ledger totals) whether one instance
+    // serves two back-to-back collectives or each call gets a fresh
+    // instance — i.e. per-rank scratch reuse never leaks state across
+    // calls.
+    let topo = Topology::new(2, 2);
+    let n = 1037; // ragged blocks
+    let full = rand_vec(n, 60);
+    let inputs: Vec<Vec<f32>> =
+        (0..topo.world()).map(|r| rand_vec(n, 70 + r as u64)).collect();
+    let codec = MinMaxCodec::new(4, 128, true);
+    let mut enc_rng = Pcg64::seeded(61);
+    let shards: Vec<EncodedTensor> = (0..topo.world())
+        .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut enc_rng))
+        .collect();
+    for kind in FabricKind::ALL {
+        // one instance, two rounds of (all_gather, reduce_scatter)
+        let fabric = kind.build(topo);
+        let mut reused_ledger = TrafficLedger::new();
+        let g1 = fabric.all_gather(&shards, &mut reused_ledger);
+        let r1 = fabric.reduce_scatter(
+            &inputs,
+            &codec,
+            &mut Pcg64::seeded(62),
+            &mut reused_ledger,
+        );
+        let g2 = fabric.all_gather(&shards, &mut reused_ledger);
+        let r2 = fabric.reduce_scatter(
+            &inputs,
+            &codec,
+            &mut Pcg64::seeded(62),
+            &mut reused_ledger,
+        );
+        assert_eq!(g1, g2, "{}: repeat all_gather on one instance drifted", kind.name());
+        assert_eq!(r1, r2, "{}: repeat reduce_scatter on one instance drifted", kind.name());
+        // fresh instance per call
+        let mut fresh_ledger = TrafficLedger::new();
+        let h1 = kind.build(topo).all_gather(&shards, &mut fresh_ledger);
+        let s1 = kind.build(topo).reduce_scatter(
+            &inputs,
+            &codec,
+            &mut Pcg64::seeded(62),
+            &mut fresh_ledger,
+        );
+        let h2 = kind.build(topo).all_gather(&shards, &mut fresh_ledger);
+        let s2 = kind.build(topo).reduce_scatter(
+            &inputs,
+            &codec,
+            &mut Pcg64::seeded(62),
+            &mut fresh_ledger,
+        );
+        assert_eq!(g1, h1, "{}: reused vs fresh all_gather", kind.name());
+        assert_eq!(g2, h2, "{}: reused vs fresh all_gather (2nd)", kind.name());
+        assert_eq!(r1, s1, "{}: reused vs fresh reduce_scatter", kind.name());
+        assert_eq!(r2, s2, "{}: reused vs fresh reduce_scatter (2nd)", kind.name());
+        assert_eq!(
+            reused_ledger, fresh_ledger,
+            "{}: ledger totals differ between reused and fresh instances",
+            kind.name()
+        );
+    }
+}
+
+#[test]
 fn fabric_differential_async_seed_reproducibility() {
     // Two runs from the same caller seed must be bit-identical —
     // including the ledger — independent of thread scheduling; a
