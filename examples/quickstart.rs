@@ -1,11 +1,12 @@
 //! Quickstart: the two surfaces of the crate in one file.
 //!
 //! 1. The **Codec / Collective API** — encode a tensor with the codec a
-//!    [`QuantPolicy`] resolves, push it through each of the three
-//!    registered fabrics (`lockstep` hierarchical, `flat` all-pairs,
-//!    and `async` — the threaded ring backend that moves real
-//!    serialized bytes between per-rank OS threads; select one at the
-//!    CLI with `--fabric lockstep|flat|async`), and read the byte-exact
+//!    [`QuantPolicy`] resolves, push it through registered fabrics
+//!    (`lockstep` hierarchical, `flat` all-pairs, `async` — the
+//!    threaded ring backend that moves real serialized bytes between
+//!    per-rank OS threads — and `socket`, the same ring over real
+//!    localhost TCP; select one at the CLI with
+//!    `--fabric lockstep|flat|async|socket`), and read the byte-exact
 //!    traffic ledger. This part runs with no artifacts.
 //! 2. The **trainer** — a tiny GPT with QSDP (W8G8) on 4 simulated
 //!    workers for 30 steps vs the FSDP baseline (needs `make

@@ -17,11 +17,16 @@
 //! The grid includes the rows the persistent-runtime work is judged
 //! by: `async-persistent` vs `async-spawn-per-call` on small-tensor
 //! all_gather (the spawn/join overhead the persistent runtime
-//! removes), and `to_bytes` vs `to_bytes_into` / `from_bytes+decode`
-//! vs `view_bytes+decode` on the wire path (the allocation + copy the
-//! reusing/borrowing serializers remove).
+//! removes), `socket` (the same ring over real localhost TCP — its gap
+//! to `async-persistent` is the kernel-socket tax), and `to_bytes` vs
+//! `to_bytes_into` / `from_bytes+decode` vs `view_bytes+decode` on the
+//! wire path (the allocation + copy the reusing/borrowing serializers
+//! remove). Environments without loopback TCP get a printed note and
+//! no socket rows.
 
-use qsdp::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric, TrafficLedger};
+use qsdp::collectives::{
+    AsyncFabric, Collective, FlatFabric, LockstepFabric, SocketFabric, TrafficLedger,
+};
 use qsdp::model::ParamKind;
 use qsdp::quant::{Codec, EncodedTensor, Fp32Codec, MinMaxCodec, QuantPolicy, TensorRole};
 use qsdp::sim::{NetworkModel, Topology};
@@ -92,17 +97,34 @@ fn snapshot_grid() -> Vec<BenchRow> {
         ("minmax4", Box::new(MinMaxCodec::new(4, 1024, true))),
     ];
     // check_every = 0: measure the steady-state (non-cross-check)
-    // release path on both async modes.
+    // release path on both async modes and the socket backend.
     let lock = LockstepFabric::new(topo);
     let flat = FlatFabric::new(topo);
     let persistent = AsyncFabric::with_options(topo, true, 0);
     let spawned = AsyncFabric::with_options(topo, false, 0);
-    let fabrics: Vec<(&'static str, &dyn Collective)> = vec![
+    // Real TCP ring on ephemeral loopback ports; sandboxes without
+    // loopback sockets drop the rows with a note, never silently.
+    let socket = match SocketFabric::with_options(
+        topo,
+        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+        0,
+        0,
+    ) {
+        Ok(f) => Some(f),
+        Err(e) => {
+            println!("note: socket fabric unavailable ({e}); omitting socket rows");
+            None
+        }
+    };
+    let mut fabrics: Vec<(&'static str, &dyn Collective)> = vec![
         ("lockstep", &lock),
         ("flat", &flat),
         ("async-persistent", &persistent),
         ("async-spawn-per-call", &spawned),
     ];
+    if let Some(s) = socket.as_ref() {
+        fabrics.push(("socket", s));
+    }
 
     let mut rows = Vec::new();
     for (cname, codec) in &codecs {
@@ -228,6 +250,19 @@ fn print_snapshot(rows: &[BenchRow]) {
                 p,
                 s,
                 s / p
+            );
+        }
+        // Socket-transport tax: real TCP (syscalls + copies into the
+        // kernel) vs in-process channels, same ring, same octets.
+        if let (Some(a), Some(t)) = (
+            find_ns(rows, "all_gather", "async-persistent", codec),
+            find_ns(rows, "all_gather", "socket", codec),
+        ) {
+            println!(
+                "all_gather {codec:8}: channels   {:9.0} ns vs socket         {:9.0} ns -> {:.1}x tax",
+                a,
+                t,
+                t / a
             );
         }
     }

@@ -1,15 +1,23 @@
 //! [`AsyncFabric`]: a threaded message-passing [`Collective`] backend
-//! with a **persistent per-rank runtime**.
+//! with a **persistent per-rank runtime** over in-process byte
+//! channels.
 //!
 //! Where [`super::LockstepFabric`] and [`super::FlatFabric`] simulate
 //! the collectives as single-threaded functions over per-rank buffers,
 //! this backend runs **one OS thread per rank**, and ranks communicate
 //! *only* through byte channels carrying the serialized octets of
-//! [`EncodedTensor::to_bytes`] — exactly the bytes a real NCCL/CGX
-//! socket would move. Every payload crosses a genuine thread + byte
-//! boundary and is dequantized through the borrowing
-//! [`crate::quant::EncodedView`] parser on the receiving side, so the
-//! codec wire format is exercised end to end on every hop.
+//! [`EncodedTensor::to_bytes`] — exactly the bytes the TCP backend
+//! ([`super::SocketFabric`]) puts on a real wire. Every payload
+//! crosses a genuine thread + byte boundary and is dequantized through
+//! the borrowing [`crate::quant::EncodedView`] parser on the receiving
+//! side, so the codec wire format is exercised end to end on every
+//! hop.
+//!
+//! The ring schedules, scratch pools, command protocol and failure
+//! handling are shared with the socket backend — they live in the
+//! `ring` module behind the `RingTransport` trait; this file only
+//! supplies the channel transport ([`ChannelLink`]) and the legacy
+//! spawn-per-call execution mode.
 //!
 //! # Runtime lifecycle (construct once, command, shutdown on drop)
 //!
@@ -76,6 +84,15 @@
 //! caller), so each rank's encodes are reproducible regardless of
 //! interleaving, and two runs from the same seed are bit-identical.
 //!
+//! # Failure handling
+//!
+//! Ring failures (peer death, corrupt frames) are no longer `expect()`
+//! panics inside worker threads: each hop returns a typed error, the
+//! worker reports it and exits (cascading disconnects around the
+//! ring), and the dispatching call fails the collective with one panic
+//! naming every failed rank, its link, and the step — see the `ring`
+//! module docs and `tests/fabric_failures.rs`.
+//!
 //! # Verification
 //!
 //! `all_gather` results must be identical on every rank. The full
@@ -99,13 +116,16 @@
 
 use super::fabric::{check_inputs, Collective};
 use super::ledger::TrafficLedger;
+use super::ring::{
+    ag_rank, assert_same_bits, concat_slots, rs_ring, runtime_all_gather_into,
+    runtime_all_reduce, runtime_reduce_scatter, world1_reduce_scatter, FabricRuntime,
+    RankScratch, RingError, RingTransport,
+};
 use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
 use crate::util::Pcg64;
 use std::cell::Cell;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Mutex;
-use std::thread::JoinHandle;
 
 /// Release-build gather cross-check sampling period (1-in-N calls).
 pub const DEFAULT_CHECK_EVERY: u64 = 64;
@@ -114,74 +134,38 @@ pub const DEFAULT_CHECK_EVERY: u64 = 64;
 /// rank alternates send/recv), the second hides scheduling jitter.
 const RING_DEPTH: usize = 2;
 
-/// One rank's end of the ring: a sender to its successor's inbox and
-/// the receiving end of its own inbox.
-struct RingLink {
+/// One rank's end of the in-process ring: a sender to its successor's
+/// inbox and the receiving end of its own inbox. The channel moves the
+/// `Vec<u8>` by pointer, so an exchange costs no payload copy at all.
+struct ChannelLink {
     tx: SyncSender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
 }
 
-/// Per-rank reusable buffers. Persistent workers keep one of these for
-/// the fabric's lifetime, so steady-state collective calls allocate
-/// nothing on the ring hot path; the spawn-per-call mode creates a
-/// fresh (cold) one per rank per call.
-#[derive(Default)]
-struct RankScratch {
-    /// Encode target for outgoing partials / shards.
-    enc: EncodedTensor,
-    /// f32 accumulator for the reduce ring (holds the reduced block
-    /// after the last hop).
-    acc: Vec<f32>,
-    /// Decoded block slots for the gather ring (one per rank).
-    slots: Vec<Vec<f32>>,
-    /// Outgoing serialization buffer; after each call it holds the last
-    /// received buffer, recycled as the next call's first send.
-    wire: Vec<u8>,
-    /// Per-link byte accounting, drained into the caller's ledger at
-    /// the end of every call.
-    ledger: TrafficLedger,
-}
-
-fn prep_slots(scratch: &mut RankScratch, p: usize) {
-    if scratch.slots.len() != p {
-        scratch.slots.resize_with(p, Vec::new);
+impl RingTransport for ChannelLink {
+    fn exchange(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+        let outgoing = std::mem::take(buf);
+        self.tx
+            .send(outgoing)
+            .map_err(|_| RingError::successor("ring successor dropped its inbox"))?;
+        *buf = self
+            .rx
+            .recv()
+            .map_err(|_| RingError::predecessor("ring predecessor dropped its channel end"))?;
+        Ok(())
     }
 }
 
-fn concat_slots(slots: &[Vec<f32>], out: &mut Vec<f32>) {
-    out.clear();
-    out.reserve(slots.iter().map(|s| s.len()).sum());
-    for s in slots {
-        out.extend_from_slice(s);
-    }
-}
-
-/// Bit-pattern comparison: every rank decoded the same octets, so even
-/// NaNs must agree — and unlike `==` on f32, to_bits neither panics on
-/// NaN nor conflates ±0.
-fn assert_same_bits(rank: usize, out0: &[f32], out: &[f32]) {
-    let identical =
-        out.len() == out0.len() && out.iter().zip(out0).all(|(a, b)| a.to_bits() == b.to_bits());
-    assert!(identical, "rank {rank} decoded a different tensor than rank 0");
-}
-
-/// Complete per-rank gather body: stage the rank's own message (decode
-/// its block into slot `r`, serialize it into the recycled wire
-/// buffer) and run the store-and-forward ring. Every gather — both
-/// execution modes, and both the `AllGather` command and the fused
-/// `AllReduce`'s gather phase — goes through this one function, so
-/// mode equivalence is true by construction.
-fn ag_rank(
-    topo: Topology,
-    r: usize,
-    own: &EncodedTensor,
-    scratch: &mut RankScratch,
-    link: &RingLink,
-) {
-    prep_slots(scratch, topo.world());
-    own.decode(&mut scratch.slots[r]);
-    own.to_bytes_into(&mut scratch.wire);
-    ag_ring(topo, r, scratch, link);
+/// Build the P channel links of a ring. Hand rank r the sender for its
+/// successor's inbox and drop the originals: every inbox keeps exactly
+/// one producer, so if a rank thread dies its successor sees a
+/// disconnect instead of blocking forever, and the failure cascades
+/// around the ring.
+fn channel_links(p: usize) -> Vec<ChannelLink> {
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..p).map(|_| sync_channel::<Vec<u8>>(RING_DEPTH)).unzip();
+    let next_txs: Vec<SyncSender<Vec<u8>>> = (0..p).map(|r| txs[(r + 1) % p].clone()).collect();
+    drop(txs);
+    rxs.into_iter().zip(next_txs).map(|(rx, tx)| ChannelLink { tx, rx }).collect()
 }
 
 /// Gather epilogue for the spawn-per-call mode: rank 0 (and, on
@@ -197,424 +181,6 @@ fn gather_epilogue_owned(r: usize, check: bool, slots: &[Vec<f32>]) -> Option<Ve
     }
 }
 
-/// Store-and-forward gather ring from rank `r`.
-///
-/// Precondition: `scratch.slots` has P entries, `scratch.slots[r]`
-/// holds the rank's own decoded block and `scratch.wire` its
-/// serialized message. Postcondition: every slot decoded in rank
-/// order; `scratch.wire` holds the last received buffer. Block `i`
-/// travels `P-1` hops; the link `i-1 → i` is the only one it never
-/// crosses.
-fn ag_ring(topo: Topology, r: usize, scratch: &mut RankScratch, link: &RingLink) {
-    let p = topo.world();
-    let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
-    // Decode-on-receipt, store-and-forward: each received message is
-    // decoded (straight out of the link buffer, via the borrowing
-    // view) into its block slot and then *moved* onward as the next
-    // send — no per-hop copy of the octets.
-    let mut outgoing = std::mem::take(&mut scratch.wire);
-    for step in 0..p - 1 {
-        // invariant: `outgoing` holds block (r - step) mod P
-        scratch.ledger.record(outgoing.len(), inter);
-        link.tx.send(outgoing).expect("ring successor hung up");
-        let recv_block = (r + p - step - 1) % p;
-        let msg = link.rx.recv().expect("ring predecessor died");
-        let view = EncodedTensor::view_bytes(&msg).expect("corrupt ring message");
-        view.decode(&mut scratch.slots[recv_block]);
-        outgoing = msg;
-    }
-    scratch.wire = outgoing;
-}
-
-/// Reduce-and-forward ring from rank `r` (`mine` is the rank's full
-/// local contribution). At step `s`, rank `r` ships block
-/// `(r - 1 - s) mod P` — its own contribution on the first step, the
-/// accumulated partial afterwards — and receives block
-/// `(r - 2 - s) mod P` from its predecessor, adding its local data.
-/// After `P-1` steps `scratch.acc` holds the fully reduced block `r`.
-/// Every partial crosses the wire as codec-encoded bytes.
-#[allow(clippy::too_many_arguments)]
-fn rs_ring(
-    topo: Topology,
-    r: usize,
-    n_elems: usize,
-    mine: &[f32],
-    codec: &dyn Codec,
-    rng: &mut Pcg64,
-    scratch: &mut RankScratch,
-    link: &RingLink,
-) {
-    let p = topo.world();
-    let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
-    let mut wire = std::mem::take(&mut scratch.wire);
-    for step in 0..p - 1 {
-        let send_block = (r + p - 1 - step) % p;
-        if step == 0 {
-            let range = topo.shard_range(n_elems, send_block);
-            codec.encode_into(&mine[range], &mut scratch.enc, rng);
-        } else {
-            codec.encode_into(&scratch.acc, &mut scratch.enc, rng);
-        }
-        scratch.enc.to_bytes_into(&mut wire);
-        scratch.ledger.record(wire.len(), inter);
-        link.tx.send(wire).expect("ring successor hung up");
-        let recv_block = (r + 2 * p - 2 - step) % p;
-        let range = topo.shard_range(n_elems, recv_block);
-        let msg = link.rx.recv().expect("ring predecessor died");
-        let view = EncodedTensor::view_bytes(&msg).expect("corrupt ring message");
-        view.decode(&mut scratch.acc);
-        assert_eq!(
-            scratch.acc.len(),
-            range.len(),
-            "ring partial has wrong length at step {step}"
-        );
-        for (a, &x) in scratch.acc.iter_mut().zip(&mine[range]) {
-            *a += x;
-        }
-        wire = msg;
-    }
-    scratch.wire = wire;
-}
-
-// ---------------------------------------------------------------------
-// Raw-pointer plumbing for the persistent runtime.
-//
-// The `Collective` API hands the fabric *borrowed* inputs, but the
-// persistent workers are 'static threads, so the dispatching call
-// smuggles the borrows across the command channel as raw pointers.
-//
-// SAFETY CONTRACT (upheld by `FabricRuntime::run`): the dispatching
-// call blocks until every worker has either sent its `Done` message or
-// died (its done-channel disconnected, which only happens when the
-// worker thread has exited). Workers touch the pointers only between
-// receiving a command and sending `Done` / exiting, so no pointer
-// outlives the caller's borrow. A worker that panics mid-ring drops
-// its ring channels, which cascades `recv`/`send` errors (and thus
-// panics and exits) around the ring — every worker quiesces, the
-// dispatching call observes the disconnects, and only then panics
-// itself.
-// ---------------------------------------------------------------------
-
-/// A `&[T]` lifetime-erased for the command channel.
-struct RawSlice<T> {
-    ptr: *const T,
-    len: usize,
-}
-
-impl<T> Clone for RawSlice<T> {
-    fn clone(&self) -> Self {
-        *self
-    }
-}
-impl<T> Copy for RawSlice<T> {}
-
-// SAFETY: only shared references are ever reconstructed, and `T: Sync`
-// makes those usable from the worker threads.
-unsafe impl<T: Sync> Send for RawSlice<T> {}
-
-impl<T> RawSlice<T> {
-    fn new(s: &[T]) -> Self {
-        RawSlice { ptr: s.as_ptr(), len: s.len() }
-    }
-
-    /// SAFETY: caller must guarantee the original borrow is still live
-    /// (see the module safety contract).
-    unsafe fn slice<'a>(self) -> &'a [T] {
-        std::slice::from_raw_parts(self.ptr, self.len)
-    }
-}
-
-/// A `&mut [T]` lifetime-erased for the command channel; distinct
-/// workers must only ever touch distinct indices.
-struct RawSliceMut<T> {
-    ptr: *mut T,
-    len: usize,
-}
-
-impl<T> Clone for RawSliceMut<T> {
-    fn clone(&self) -> Self {
-        *self
-    }
-}
-impl<T> Copy for RawSliceMut<T> {}
-
-// SAFETY: reconstructed references are handed to exactly one thread
-// per index (workers write index r; the dispatcher reads index 0 only
-// after rank 0's Done), and `T: Send` covers the ownership transfer.
-unsafe impl<T: Send> Send for RawSliceMut<T> {}
-
-impl<T> RawSliceMut<T> {
-    fn new(s: &mut [T]) -> Self {
-        RawSliceMut { ptr: s.as_mut_ptr(), len: s.len() }
-    }
-
-    /// SAFETY: original borrow live; no other thread may be accessing
-    /// index `i` concurrently.
-    unsafe fn get_mut<'a>(self, i: usize) -> &'a mut T {
-        assert!(i < self.len);
-        &mut *self.ptr.add(i)
-    }
-
-    /// SAFETY: as [`Self::get_mut`], but shared — the writer of index
-    /// `i` must have finished (happens-before via its `Done` message).
-    unsafe fn get<'a>(self, i: usize) -> &'a T {
-        assert!(i < self.len);
-        &*self.ptr.add(i)
-    }
-}
-
-/// A `&dyn Codec` lifetime-erased for the command channel.
-#[derive(Clone, Copy)]
-struct RawCodec {
-    ptr: *const dyn Codec,
-}
-
-// SAFETY: `Codec: Sync`, so sharing the reference across worker
-// threads is sound; liveness follows the module safety contract.
-unsafe impl Send for RawCodec {}
-
-impl RawCodec {
-    fn new(c: &dyn Codec) -> Self {
-        // SAFETY: erases the borrow lifetime only; `FabricRuntime::run`
-        // guarantees no worker uses the pointer past the borrow.
-        let erased = unsafe { std::mem::transmute::<&dyn Codec, &'static dyn Codec>(c) };
-        RawCodec { ptr: erased }
-    }
-
-    /// SAFETY: caller must guarantee the original borrow is still live.
-    unsafe fn get<'a>(self) -> &'a dyn Codec {
-        &*self.ptr
-    }
-}
-
-/// The persistent runtime's command protocol (one message per rank per
-/// collective call, plus `Shutdown` on drop).
-#[derive(Clone, Copy)]
-enum Command {
-    AllGather {
-        shards: RawSlice<EncodedTensor>,
-        /// Length-1 slot; rank 0 writes the gathered tensor here.
-        out: RawSliceMut<Vec<f32>>,
-        /// Run the all-ranks cross-check this call.
-        check: bool,
-    },
-    ReduceScatter {
-        inputs: RawSlice<Vec<f32>>,
-        /// Length-P; worker `r` writes its reduced block to index `r`.
-        outs: RawSliceMut<Vec<f32>>,
-        codec: RawCodec,
-        base: u64,
-        n_elems: usize,
-    },
-    AllReduce {
-        inputs: RawSlice<Vec<f32>>,
-        /// Length-1 slot; rank 0 writes the reduced full tensor here.
-        out: RawSliceMut<Vec<f32>>,
-        codec_rs: RawCodec,
-        codec_ag: RawCodec,
-        base: u64,
-        n_elems: usize,
-        check: bool,
-    },
-    Shutdown,
-}
-
-/// Per-rank completion report for one collective call.
-struct Done {
-    ledger: TrafficLedger,
-    /// Ranks > 0 attach their gathered vector on cross-check calls.
-    check_out: Option<Vec<f32>>,
-}
-
-fn worker_loop(
-    topo: Topology,
-    r: usize,
-    cmds: Receiver<Command>,
-    done: SyncSender<Done>,
-    link: RingLink,
-) {
-    let mut scratch = RankScratch::default();
-    while let Ok(cmd) = cmds.recv() {
-        let check_out = match cmd {
-            Command::Shutdown => return,
-            Command::AllGather { shards, out, check } => {
-                // SAFETY: module safety contract — the dispatcher keeps
-                // the borrows alive until every rank's Done.
-                let shards = unsafe { shards.slice() };
-                ag_rank(topo, r, &shards[r], &mut scratch, &link);
-                finish_gather(r, check, &scratch.slots, out)
-            }
-            Command::ReduceScatter { inputs, outs, codec, base, n_elems } => {
-                // SAFETY: module safety contract.
-                let inputs = unsafe { inputs.slice() };
-                let codec = unsafe { codec.get() };
-                let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
-                rs_ring(topo, r, n_elems, &inputs[r], codec, &mut rank_rng, &mut scratch, &link);
-                // SAFETY: worker r is the only writer of outs[r].
-                unsafe {
-                    *outs.get_mut(r) = std::mem::take(&mut scratch.acc);
-                }
-                None
-            }
-            Command::AllReduce { inputs, out, codec_rs, codec_ag, base, n_elems, check } => {
-                // SAFETY: module safety contract.
-                let inputs = unsafe { inputs.slice() };
-                let codec_rs = unsafe { codec_rs.get() };
-                let codec_ag = unsafe { codec_ag.get() };
-                let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
-                rs_ring(
-                    topo,
-                    r,
-                    n_elems,
-                    &inputs[r],
-                    codec_rs,
-                    &mut rank_rng,
-                    &mut scratch,
-                    &link,
-                );
-                // Fused gather phase: encode the reduced block
-                // (continuing this rank's rng stream) and ring it.
-                // The take/put-back keeps the message buffer warm while
-                // satisfying the borrow checker across `ag_rank`.
-                codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng);
-                let enc = std::mem::take(&mut scratch.enc);
-                ag_rank(topo, r, &enc, &mut scratch, &link);
-                scratch.enc = enc;
-                finish_gather(r, check, &scratch.slots, out)
-            }
-        };
-        let msg = Done { ledger: scratch.ledger.take(), check_out };
-        if done.send(msg).is_err() {
-            return;
-        }
-    }
-}
-
-/// Gather epilogue: rank 0 writes the caller's output slot directly
-/// (zero-copy into the caller's reusable buffer); other ranks
-/// materialize their vector only on cross-check calls.
-fn finish_gather(
-    r: usize,
-    check: bool,
-    slots: &[Vec<f32>],
-    out: RawSliceMut<Vec<f32>>,
-) -> Option<Vec<f32>> {
-    if r == 0 {
-        // SAFETY: rank 0 is the only writer of the caller's out slot.
-        let out0 = unsafe { out.get_mut(0) };
-        concat_slots(slots, out0);
-        None
-    } else if check {
-        let mut o = Vec::new();
-        concat_slots(slots, &mut o);
-        Some(o)
-    } else {
-        None
-    }
-}
-
-/// Channel ends the dispatcher holds for the persistent workers.
-struct RuntimeInner {
-    cmd_txs: Vec<SyncSender<Command>>,
-    done_rxs: Vec<Receiver<Done>>,
-}
-
-/// The persistent per-rank runtime: P worker threads spawned once at
-/// fabric construction, joined on drop.
-struct FabricRuntime {
-    inner: Mutex<RuntimeInner>,
-    workers: Vec<JoinHandle<()>>,
-}
-
-impl FabricRuntime {
-    fn spawn(topo: Topology) -> FabricRuntime {
-        let p = topo.world();
-        let (ring_txs, ring_rxs): (Vec<_>, Vec<_>) =
-            (0..p).map(|_| sync_channel::<Vec<u8>>(RING_DEPTH)).unzip();
-        // Hand rank r the sender for its successor's inbox, then drop
-        // the originals: every inbox keeps exactly one producer, so if
-        // a rank thread dies its successor sees a disconnect instead of
-        // blocking forever, and the failure cascades around the ring.
-        let next_txs: Vec<SyncSender<Vec<u8>>> =
-            (0..p).map(|r| ring_txs[(r + 1) % p].clone()).collect();
-        drop(ring_txs);
-        let mut cmd_txs = Vec::with_capacity(p);
-        let mut done_rxs = Vec::with_capacity(p);
-        let mut workers = Vec::with_capacity(p);
-        for (r, (rx, tx)) in ring_rxs.into_iter().zip(next_txs).enumerate() {
-            let (cmd_tx, cmd_rx) = sync_channel::<Command>(1);
-            let (done_tx, done_rx) = sync_channel::<Done>(1);
-            cmd_txs.push(cmd_tx);
-            done_rxs.push(done_rx);
-            let link = RingLink { tx, rx };
-            let handle = std::thread::Builder::new()
-                .name(format!("fabric-rank-{r}"))
-                .spawn(move || worker_loop(topo, r, cmd_rx, done_tx, link))
-                .expect("spawn fabric worker thread");
-            workers.push(handle);
-        }
-        FabricRuntime { inner: Mutex::new(RuntimeInner { cmd_txs, done_rxs }), workers }
-    }
-
-    /// Dispatch one command to every worker and block until all P have
-    /// reported. Ledgers merge in rank order; `on_check` receives the
-    /// gathered vectors ranks > 0 attach on cross-check calls.
-    ///
-    /// This function is the linchpin of the raw-pointer safety
-    /// contract: it returns (or panics) only after every worker has
-    /// either delivered its `Done` or exited, so no worker can touch
-    /// the command's pointers after the caller's borrows end.
-    fn run(
-        &self,
-        cmd: Command,
-        ledger: &mut TrafficLedger,
-        mut on_check: impl FnMut(usize, Vec<f32>),
-    ) {
-        let inner = self.inner.lock().expect("async fabric runtime poisoned");
-        let mut failed = false;
-        for tx in &inner.cmd_txs {
-            failed |= tx.send(cmd).is_err();
-        }
-        // Drain every done-channel before surfacing any failure OR
-        // running any cross-check: a recv error means that worker's
-        // thread has exited, so once all P recvs return, no worker
-        // still holds the command's pointers — only then is it safe to
-        // panic (from the failure assert or from an on_check mismatch)
-        // and unwind through the caller's borrows.
-        let mut checks: Vec<(usize, Vec<f32>)> = Vec::new();
-        for (r, rx) in inner.done_rxs.iter().enumerate() {
-            match rx.recv() {
-                Ok(d) => {
-                    ledger.merge(&d.ledger);
-                    if let Some(o) = d.check_out {
-                        checks.push((r, o));
-                    }
-                }
-                Err(_) => failed = true,
-            }
-        }
-        assert!(!failed, "async fabric worker thread died");
-        for (r, o) in checks {
-            on_check(r, o);
-        }
-    }
-}
-
-impl Drop for FabricRuntime {
-    fn drop(&mut self) {
-        let inner = match self.inner.get_mut() {
-            Ok(i) => i,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        for tx in &inner.cmd_txs {
-            let _ = tx.send(Command::Shutdown);
-        }
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
 /// Spawn one thread per rank wired into a ring of byte channels, run
 /// `per_rank` on each, and return the per-rank
 /// `(result, per-link ledger)` pairs in rank order — the legacy
@@ -623,20 +189,16 @@ impl Drop for FabricRuntime {
 fn run_ring<T, F>(p: usize, per_rank: F) -> Vec<(T, TrafficLedger)>
 where
     T: Send,
-    F: Fn(usize, RingLink) -> (T, TrafficLedger) + Sync,
+    F: Fn(usize, &mut ChannelLink) -> (T, TrafficLedger) + Sync,
 {
-    let (txs, rxs): (Vec<_>, Vec<_>) =
-        (0..p).map(|_| sync_channel::<Vec<u8>>(RING_DEPTH)).unzip();
-    let next_txs: Vec<SyncSender<Vec<u8>>> = (0..p).map(|r| txs[(r + 1) % p].clone()).collect();
-    drop(txs);
+    let links = channel_links(p);
     std::thread::scope(|s| {
-        let handles: Vec<_> = rxs
+        let handles: Vec<_> = links
             .into_iter()
-            .zip(next_txs)
             .enumerate()
-            .map(|(r, (rx, tx))| {
+            .map(|(r, mut link)| {
                 let per_rank = &per_rank;
-                s.spawn(move || per_rank(r, RingLink { tx, rx }))
+                s.spawn(move || per_rank(r, &mut link))
             })
             .collect();
         handles
@@ -686,7 +248,13 @@ impl AsyncFabric {
     /// `check_every` the release-build gather cross-check sampling
     /// period (every Nth call; 0 = never — debug builds always check).
     pub fn with_options(topo: Topology, persistent: bool, check_every: u64) -> Self {
-        let runtime = (persistent && topo.world() > 1).then(|| FabricRuntime::spawn(topo));
+        let runtime = (persistent && topo.world() > 1).then(|| {
+            let links = channel_links(topo.world())
+                .into_iter()
+                .map(|l| Box::new(l) as Box<dyn RingTransport>)
+                .collect();
+            FabricRuntime::spawn(topo, links)
+        });
         AsyncFabric { topo, check_every, calls: Cell::new(0), persistent, runtime }
     }
 
@@ -707,6 +275,15 @@ impl AsyncFabric {
         cfg!(debug_assertions) || (self.check_every > 0 && k % self.check_every == 0)
     }
 
+    /// Test hook: make worker `rank` exit as if it died. Requires the
+    /// persistent runtime (world > 1). See `tests/fabric_failures.rs`.
+    #[doc(hidden)]
+    pub fn fail_rank_for_test(&self, rank: usize) {
+        self.runtime
+            .as_ref()
+            .expect("fail_rank_for_test needs the persistent runtime")
+            .kill_worker(rank);
+    }
 }
 
 /// Legacy-mode gather epilogue: take rank 0's vector as the result,
@@ -765,25 +342,20 @@ impl Collective for AsyncFabric {
         }
         let check = self.check_due();
         if let Some(rt) = &self.runtime {
-            let out_slot = RawSliceMut::new(std::slice::from_mut(out));
-            let cmd = Command::AllGather { shards: RawSlice::new(shards), out: out_slot, check };
-            rt.run(cmd, ledger, |r, o| {
-                // SAFETY: rank 0's write completed before its Done, and
-                // check vectors arrive only after rank 0's Done.
-                let out0: &Vec<f32> = unsafe { out_slot.get(0) };
-                assert_same_bits(r, out0, &o);
-            });
+            runtime_all_gather_into(rt, "async", shards, out, ledger, check);
             return;
         }
         let results = run_ring(p, |r, link| {
             let mut scratch = RankScratch::default();
-            ag_rank(topo, r, &shards[r], &mut scratch, &link);
+            ag_rank(topo, r, &shards[r], &mut scratch, link).unwrap_or_else(|e| {
+                panic!("async spawn-per-call all_gather: rank {r}: {}", e.describe(r, p))
+            });
             (gather_epilogue_owned(r, check, &scratch.slots), scratch.ledger.take())
         });
         collect_gathered(results, out, ledger);
     }
 
-    /// Ring ReduceScatter (reduce-and-forward); see [`rs_ring`].
+    /// Ring ReduceScatter (reduce-and-forward); see the `ring` module.
     fn reduce_scatter(
         &self,
         inputs: &[Vec<f32>],
@@ -795,47 +367,22 @@ impl Collective for AsyncFabric {
         let p = topo.world();
         let n_elems = check_inputs(&topo, inputs);
         if p == 1 {
-            // Degenerate world: no ring steps, but the data still takes
-            // one trip through the codec — exactly what the lockstep
-            // backends do at world 1, so switching fabrics never
-            // changes numerics (they share the caller's rng stream
-            // here, making even stochastic codecs bit-identical across
-            // backends). The wire round trip is a pure validity check,
-            // so release builds skip the double copy.
-            let mut enc = EncodedTensor::default();
-            codec.encode_into(&inputs[0], &mut enc, rng);
-            #[cfg(debug_assertions)]
-            {
-                // Octet-level identity: NaN-safe, unlike the derived
-                // f32 PartialEq on the parsed struct.
-                let bytes = enc.to_bytes();
-                let parsed = EncodedTensor::from_bytes(&bytes).expect("corrupt self-message");
-                assert_eq!(parsed.to_bytes(), bytes, "wire round trip altered the self-message");
-            }
-            let mut out = Vec::new();
-            enc.decode(&mut out);
-            return vec![out];
+            return world1_reduce_scatter(&inputs[0], codec, rng);
         }
         // Split the caller's rng into per-rank streams *before* any
         // ring starts: stochastic rounding draws become a pure function
         // of (seed, rank), independent of thread interleaving.
         let base = rng.next_u64();
         if let Some(rt) = &self.runtime {
-            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); p];
-            let cmd = Command::ReduceScatter {
-                inputs: RawSlice::new(inputs),
-                outs: RawSliceMut::new(&mut outs),
-                codec: RawCodec::new(codec),
-                base,
-                n_elems,
-            };
-            rt.run(cmd, ledger, |_, _| {});
-            return outs;
+            return runtime_reduce_scatter(rt, "async", inputs, codec, base, n_elems, ledger);
         }
         let results = run_ring(p, |r, link| {
             let mut scratch = RankScratch::default();
             let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
-            rs_ring(topo, r, n_elems, &inputs[r], codec, &mut rank_rng, &mut scratch, &link);
+            rs_ring(topo, r, n_elems, &inputs[r], codec, &mut rank_rng, &mut scratch, link)
+                .unwrap_or_else(|e| {
+                    panic!("async spawn-per-call reduce_scatter: rank {r}: {}", e.describe(r, p))
+                });
             (std::mem::take(&mut scratch.acc), scratch.ledger.take())
         });
         let mut outputs = Vec::with_capacity(p);
@@ -863,7 +410,7 @@ impl Collective for AsyncFabric {
         let n_elems = check_inputs(&topo, inputs);
         if p == 1 {
             // Match the trait's default composition exactly (shared
-            // caller rng stream — see `reduce_scatter`'s world-1 note).
+            // caller rng stream — see `world1_reduce_scatter`).
             let shards = self.reduce_scatter(inputs, codec_rs, rng, ledger);
             let encoded: Vec<EncodedTensor> =
                 shards.iter().map(|s| codec_ag.encode(s, rng)).collect();
@@ -871,41 +418,24 @@ impl Collective for AsyncFabric {
         }
         let base = rng.next_u64();
         let check = self.check_due();
-        let mut out = Vec::new();
         if let Some(rt) = &self.runtime {
-            let out_slot = RawSliceMut::new(std::slice::from_mut(&mut out));
-            let cmd = Command::AllReduce {
-                inputs: RawSlice::new(inputs),
-                out: out_slot,
-                codec_rs: RawCodec::new(codec_rs),
-                codec_ag: RawCodec::new(codec_ag),
-                base,
-                n_elems,
-                check,
-            };
-            rt.run(cmd, ledger, |r, o| {
-                // SAFETY: see `all_gather_into`.
-                let out0: &Vec<f32> = unsafe { out_slot.get(0) };
-                assert_same_bits(r, out0, &o);
-            });
-            return out;
+            return runtime_all_reduce(
+                rt, "async", inputs, codec_rs, codec_ag, base, n_elems, check, ledger,
+            );
         }
+        let mut out = Vec::new();
         let results = run_ring(p, |r, link| {
             let mut scratch = RankScratch::default();
             let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
-            rs_ring(
-                topo,
-                r,
-                n_elems,
-                &inputs[r],
-                codec_rs,
-                &mut rank_rng,
-                &mut scratch,
-                &link,
-            );
+            rs_ring(topo, r, n_elems, &inputs[r], codec_rs, &mut rank_rng, &mut scratch, link)
+                .unwrap_or_else(|e| {
+                    panic!("async spawn-per-call all_reduce: rank {r}: {}", e.describe(r, p))
+                });
             codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng);
             let enc = std::mem::take(&mut scratch.enc);
-            ag_rank(topo, r, &enc, &mut scratch, &link);
+            ag_rank(topo, r, &enc, &mut scratch, link).unwrap_or_else(|e| {
+                panic!("async spawn-per-call all_reduce: rank {r}: {}", e.describe(r, p))
+            });
             scratch.enc = enc;
             (gather_epilogue_owned(r, check, &scratch.slots), scratch.ledger.take())
         });

@@ -16,9 +16,11 @@
 //! Both run as lockstep functions over per-rank buffers (deterministic,
 //! byte-exact accounting into a [`TrafficLedger`]) and reuse one
 //! scratch [`EncodedTensor`] + decode buffer per call — the hot loop
-//! allocates nothing per message. The third backend,
-//! [`super::AsyncFabric`], lives in [`super::async_fabric`] and runs
-//! the same trait over real threads and byte channels.
+//! allocates nothing per message. The message-passing backends —
+//! [`super::AsyncFabric`] (real threads + byte channels) and
+//! [`super::SocketFabric`] (real threads + localhost TCP) — live in
+//! their own modules and run the same trait over a shared ring
+//! runtime.
 
 use super::ledger::TrafficLedger;
 use crate::quant::{Codec, EncodedTensor};

@@ -1,5 +1,5 @@
 //! Quantized collectives behind the pluggable [`Collective`] transport
-//! trait — a three-backend registry.
+//! trait — a four-backend registry.
 //!
 //! A backend is a *value* implementing [`Collective`]
 //! (`all_gather` / `reduce_scatter` / `all_reduce`): construct the one
@@ -10,7 +10,7 @@
 //! every message's byte size is tallied in a [`TrafficLedger`], which
 //! the network model converts to seconds.
 //!
-//! Registered backends (`--fabric lockstep|flat|async`, see
+//! Registered backends (`--fabric lockstep|flat|async|socket`, see
 //! [`crate::config::FabricKind`]):
 //!
 //! * [`LockstepFabric`] — the paper's hierarchical two-level NCCL-P2P
@@ -20,43 +20,49 @@
 //! * [`FlatFabric`] — the non-hierarchical ablation baseline (every
 //!   rank talks to every rank). Same lockstep execution model.
 //! * [`AsyncFabric`] — threaded message passing with a **persistent
-//!   per-rank runtime**: P worker threads are spawned once at fabric
-//!   construction and live until drop (shutdown is a protocol command,
-//!   sent from `Drop`, which joins them). Each collective call is one
-//!   round of a small command protocol
-//!   (`AllGather` / `ReduceScatter` / `AllReduce` / `Shutdown`) over
-//!   per-rank channels; the rings move *only* serialized
-//!   [`crate::quant::EncodedTensor`] wire octets, serialized into
-//!   recycled per-rank buffers (`to_bytes_into`) and dequantized
-//!   straight out of the link buffer through the borrowing
-//!   [`crate::quant::EncodedView`] parser — the steady-state hot loop
-//!   performs zero heap allocations and zero payload copies beyond the
-//!   channel send itself. Per-rank rng streams keep stochastic
-//!   rounding reproducible regardless of interleaving, per-link
-//!   ledgers merge into the same [`TrafficLedger`] totals, and the
-//!   all-ranks gather cross-check runs on every call in debug builds
-//!   but only on a 1-in-N sample in release. The legacy
-//!   spawn-P-threads-per-call mode survives as
-//!   [`AsyncFabric::spawn_per_call`], the measured baseline in
-//!   `benches/collectives_bench.rs`. This is the stepping stone to a
-//!   real NCCL/CGX socket backend: the bytes it moves are already the
-//!   exact wire format, and the long-lived worker group mirrors a real
-//!   process group's lifecycle.
+//!   per-rank runtime**: P worker threads spawned once at fabric
+//!   construction, one round of a small command protocol per
+//!   collective call, rings moving *only* serialized
+//!   [`crate::quant::EncodedTensor`] wire octets over in-process byte
+//!   channels, zero heap allocations on the steady-state gather path.
+//! * [`SocketFabric`] — the same rings, runtime and octets over **real
+//!   localhost TCP connections** with length-prefixed framing,
+//!   established once at construction. This is the "real socket
+//!   backend" ROADMAP milestone: kernel sockets, full-duplex
+//!   non-blocking exchange (deadlock-free at any frame size), and
+//!   hardened failure paths — a dead peer or corrupt/truncated frame
+//!   fails the collective with a per-rank diagnosis instead of a
+//!   worker-thread panic or a hang. Construction is fallible (some
+//!   sandboxes forbid loopback TCP); [`loopback_available`] is the
+//!   standard probe for a loud, logged skip.
 //!
-//! All three produce the same decoded values for lossless codecs (the
-//! cross-backend differential harness in `tests/fabric_differential.rs`
-//! pins FP32 agreement bit-for-bit, bounds the lossy codecs by their
-//! own resolution, and pins that reusing one fabric instance across
-//! back-to-back calls is bit-identical to fresh instances) and account
-//! bytes exactly as a real execution would; `tests/alloc_counter.rs`
-//! pins the persistent runtime's zero-allocation steady state with a
-//! counting global allocator. See EXPERIMENTS.md §Perf for the
-//! runtime's before/after benchmark record.
+//! The ring schedules, per-rank scratch pools, command protocol,
+//! failure cascade and shutdown-on-drop lifecycle shared by the two
+//! message-passing backends live in the private `ring` module behind
+//! its `RingTransport` trait — `AsyncFabric` supplies a channel
+//! transport, `SocketFabric` a TCP one, and everything the
+//! differential harness pins is common code.
+//!
+//! All four backends produce the same decoded values for lossless
+//! codecs (the cross-backend differential harness in
+//! `tests/fabric_differential.rs` pins FP32 agreement bit-for-bit,
+//! bounds the lossy codecs by their own resolution, and pins that
+//! reusing one fabric instance across back-to-back calls is
+//! bit-identical to fresh instances) and account bytes exactly as a
+//! real execution would; `tests/alloc_counter.rs` pins the persistent
+//! runtime's zero-allocation steady state with a counting global
+//! allocator, and `tests/fabric_failures.rs` pins the failure paths
+//! (worker death → clear per-rank error, never a hang). See
+//! EXPERIMENTS.md §Perf and §Socket transport for the benchmark record
+//! and wire protocol.
 
 pub mod async_fabric;
 pub mod fabric;
 pub mod ledger;
+mod ring;
+pub mod socket_fabric;
 
 pub use async_fabric::AsyncFabric;
 pub use fabric::{Collective, FlatFabric, LockstepFabric};
 pub use ledger::TrafficLedger;
+pub use socket_fabric::{loopback_available, SocketFabric};

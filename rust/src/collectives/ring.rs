@@ -1,0 +1,821 @@
+//! Shared ring machinery for the message-passing `Collective` backends.
+//!
+//! [`super::AsyncFabric`] (in-process byte channels) and
+//! [`super::SocketFabric`] (real localhost TCP) run the *same* per-rank
+//! ring bodies over the *same* persistent runtime; the only thing that
+//! differs between them is how one rank's serialized
+//! [`EncodedTensor`] octets reach its ring successor. That difference
+//! is captured by the [`RingTransport`] trait, and everything else —
+//! scratch pools, the ring schedules, the command protocol, failure
+//! aggregation, shutdown-on-drop — lives here, written once.
+//!
+//! # Failure model
+//!
+//! Ring hops fail for real reasons once a transport is a socket: a
+//! peer process dies mid-collective, a frame arrives truncated, a
+//! length prefix is garbage. Those used to be `expect()` panics inside
+//! the worker threads; now every hop returns a [`RingError`] naming
+//! the step, the failing link, and the cause. A worker that hits one
+//! reports it through its `Done` message (or, if it cannot, simply
+//! exits), then drops its ring link so the failure *cascades*: each
+//! neighbour's next exchange fails in turn, every worker quiesces, and
+//! the dispatching call — which always drains all P completion
+//! channels before acting, preserving the raw-pointer safety contract
+//! below — fails the collective with a single clear panic listing
+//! every rank's diagnosis. Nothing hangs: not the collective call, and
+//! not `Drop` (dead workers join instantly, live ones still answer
+//! `Shutdown`).
+
+use super::ledger::TrafficLedger;
+use crate::quant::{Codec, EncodedTensor};
+use crate::sim::Topology;
+use crate::util::Pcg64;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// How one rank's wire octets reach its ring successor (and the
+/// predecessor's octets reach this rank).
+///
+/// Implementations must make progress on both directions concurrently
+/// — every rank in the ring calls [`RingTransport::exchange`] at the
+/// same time, so an implementation that fully sends before it starts
+/// receiving deadlocks as soon as frames outgrow the transport's
+/// internal buffering. They must also *fail, never block forever*,
+/// when a peer disconnects or a frame is malformed.
+pub(crate) trait RingTransport: Send {
+    /// Ship `buf`'s octets to the ring successor and replace `buf`'s
+    /// contents with the frame received from the ring predecessor.
+    /// On success `buf` holds exactly the received frame; its old
+    /// capacity is recycled by the transport for a later call.
+    fn exchange(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError>;
+}
+
+/// What went wrong on a ring hop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum RingFault {
+    /// The link *to* the ring successor failed (send refused, socket
+    /// closed or reset).
+    SuccessorGone,
+    /// The link *from* the ring predecessor closed before a full frame
+    /// arrived (peer death, truncated stream).
+    PredecessorGone,
+    /// A full frame arrived but failed validation (bogus length
+    /// prefix, corrupt [`EncodedTensor`] header, wrong block length).
+    CorruptFrame,
+    /// Neither direction made progress for the transport's stall
+    /// limit.
+    Stalled,
+}
+
+/// A failed ring hop: which step, which class of failure, and the
+/// transport's own detail string. The rank is added by the runtime
+/// (each worker knows its own rank; see [`RingError::describe`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct RingError {
+    pub step: usize,
+    pub fault: RingFault,
+    pub detail: String,
+}
+
+impl RingError {
+    pub(crate) fn successor(detail: impl Into<String>) -> Self {
+        RingError { step: 0, fault: RingFault::SuccessorGone, detail: detail.into() }
+    }
+
+    pub(crate) fn predecessor(detail: impl Into<String>) -> Self {
+        RingError { step: 0, fault: RingFault::PredecessorGone, detail: detail.into() }
+    }
+
+    pub(crate) fn corrupt(detail: impl Into<String>) -> Self {
+        RingError { step: 0, fault: RingFault::CorruptFrame, detail: detail.into() }
+    }
+
+    pub(crate) fn stalled(detail: impl Into<String>) -> Self {
+        RingError { step: 0, fault: RingFault::Stalled, detail: detail.into() }
+    }
+
+    fn at_step(mut self, step: usize) -> Self {
+        self.step = step;
+        self
+    }
+
+    /// Human diagnosis naming the peer rank behind the failing link.
+    pub(crate) fn describe(&self, rank: usize, world: usize) -> String {
+        let next = (rank + 1) % world;
+        let prev = (rank + world - 1) % world;
+        match self.fault {
+            RingFault::SuccessorGone => format!(
+                "link to ring successor rank {next} failed at step {}: {}",
+                self.step, self.detail
+            ),
+            RingFault::PredecessorGone => format!(
+                "ring predecessor rank {prev} hung up at step {}: {}",
+                self.step, self.detail
+            ),
+            RingFault::CorruptFrame => format!(
+                "corrupt frame from rank {prev} at step {}: {}",
+                self.step, self.detail
+            ),
+            RingFault::Stalled => format!(
+                "ring exchange with ranks {prev}/{next} stalled at step {}: {}",
+                self.step, self.detail
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for RingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?} at ring step {}: {}", self.fault, self.step, self.detail)
+    }
+}
+
+/// Per-rank reusable buffers. Persistent workers keep one of these for
+/// the fabric's lifetime, so steady-state collective calls allocate
+/// nothing on the ring hot path; the spawn-per-call mode creates a
+/// fresh (cold) one per rank per call.
+#[derive(Default)]
+pub(crate) struct RankScratch {
+    /// Encode target for outgoing partials / shards.
+    pub(crate) enc: EncodedTensor,
+    /// f32 accumulator for the reduce ring (holds the reduced block
+    /// after the last hop).
+    pub(crate) acc: Vec<f32>,
+    /// Decoded block slots for the gather ring (one per rank).
+    pub(crate) slots: Vec<Vec<f32>>,
+    /// Outgoing serialization buffer; after each call it holds the last
+    /// received buffer, recycled as the next call's first send.
+    pub(crate) wire: Vec<u8>,
+    /// Per-link byte accounting, drained into the caller's ledger at
+    /// the end of every call.
+    pub(crate) ledger: TrafficLedger,
+}
+
+fn prep_slots(scratch: &mut RankScratch, p: usize) {
+    if scratch.slots.len() != p {
+        scratch.slots.resize_with(p, Vec::new);
+    }
+}
+
+pub(crate) fn concat_slots(slots: &[Vec<f32>], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(slots.iter().map(|s| s.len()).sum());
+    for s in slots {
+        out.extend_from_slice(s);
+    }
+}
+
+/// Bit-pattern comparison: every rank decoded the same octets, so even
+/// NaNs must agree — and unlike `==` on f32, to_bits neither panics on
+/// NaN nor conflates ±0.
+pub(crate) fn assert_same_bits(rank: usize, out0: &[f32], out: &[f32]) {
+    let identical =
+        out.len() == out0.len() && out.iter().zip(out0).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(identical, "rank {rank} decoded a different tensor than rank 0");
+}
+
+/// Complete per-rank gather body: stage the rank's own message (decode
+/// its block into slot `r`, serialize it into the recycled wire
+/// buffer) and run the store-and-forward ring. Every gather — both
+/// execution modes, both backends, and both the `AllGather` command
+/// and the fused `AllReduce`'s gather phase — goes through this one
+/// function, so cross-mode and cross-backend equivalence is true by
+/// construction.
+pub(crate) fn ag_rank(
+    topo: Topology,
+    r: usize,
+    own: &EncodedTensor,
+    scratch: &mut RankScratch,
+    link: &mut dyn RingTransport,
+) -> Result<(), RingError> {
+    prep_slots(scratch, topo.world());
+    own.decode(&mut scratch.slots[r]);
+    own.to_bytes_into(&mut scratch.wire);
+    ag_ring(topo, r, scratch, link)
+}
+
+/// Store-and-forward gather ring from rank `r`.
+///
+/// Precondition: `scratch.slots` has P entries, `scratch.slots[r]`
+/// holds the rank's own decoded block and `scratch.wire` its
+/// serialized message. Postcondition: every slot decoded in rank
+/// order; `scratch.wire` holds the last received buffer. Block `i`
+/// travels `P-1` hops; the link `i-1 → i` is the only one it never
+/// crosses. On failure the error names the hop; the scratch buffer is
+/// still put back so the worker can report and exit without leaking.
+pub(crate) fn ag_ring(
+    topo: Topology,
+    r: usize,
+    scratch: &mut RankScratch,
+    link: &mut dyn RingTransport,
+) -> Result<(), RingError> {
+    let p = topo.world();
+    let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
+    // Decode-on-receipt, store-and-forward: each received message is
+    // decoded (straight out of the link buffer, via the borrowing
+    // view) into its block slot and then *moved* onward as the next
+    // send — no per-hop copy of the octets.
+    let mut buf = std::mem::take(&mut scratch.wire);
+    let mut res = Ok(());
+    for step in 0..p - 1 {
+        // invariant: `buf` holds block (r - step) mod P
+        scratch.ledger.record(buf.len(), inter);
+        if let Err(e) = link.exchange(&mut buf) {
+            res = Err(e.at_step(step));
+            break;
+        }
+        let recv_block = (r + p - step - 1) % p;
+        match EncodedTensor::view_bytes(&buf) {
+            Ok(view) => view.decode(&mut scratch.slots[recv_block]),
+            Err(e) => {
+                res = Err(RingError::corrupt(e.to_string()).at_step(step));
+                break;
+            }
+        }
+    }
+    scratch.wire = buf;
+    res
+}
+
+/// Reduce-and-forward ring from rank `r` (`mine` is the rank's full
+/// local contribution). At step `s`, rank `r` ships block
+/// `(r - 1 - s) mod P` — its own contribution on the first step, the
+/// accumulated partial afterwards — and receives block
+/// `(r - 2 - s) mod P` from its predecessor, adding its local data.
+/// After `P-1` steps `scratch.acc` holds the fully reduced block `r`.
+/// Every partial crosses the wire as codec-encoded bytes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rs_ring(
+    topo: Topology,
+    r: usize,
+    n_elems: usize,
+    mine: &[f32],
+    codec: &dyn Codec,
+    rng: &mut Pcg64,
+    scratch: &mut RankScratch,
+    link: &mut dyn RingTransport,
+) -> Result<(), RingError> {
+    let p = topo.world();
+    let inter = topo.node_of(r) != topo.node_of((r + 1) % p);
+    let mut wire = std::mem::take(&mut scratch.wire);
+    let mut res = Ok(());
+    for step in 0..p - 1 {
+        let send_block = (r + p - 1 - step) % p;
+        if step == 0 {
+            let range = topo.shard_range(n_elems, send_block);
+            codec.encode_into(&mine[range], &mut scratch.enc, rng);
+        } else {
+            codec.encode_into(&scratch.acc, &mut scratch.enc, rng);
+        }
+        scratch.enc.to_bytes_into(&mut wire);
+        scratch.ledger.record(wire.len(), inter);
+        if let Err(e) = link.exchange(&mut wire) {
+            res = Err(e.at_step(step));
+            break;
+        }
+        let recv_block = (r + 2 * p - 2 - step) % p;
+        let range = topo.shard_range(n_elems, recv_block);
+        match EncodedTensor::view_bytes(&wire) {
+            Ok(view) => view.decode(&mut scratch.acc),
+            Err(e) => {
+                res = Err(RingError::corrupt(e.to_string()).at_step(step));
+                break;
+            }
+        }
+        if scratch.acc.len() != range.len() {
+            res = Err(RingError::corrupt(format!(
+                "ring partial carries {} elems, want {} (block {recv_block})",
+                scratch.acc.len(),
+                range.len()
+            ))
+            .at_step(step));
+            break;
+        }
+        for (a, &x) in scratch.acc.iter_mut().zip(&mine[range]) {
+            *a += x;
+        }
+    }
+    scratch.wire = wire;
+    res
+}
+
+/// World-1 reduce-scatter, shared by every message-passing backend: no
+/// ring steps, but the data still takes one trip through the codec —
+/// exactly what the lockstep backends do at world 1, so switching
+/// fabrics never changes numerics (they share the caller's rng stream
+/// here, making even stochastic codecs bit-identical across backends).
+/// The wire round trip is a pure validity check, so release builds
+/// skip the double copy.
+pub(crate) fn world1_reduce_scatter(
+    input: &[f32],
+    codec: &dyn Codec,
+    rng: &mut Pcg64,
+) -> Vec<Vec<f32>> {
+    let mut enc = EncodedTensor::default();
+    codec.encode_into(input, &mut enc, rng);
+    #[cfg(debug_assertions)]
+    {
+        // Octet-level identity: NaN-safe, unlike the derived f32
+        // PartialEq on the parsed struct.
+        let bytes = enc.to_bytes();
+        let parsed = EncodedTensor::from_bytes(&bytes).expect("corrupt self-message");
+        assert_eq!(parsed.to_bytes(), bytes, "wire round trip altered the self-message");
+    }
+    let mut out = Vec::new();
+    enc.decode(&mut out);
+    vec![out]
+}
+
+// ---------------------------------------------------------------------
+// Raw-pointer plumbing for the persistent runtime.
+//
+// The `Collective` API hands the fabric *borrowed* inputs, but the
+// persistent workers are 'static threads, so the dispatching call
+// smuggles the borrows across the command channel as raw pointers.
+//
+// SAFETY CONTRACT (upheld by `FabricRuntime::run`): the dispatching
+// call blocks until every worker has either sent its `Done` message or
+// died (its done-channel disconnected, which only happens when the
+// worker thread has exited). Workers touch the pointers only between
+// receiving a command and sending `Done` / exiting, so no pointer
+// outlives the caller's borrow. A worker that fails mid-ring reports
+// through `Done` (or exits silently), dropping its ring link, which
+// cascades exchange errors around the ring — every worker quiesces,
+// the dispatching call observes all P completions/disconnects, and
+// only then panics with the aggregated per-rank diagnosis.
+// ---------------------------------------------------------------------
+
+/// A `&[T]` lifetime-erased for the command channel.
+pub(crate) struct RawSlice<T> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawSlice<T> {}
+
+// SAFETY: only shared references are ever reconstructed, and `T: Sync`
+// makes those usable from the worker threads.
+unsafe impl<T: Sync> Send for RawSlice<T> {}
+
+impl<T> RawSlice<T> {
+    pub(crate) fn new(s: &[T]) -> Self {
+        RawSlice { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: caller must guarantee the original borrow is still live
+    /// (see the module safety contract).
+    unsafe fn slice<'a>(self) -> &'a [T] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// A `&mut [T]` lifetime-erased for the command channel; distinct
+/// workers must only ever touch distinct indices.
+pub(crate) struct RawSliceMut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for RawSliceMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawSliceMut<T> {}
+
+// SAFETY: reconstructed references are handed to exactly one thread
+// per index (workers write index r; the dispatcher reads index 0 only
+// after rank 0's Done), and `T: Send` covers the ownership transfer.
+unsafe impl<T: Send> Send for RawSliceMut<T> {}
+
+impl<T> RawSliceMut<T> {
+    pub(crate) fn new(s: &mut [T]) -> Self {
+        RawSliceMut { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: original borrow live; no other thread may be accessing
+    /// index `i` concurrently.
+    unsafe fn get_mut<'a>(self, i: usize) -> &'a mut T {
+        assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// SAFETY: as [`Self::get_mut`], but shared — the writer of index
+    /// `i` must have finished (happens-before via its `Done` message).
+    pub(crate) unsafe fn get<'a>(self, i: usize) -> &'a T {
+        assert!(i < self.len);
+        &*self.ptr.add(i)
+    }
+}
+
+/// A `&dyn Codec` lifetime-erased for the command channel.
+#[derive(Clone, Copy)]
+pub(crate) struct RawCodec {
+    ptr: *const dyn Codec,
+}
+
+// SAFETY: `Codec: Sync`, so sharing the reference across worker
+// threads is sound; liveness follows the module safety contract.
+unsafe impl Send for RawCodec {}
+
+impl RawCodec {
+    pub(crate) fn new(c: &dyn Codec) -> Self {
+        // SAFETY: erases the borrow lifetime only; `FabricRuntime::run`
+        // guarantees no worker uses the pointer past the borrow.
+        let erased = unsafe { std::mem::transmute::<&dyn Codec, &'static dyn Codec>(c) };
+        RawCodec { ptr: erased }
+    }
+
+    /// SAFETY: caller must guarantee the original borrow is still live.
+    unsafe fn get<'a>(self) -> &'a dyn Codec {
+        &*self.ptr
+    }
+}
+
+/// The persistent runtime's command protocol (one message per rank per
+/// collective call, plus `Shutdown` on drop).
+#[derive(Clone, Copy)]
+pub(crate) enum Command {
+    AllGather {
+        shards: RawSlice<EncodedTensor>,
+        /// Length-1 slot; rank 0 writes the gathered tensor here.
+        out: RawSliceMut<Vec<f32>>,
+        /// Run the all-ranks cross-check this call.
+        check: bool,
+    },
+    ReduceScatter {
+        inputs: RawSlice<Vec<f32>>,
+        /// Length-P; worker `r` writes its reduced block to index `r`.
+        outs: RawSliceMut<Vec<f32>>,
+        codec: RawCodec,
+        base: u64,
+        n_elems: usize,
+    },
+    AllReduce {
+        inputs: RawSlice<Vec<f32>>,
+        /// Length-1 slot; rank 0 writes the reduced full tensor here.
+        out: RawSliceMut<Vec<f32>>,
+        codec_rs: RawCodec,
+        codec_ag: RawCodec,
+        base: u64,
+        n_elems: usize,
+        check: bool,
+    },
+    Shutdown,
+}
+
+/// Per-rank completion report for one collective call. `outcome` is
+/// `Ok(Some(v))` when a rank > 0 attaches its gathered vector on a
+/// cross-check call, `Ok(None)` on plain success, and `Err` when the
+/// rank's ring failed.
+struct Done {
+    ledger: TrafficLedger,
+    outcome: Result<Option<Vec<f32>>, RingError>,
+}
+
+fn worker_loop(
+    topo: Topology,
+    r: usize,
+    cmds: Receiver<Command>,
+    done: SyncSender<Done>,
+    mut link: Box<dyn RingTransport>,
+) {
+    let mut scratch = RankScratch::default();
+    while let Ok(cmd) = cmds.recv() {
+        let outcome: Result<Option<Vec<f32>>, RingError> = match cmd {
+            Command::Shutdown => return,
+            Command::AllGather { shards, out, check } => {
+                // SAFETY: module safety contract — the dispatcher keeps
+                // the borrows alive until every rank's Done.
+                let shards = unsafe { shards.slice() };
+                match ag_rank(topo, r, &shards[r], &mut scratch, link.as_mut()) {
+                    Ok(()) => Ok(finish_gather(r, check, &scratch.slots, out)),
+                    Err(e) => Err(e),
+                }
+            }
+            Command::ReduceScatter { inputs, outs, codec, base, n_elems } => {
+                // SAFETY: module safety contract.
+                let inputs = unsafe { inputs.slice() };
+                let codec = unsafe { codec.get() };
+                let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
+                match rs_ring(
+                    topo,
+                    r,
+                    n_elems,
+                    &inputs[r],
+                    codec,
+                    &mut rank_rng,
+                    &mut scratch,
+                    link.as_mut(),
+                ) {
+                    Ok(()) => {
+                        // SAFETY: worker r is the only writer of outs[r].
+                        unsafe {
+                            *outs.get_mut(r) = std::mem::take(&mut scratch.acc);
+                        }
+                        Ok(None)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            Command::AllReduce { inputs, out, codec_rs, codec_ag, base, n_elems, check } => {
+                // SAFETY: module safety contract.
+                let inputs = unsafe { inputs.slice() };
+                let codec_rs = unsafe { codec_rs.get() };
+                let codec_ag = unsafe { codec_ag.get() };
+                let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
+                match rs_ring(
+                    topo,
+                    r,
+                    n_elems,
+                    &inputs[r],
+                    codec_rs,
+                    &mut rank_rng,
+                    &mut scratch,
+                    link.as_mut(),
+                ) {
+                    Err(e) => Err(e),
+                    Ok(()) => {
+                        // Fused gather phase: encode the reduced block
+                        // (continuing this rank's rng stream) and ring
+                        // it. The take/put-back keeps the message
+                        // buffer warm while satisfying the borrow
+                        // checker across `ag_rank`.
+                        codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng);
+                        let enc = std::mem::take(&mut scratch.enc);
+                        let res = ag_rank(topo, r, &enc, &mut scratch, link.as_mut());
+                        scratch.enc = enc;
+                        match res {
+                            Ok(()) => Ok(finish_gather(r, check, &scratch.slots, out)),
+                            Err(e) => Err(e),
+                        }
+                    }
+                }
+            }
+        };
+        let failed = outcome.is_err();
+        let msg = Done { ledger: scratch.ledger.take(), outcome };
+        if done.send(msg).is_err() || failed {
+            // A failed ring leaves this runtime unusable: exit now,
+            // dropping the ring link so peers blocked mid-exchange see
+            // a disconnect instead of waiting forever.
+            return;
+        }
+    }
+}
+
+/// Gather epilogue: rank 0 writes the caller's output slot directly
+/// (zero-copy into the caller's reusable buffer); other ranks
+/// materialize their vector only on cross-check calls.
+fn finish_gather(
+    r: usize,
+    check: bool,
+    slots: &[Vec<f32>],
+    out: RawSliceMut<Vec<f32>>,
+) -> Option<Vec<f32>> {
+    if r == 0 {
+        // SAFETY: rank 0 is the only writer of the caller's out slot.
+        let out0 = unsafe { out.get_mut(0) };
+        concat_slots(slots, out0);
+        None
+    } else if check {
+        let mut o = Vec::new();
+        concat_slots(slots, &mut o);
+        Some(o)
+    } else {
+        None
+    }
+}
+
+/// Channel ends the dispatcher holds for the persistent workers.
+struct RuntimeInner {
+    cmd_txs: Vec<SyncSender<Command>>,
+    done_rxs: Vec<Receiver<Done>>,
+}
+
+/// The persistent per-rank runtime: P worker threads spawned once at
+/// fabric construction over caller-supplied [`RingTransport`] links,
+/// joined on drop. Both message-passing fabrics are thin shells around
+/// one of these.
+pub(crate) struct FabricRuntime {
+    world: usize,
+    inner: Mutex<RuntimeInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FabricRuntime {
+    /// Spawn one worker thread per rank, each owning its ring link.
+    /// `links[r]` must connect rank `r`'s send side to rank
+    /// `(r+1) % P`'s receive side.
+    pub(crate) fn spawn(topo: Topology, links: Vec<Box<dyn RingTransport>>) -> FabricRuntime {
+        let p = topo.world();
+        assert_eq!(links.len(), p, "one ring link per rank");
+        let mut cmd_txs = Vec::with_capacity(p);
+        let mut done_rxs = Vec::with_capacity(p);
+        let mut workers = Vec::with_capacity(p);
+        for (r, link) in links.into_iter().enumerate() {
+            let (cmd_tx, cmd_rx) = sync_channel::<Command>(1);
+            let (done_tx, done_rx) = sync_channel::<Done>(1);
+            cmd_txs.push(cmd_tx);
+            done_rxs.push(done_rx);
+            let handle = std::thread::Builder::new()
+                .name(format!("fabric-rank-{r}"))
+                .spawn(move || worker_loop(topo, r, cmd_rx, done_tx, link))
+                .expect("spawn fabric worker thread");
+            workers.push(handle);
+        }
+        FabricRuntime { world: p, inner: Mutex::new(RuntimeInner { cmd_txs, done_rxs }), workers }
+    }
+
+    /// Dispatch one command to every worker and block until all P have
+    /// reported. Ledgers merge in rank order; `on_check` receives the
+    /// gathered vectors ranks > 0 attach on cross-check calls.
+    ///
+    /// This function is the linchpin of the raw-pointer safety
+    /// contract: it returns (or panics) only after every worker has
+    /// either delivered its `Done` or exited, so no worker can touch
+    /// the command's pointers after the caller's borrows end. When any
+    /// rank fails, the collective fails with one panic aggregating
+    /// every rank's diagnosis — which rank, which link, which step.
+    pub(crate) fn run(
+        &self,
+        label: &'static str,
+        op: &'static str,
+        cmd: Command,
+        ledger: &mut TrafficLedger,
+        mut on_check: impl FnMut(usize, Vec<f32>),
+    ) {
+        // Recover from poisoning: a previous failed collective already
+        // panicked once, and this call should diagnose dead workers
+        // rather than die on the lock.
+        let inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let mut failures: Vec<(usize, Option<RingError>)> = Vec::new();
+        for (r, tx) in inner.cmd_txs.iter().enumerate() {
+            if tx.send(cmd).is_err() {
+                failures.push((r, None));
+            }
+        }
+        // Drain every done-channel before surfacing any failure OR
+        // running any cross-check: a recv error means that worker's
+        // thread has exited, so once all P recvs return, no worker
+        // still holds the command's pointers — only then is it safe to
+        // panic (from the aggregated failure below or from an on_check
+        // mismatch) and unwind through the caller's borrows.
+        let mut checks: Vec<(usize, Vec<f32>)> = Vec::new();
+        for (r, rx) in inner.done_rxs.iter().enumerate() {
+            match rx.recv() {
+                Ok(d) => {
+                    ledger.merge(&d.ledger);
+                    match d.outcome {
+                        Ok(Some(o)) => checks.push((r, o)),
+                        Ok(None) => {}
+                        Err(e) => failures.push((r, Some(e))),
+                    }
+                }
+                Err(_) => {
+                    if !failures.iter().any(|(fr, _)| *fr == r) {
+                        failures.push((r, None));
+                    }
+                }
+            }
+        }
+        if !failures.is_empty() {
+            failures.sort_by_key(|(r, _)| *r);
+            let detail: Vec<String> = failures
+                .iter()
+                .map(|(r, e)| match e {
+                    Some(e) => format!("rank {r}: {}", e.describe(*r, self.world)),
+                    None => format!("rank {r}: worker not running"),
+                })
+                .collect();
+            panic!(
+                "{label} {op} failed on {}/{} ranks: {}",
+                failures.len(),
+                self.world,
+                detail.join("; ")
+            );
+        }
+        for (r, o) in checks {
+            on_check(r, o);
+        }
+    }
+
+    /// Test hook: make worker `rank` exit as if its process died. The
+    /// next collective must fail with a clear per-rank error (and the
+    /// fabric's `Drop` must still join everything without hanging) —
+    /// pinned by `tests/fabric_failures.rs`.
+    pub(crate) fn kill_worker(&self, rank: usize) {
+        let inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let _ = inner.cmd_txs[rank].send(Command::Shutdown);
+    }
+}
+
+impl Drop for FabricRuntime {
+    fn drop(&mut self) {
+        let inner = match self.inner.get_mut() {
+            Ok(i) => i,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for tx in &inner.cmd_txs {
+            let _ = tx.send(Command::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatch helpers: the persistent-runtime side of the `Collective`
+// methods, shared verbatim by `AsyncFabric` and `SocketFabric`.
+// ---------------------------------------------------------------------
+
+/// Ring AllGather through a persistent runtime, concatenating straight
+/// into the caller's (reusable) output buffer.
+pub(crate) fn runtime_all_gather_into(
+    rt: &FabricRuntime,
+    label: &'static str,
+    shards: &[EncodedTensor],
+    out: &mut Vec<f32>,
+    ledger: &mut TrafficLedger,
+    check: bool,
+) {
+    let out_slot = RawSliceMut::new(std::slice::from_mut(out));
+    let cmd = Command::AllGather { shards: RawSlice::new(shards), out: out_slot, check };
+    rt.run(label, "all_gather", cmd, ledger, |r, o| {
+        // SAFETY: rank 0's write completed before its Done, and check
+        // vectors are inspected only after every Done is drained.
+        let out0: &Vec<f32> = unsafe { out_slot.get(0) };
+        assert_same_bits(r, out0, &o);
+    });
+}
+
+/// Ring ReduceScatter through a persistent runtime.
+pub(crate) fn runtime_reduce_scatter(
+    rt: &FabricRuntime,
+    label: &'static str,
+    inputs: &[Vec<f32>],
+    codec: &dyn Codec,
+    base: u64,
+    n_elems: usize,
+    ledger: &mut TrafficLedger,
+) -> Vec<Vec<f32>> {
+    let p = inputs.len();
+    let mut outs: Vec<Vec<f32>> = vec![Vec::new(); p];
+    let cmd = Command::ReduceScatter {
+        inputs: RawSlice::new(inputs),
+        outs: RawSliceMut::new(&mut outs),
+        codec: RawCodec::new(codec),
+        base,
+        n_elems,
+    };
+    rt.run(label, "reduce_scatter", cmd, ledger, |_, _| {});
+    outs
+}
+
+/// Fused ring AllReduce through a persistent runtime: the
+/// reduce-scatter ring, then each rank encodes its reduced block
+/// (continuing its per-rank rng stream) and the gather ring runs back
+/// to back — one runtime command instead of two.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn runtime_all_reduce(
+    rt: &FabricRuntime,
+    label: &'static str,
+    inputs: &[Vec<f32>],
+    codec_rs: &dyn Codec,
+    codec_ag: &dyn Codec,
+    base: u64,
+    n_elems: usize,
+    check: bool,
+    ledger: &mut TrafficLedger,
+) -> Vec<f32> {
+    let mut out = Vec::new();
+    let out_slot = RawSliceMut::new(std::slice::from_mut(&mut out));
+    let cmd = Command::AllReduce {
+        inputs: RawSlice::new(inputs),
+        out: out_slot,
+        codec_rs: RawCodec::new(codec_rs),
+        codec_ag: RawCodec::new(codec_ag),
+        base,
+        n_elems,
+        check,
+    };
+    rt.run(label, "all_reduce", cmd, ledger, |r, o| {
+        // SAFETY: see `runtime_all_gather_into`.
+        let out0: &Vec<f32> = unsafe { out_slot.get(0) };
+        assert_same_bits(r, out0, &o);
+    });
+    out
+}

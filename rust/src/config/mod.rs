@@ -15,25 +15,35 @@
 //!   suffix "+det"         — deterministic (round-to-nearest) gradients
 //!
 //! The collective transport is likewise data: `--fabric
-//! lockstep|flat|async` selects the [`crate::collectives::Collective`]
-//! backend the trainer wires into its parameter store (`async` is the
-//! threaded ring backend, [`crate::collectives::AsyncFabric`]).
-//! [`FabricOptions`] carries the async runtime's knobs:
-//! `--fabric-persistent true|false` (default true: spawn the per-rank
-//! worker threads once, at fabric construction, instead of per call)
-//! and `--fabric-check-every N` (release-build gather cross-check
-//! sampling period; 0 disables, debug builds always check). Fabrics
+//! lockstep|flat|async|socket` selects the
+//! [`crate::collectives::Collective`] backend the trainer wires into
+//! its parameter store (`async` is the threaded ring backend over byte
+//! channels, [`crate::collectives::AsyncFabric`]; `socket` is the same
+//! ring over real localhost TCP,
+//! [`crate::collectives::SocketFabric`]). [`FabricOptions`] carries
+//! the runtime knobs: `--fabric-persistent true|false` (async only;
+//! default true: spawn the per-rank worker threads once, at fabric
+//! construction, instead of per call), `--fabric-check-every N`
+//! (release-build gather cross-check sampling period; 0 disables,
+//! debug builds always check), and the socket transport's endpoint
+//! flags `--fabric-addr IP` (bind address, default 127.0.0.1) and
+//! `--fabric-port N` (base listen port, rank r gets N + r; default 0 =
+//! kernel-assigned ephemeral ports). Socket construction can fail
+//! (sandboxes may forbid loopback TCP), so backends are built through
+//! the fallible [`FabricKind::try_build_with`]; the infallible
+//! `build_with` survives for call sites that prefer a panic. Fabrics
 //! are constructed **once per run** and reused across every step —
 //! checkpoint restore re-shards parameters in place rather than
 //! tearing down a running transport.
 
-use crate::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric};
+use crate::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric, SocketFabric};
 use crate::optim::AdamW;
 use crate::quant::QuantPolicy;
 use crate::runtime::gpt::StepVariant;
 use crate::sim::Topology;
 use crate::util::args::Args;
 use anyhow::{bail, Result};
+use std::net::{IpAddr, Ipv4Addr};
 
 /// Which [`Collective`] transport backend a run uses.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -46,19 +56,24 @@ pub enum FabricKind {
     /// Threaded ring backend: one OS thread per rank, serialized
     /// messages over byte channels ([`AsyncFabric`]).
     Async,
+    /// Threaded ring backend over real localhost TCP sockets with
+    /// length-prefixed framing ([`SocketFabric`]).
+    Socket,
 }
 
 impl FabricKind {
     /// Every registered backend, in registry order — what the
     /// cross-fabric differential harness sweeps.
-    pub const ALL: [FabricKind; 3] = [FabricKind::Lockstep, FabricKind::Flat, FabricKind::Async];
+    pub const ALL: [FabricKind; 4] =
+        [FabricKind::Lockstep, FabricKind::Flat, FabricKind::Async, FabricKind::Socket];
 
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "lockstep" | "hier" | "hierarchical" => FabricKind::Lockstep,
             "flat" => FabricKind::Flat,
             "async" | "ring" => FabricKind::Async,
-            other => bail!("unknown fabric {other:?} (want lockstep|flat|async)"),
+            "socket" | "tcp" => FabricKind::Socket,
+            other => bail!("unknown fabric {other:?} (want lockstep|flat|async|socket)"),
         })
     }
 
@@ -67,37 +82,81 @@ impl FabricKind {
             FabricKind::Lockstep => "lockstep",
             FabricKind::Flat => "flat",
             FabricKind::Async => "async",
+            FabricKind::Socket => "socket",
         }
     }
 
-    /// Construct the backend for a cluster with default options.
-    pub fn build(self, topo: Topology) -> Box<dyn Collective> {
-        self.build_with(topo, FabricOptions::default())
+    /// Does this backend move messages over a rank ring (as opposed to
+    /// the lockstep one-NIC-at-a-time simulations)? Ring backends get
+    /// the per-link contention clock
+    /// ([`crate::sim::NetworkModel::ring_time`]) because their
+    /// transfers genuinely overlap across links.
+    pub fn is_ring(self) -> bool {
+        matches!(self, FabricKind::Async | FabricKind::Socket)
+    }
+
+    /// Construct the backend for a cluster with default options,
+    /// surfacing construction failures (the socket backend needs
+    /// loopback TCP) as errors.
+    pub fn try_build(self, topo: Topology) -> Result<Box<dyn Collective>> {
+        self.try_build_with(topo, FabricOptions::default())
     }
 
     /// Construct the backend for a cluster. `opts` only affects the
-    /// async backend (the lockstep simulators have no runtime).
-    pub fn build_with(self, topo: Topology, opts: FabricOptions) -> Box<dyn Collective> {
-        match self {
+    /// message-passing backends (the lockstep simulators have no
+    /// runtime). The socket backend opens its TCP ring here — once per
+    /// run — and reports a clear error if the environment forbids it.
+    pub fn try_build_with(self, topo: Topology, opts: FabricOptions) -> Result<Box<dyn Collective>> {
+        Ok(match self {
             FabricKind::Lockstep => Box::new(LockstepFabric::new(topo)),
             FabricKind::Flat => Box::new(FlatFabric::new(topo)),
             FabricKind::Async => {
                 Box::new(AsyncFabric::with_options(topo, opts.persistent, opts.check_every))
             }
-        }
+            FabricKind::Socket => Box::new(SocketFabric::with_options(
+                topo,
+                opts.socket_addr,
+                opts.socket_base_port,
+                opts.check_every,
+            )?),
+        })
+    }
+
+    /// Infallible construction with default options; panics (with the
+    /// underlying error) if the backend cannot be built here.
+    pub fn build(self, topo: Topology) -> Box<dyn Collective> {
+        self.build_with(topo, FabricOptions::default())
+    }
+
+    /// Infallible construction; panics (with the underlying error) if
+    /// the backend cannot be built here. Prefer
+    /// [`Self::try_build_with`] anywhere a `Result` can propagate.
+    pub fn build_with(self, topo: Topology, opts: FabricOptions) -> Box<dyn Collective> {
+        self.try_build_with(topo, opts)
+            .unwrap_or_else(|e| panic!("failed to construct the {} fabric: {e}", self.name()))
     }
 }
 
-/// Runtime knobs for the async transport (`--fabric async`).
+/// Runtime knobs for the message-passing transports (`--fabric async`
+/// / `--fabric socket`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FabricOptions {
     /// Spawn the per-rank worker threads once at fabric construction
-    /// (the persistent runtime) instead of per collective call.
+    /// (the persistent runtime) instead of per collective call. Async
+    /// only — the socket backend is always persistent (its TCP ring is
+    /// established once, at construction).
     pub persistent: bool,
     /// Release-build gather cross-check sampling period: verify the
     /// gathered tensor across all ranks every Nth call (0 = never;
     /// debug builds always check).
     pub check_every: u64,
+    /// Bind address for the socket backend's per-rank listeners
+    /// (`--fabric-addr`, default 127.0.0.1).
+    pub socket_addr: IpAddr,
+    /// Base TCP port for the socket backend: rank r listens on
+    /// `socket_base_port + r`; 0 = kernel-assigned ephemeral ports
+    /// (`--fabric-port`, default 0).
+    pub socket_base_port: u16,
 }
 
 impl Default for FabricOptions {
@@ -105,6 +164,8 @@ impl Default for FabricOptions {
         FabricOptions {
             persistent: true,
             check_every: crate::collectives::async_fabric::DEFAULT_CHECK_EVERY,
+            socket_addr: IpAddr::V4(Ipv4Addr::LOCALHOST),
+            socket_base_port: 0,
         }
     }
 }
@@ -170,6 +231,15 @@ impl RunConfig {
                     "fabric-check-every",
                     crate::collectives::async_fabric::DEFAULT_CHECK_EVERY,
                 ),
+                socket_addr: {
+                    let s = args.str_or("fabric-addr", "127.0.0.1");
+                    s.parse().map_err(|_| {
+                        anyhow::anyhow!("--fabric-addr expects an IP address, got {s:?}")
+                    })?
+                },
+                socket_base_port: u16::try_from(args.u64_or("fabric-port", 0)).map_err(|_| {
+                    anyhow::anyhow!("--fabric-port expects a port number below 65536")
+                })?,
             },
         })
     }
@@ -341,10 +411,18 @@ mod tests {
         assert_eq!(FabricKind::parse("flat").unwrap(), FabricKind::Flat);
         assert_eq!(FabricKind::parse("async").unwrap(), FabricKind::Async);
         assert_eq!(FabricKind::parse("ring").unwrap(), FabricKind::Async);
+        assert_eq!(FabricKind::parse("socket").unwrap(), FabricKind::Socket);
+        assert_eq!(FabricKind::parse("tcp").unwrap(), FabricKind::Socket);
         assert!(FabricKind::parse("mesh").is_err());
+        assert!(FabricKind::Socket.is_ring() && FabricKind::Async.is_ring());
+        assert!(!FabricKind::Lockstep.is_ring() && !FabricKind::Flat.is_ring());
         let topo = Topology::new(2, 2);
         for kind in FabricKind::ALL {
-            let fabric = kind.build(topo);
+            if kind == FabricKind::Socket && !crate::collectives::loopback_available() {
+                eprintln!("SKIP: socket fabric build (loopback TCP unavailable in this sandbox)");
+                continue;
+            }
+            let fabric = kind.try_build(topo).unwrap();
             assert_eq!(fabric.name(), kind.name());
             assert_eq!(fabric.topo(), topo);
         }
@@ -378,5 +456,33 @@ mod tests {
         let fabric = c.fabric.build_with(c.topo, c.fabric_opts);
         assert_eq!(fabric.name(), "async");
         assert_eq!(fabric.topo(), c.topo);
+    }
+
+    #[test]
+    fn socket_fabric_flags_parse() {
+        // defaults: loopback, ephemeral ports
+        let a = Args::parse("train".split_whitespace().map(|s| s.to_string()));
+        let c = RunConfig::from_args(&a).unwrap();
+        assert_eq!(c.fabric_opts.socket_addr, IpAddr::V4(Ipv4Addr::LOCALHOST));
+        assert_eq!(c.fabric_opts.socket_base_port, 0);
+        // explicit endpoint
+        let a = Args::parse(
+            "train --fabric socket --fabric-addr 127.0.0.1 --fabric-port 39000"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let c = RunConfig::from_args(&a).unwrap();
+        assert_eq!(c.fabric, FabricKind::Socket);
+        assert_eq!(c.fabric_opts.socket_base_port, 39000);
+        assert_eq!(c.fabric_opts.socket_addr, "127.0.0.1".parse::<IpAddr>().unwrap());
+        // malformed endpoint flags fail loudly, not silently
+        let a = Args::parse(
+            "train --fabric-addr nonsense".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::from_args(&a).is_err());
+        let a = Args::parse(
+            "train --fabric-port 70000".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::from_args(&a).is_err());
     }
 }

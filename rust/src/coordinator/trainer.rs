@@ -13,7 +13,7 @@
 //! as the max worker microbatch time and communication via the
 //! network model over the *actual* encoded byte counts.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -67,10 +67,17 @@ impl Trainer {
         let dims = rt.manifest.dims.clone();
         let full = rt.init_params(cfg.seed as u32)?;
         // The fabric is constructed exactly once per run (a persistent
-        // async fabric spawns its rank workers here) and reused across
-        // every step and checkpoint restore.
+        // async/socket fabric spawns its rank workers — and, for
+        // sockets, opens its TCP ring — here) and reused across every
+        // step and checkpoint restore. Construction can fail (e.g. a
+        // sandbox that forbids loopback TCP), which surfaces as a
+        // clean error instead of a panic.
+        let fabric = cfg
+            .fabric
+            .try_build_with(cfg.topo, cfg.fabric_opts)
+            .context("constructing the collective fabric")?;
         let store = ShardedStore::from_full(rt.manifest.params.clone(), &full, cfg.topo)
-            .with_fabric(cfg.fabric.build_with(cfg.topo, cfg.fabric_opts));
+            .with_fabric(fabric);
         let world = cfg.topo.world();
         let states: Vec<Vec<AdamState>> = store
             .specs
@@ -204,7 +211,15 @@ impl Trainer {
             opt.update(t, lr_scale, shard, grad, &mut states[pi][rank]);
         });
 
-        let sim_s = max_compute + self.net.ledger_time(&ledger);
+        // Ring backends keep every link busy at once, so their ledger
+        // is charged per link (the contention model); the lockstep
+        // leader schemes keep the serialized one-NIC upper bound.
+        let net_s = if self.cfg.fabric.is_ring() {
+            self.net.ring_time(&self.cfg.topo, &ledger)
+        } else {
+            self.net.ledger_time(&ledger)
+        };
+        let sim_s = max_compute + net_s;
         self.log.push(StepRecord {
             step: t,
             loss: mean_loss,

@@ -14,6 +14,6 @@ pub mod steptime;
 pub mod topology;
 
 pub use compute::ComputeModel;
-pub use network::NetworkModel;
+pub use network::{LinkProfile, NetworkModel};
 pub use steptime::{StepBreakdown, StepTimeModel};
 pub use topology::Topology;

@@ -15,6 +15,22 @@
 //! Figure 4 / Table 5 geometry: FSDP 1.3B ≈ 23 s at 100 Gbps vs
 //! ≈ 30 s at 10 Gbps, QSDP essentially flat, ≈ 2.2× speedup at 10 Gbps
 //! (calibration details: EXPERIMENTS.md §Calibration).
+//!
+//! **Per-link contention.** [`NetworkModel::ledger_time`] serializes a
+//! ledger's bytes through *one* NIC and one NVLink — the right upper
+//! bound for the leader-based lockstep schemes, where one inter-node
+//! transfer is in flight at a time, but dishonest for the ring
+//! backends: a P-rank ring keeps all P directed links busy in every
+//! step, so transfers genuinely overlap (each node's NIC carries its
+//! own share concurrently). [`LinkProfile`] describes how many
+//! same-class links carry a collective's traffic concurrently, and
+//! [`NetworkModel::ledger_time_with`] charges the clock per link: the
+//! slower link *class* gates each step (inter and intra links run at
+//! the same time in a ring), and per-message latency is amortized over
+//! the messages that fire in the same wave. The ring profile assumes
+//! balanced per-link load, which is exact for our rings: every block
+//! crosses every link except one, so each link carries
+//! `(P-1)/P` of the total within its class.
 
 use super::topology::Topology;
 
@@ -98,6 +114,39 @@ impl NetworkModel {
             + l.messages as f64 * self.latency_us * 1e-6
     }
 
+    /// Wall-clock of an accounted traffic ledger under a per-link
+    /// contention profile: bytes of each class are spread over that
+    /// class's concurrent links, the slower class gates the clock
+    /// (both classes transfer at the same time), and latency is
+    /// charged per *wave* of concurrent messages rather than per
+    /// message.
+    pub fn ledger_time_with(
+        &self,
+        l: &crate::collectives::TrafficLedger,
+        prof: &LinkProfile,
+    ) -> f64 {
+        let inter = if l.inter_bytes == 0 {
+            0.0
+        } else {
+            l.inter_bytes as f64 / prof.inter_links.max(1) as f64 / self.inter_bytes_per_s()
+        };
+        let intra = if l.intra_bytes == 0 {
+            0.0
+        } else {
+            l.intra_bytes as f64 / prof.intra_links.max(1) as f64 / self.intra_bytes_per_s()
+        };
+        let waves = (l.messages as f64 / prof.concurrent_msgs.max(1) as f64).ceil();
+        inter.max(intra) + waves * self.latency_us * 1e-6
+    }
+
+    /// Wall-clock of a ring collective's ledger on `topo`: overlapping
+    /// per-link transfers instead of one serialized NIC. This is the
+    /// clock the trainer charges for the ring backends
+    /// (`--fabric async|socket`).
+    pub fn ring_time(&self, topo: &Topology, l: &crate::collectives::TrafficLedger) -> f64 {
+        self.ledger_time_with(l, &LinkProfile::ring(topo))
+    }
+
     /// Point-to-point transfer time for `bytes` over the given link class.
     pub fn p2p_time(&self, bytes: usize, inter_node: bool) -> f64 {
         let bw = if inter_node {
@@ -106,6 +155,44 @@ impl NetworkModel {
             self.intra_bytes_per_s()
         };
         self.latency_us * 1e-6 + bytes as f64 / bw
+    }
+}
+
+/// How many same-class links carry a collective's traffic
+/// *concurrently* — the contention shape
+/// [`NetworkModel::ledger_time_with`] charges against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkProfile {
+    /// Concurrent NVLink (intra-node) links.
+    pub intra_links: usize,
+    /// Concurrent NIC-crossing (inter-node) links.
+    pub inter_links: usize,
+    /// Messages in flight per wave (the latency divisor).
+    pub concurrent_msgs: usize,
+}
+
+impl LinkProfile {
+    /// The legacy single-NIC view: everything serializes through one
+    /// link of each class, one message at a time. With this profile
+    /// `ledger_time_with` differs from [`NetworkModel::ledger_time`]
+    /// only in overlapping the two classes.
+    pub fn serialized() -> Self {
+        LinkProfile { intra_links: 1, inter_links: 1, concurrent_msgs: 1 }
+    }
+
+    /// A P-rank ring on `topo`: P directed links, all busy every step.
+    /// The link `r → r+1` crosses a node boundary exactly when the two
+    /// ranks live on different nodes, which happens `n` times around
+    /// the ring (including the wrap) when there is more than one node
+    /// and never otherwise — so `n` NICs and `P - n` NVLink hops carry
+    /// the traffic concurrently.
+    pub fn ring(topo: &Topology) -> Self {
+        let p = topo.world();
+        if p <= 1 {
+            return Self::serialized();
+        }
+        let inter_links = if topo.nodes > 1 { topo.nodes } else { 0 };
+        LinkProfile { intra_links: p - inter_links, inter_links, concurrent_msgs: p }
     }
 }
 
@@ -179,5 +266,67 @@ mod tests {
         let l2 = TrafficLedger { intra_bytes: 2 << 20, inter_bytes: 2 << 20, messages: 4 };
         assert!(m.ledger_time(&l1) > 0.0);
         assert!((m.ledger_time(&l2) - 2.0 * m.ledger_time(&l1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_profile_counts_links() {
+        // 2 nodes x 2 GPUs: 4 directed links, 2 cross a node boundary.
+        let p = LinkProfile::ring(&Topology::new(2, 2));
+        assert_eq!(
+            p,
+            LinkProfile { intra_links: 2, inter_links: 2, concurrent_msgs: 4 }
+        );
+        // single node: no NIC hops at all
+        let p = LinkProfile::ring(&Topology::new(1, 4));
+        assert_eq!(
+            p,
+            LinkProfile { intra_links: 4, inter_links: 0, concurrent_msgs: 4 }
+        );
+        // one GPU per node: every hop crosses a NIC
+        let p = LinkProfile::ring(&Topology::new(4, 1));
+        assert_eq!(
+            p,
+            LinkProfile { intra_links: 0, inter_links: 4, concurrent_msgs: 4 }
+        );
+        // world 1 degenerates to the serialized profile
+        assert_eq!(LinkProfile::ring(&Topology::new(1, 1)), LinkProfile::serialized());
+    }
+
+    #[test]
+    fn contended_ring_time_beats_serialized_upper_bound() {
+        use crate::collectives::TrafficLedger;
+        let m = NetworkModel::paper(10.0);
+        let topo = Topology::new(2, 2);
+        let l = TrafficLedger { intra_bytes: 8 << 20, inter_bytes: 8 << 20, messages: 12 };
+        let contended = m.ring_time(&topo, &l);
+        assert!(contended > 0.0);
+        assert!(
+            contended < m.ledger_time(&l),
+            "overlapping transfers must beat the one-NIC serialization"
+        );
+    }
+
+    #[test]
+    fn contended_time_scales_with_concurrent_nics() {
+        use crate::collectives::TrafficLedger;
+        // Same inter-byte total spread over twice the NICs: the
+        // transfer term (isolated by zero messages) must halve.
+        let m = NetworkModel::paper(10.0);
+        let l = TrafficLedger { intra_bytes: 0, inter_bytes: 64 << 20, messages: 0 };
+        let t2 = m.ring_time(&Topology::new(2, 1), &l);
+        let t4 = m.ring_time(&Topology::new(4, 1), &l);
+        assert!((t2 / t4 - 2.0).abs() < 1e-9, "t2 {t2} vs t4 {t4}");
+    }
+
+    #[test]
+    fn contended_latency_charged_per_wave() {
+        use crate::collectives::TrafficLedger;
+        // P messages per ring step fire together: 12 messages on a
+        // 4-ring are 3 waves, not 12 serialized latencies.
+        let m = NetworkModel::paper(10.0);
+        let l = TrafficLedger { intra_bytes: 0, inter_bytes: 0, messages: 12 };
+        let t = m.ring_time(&Topology::new(1, 4), &l);
+        assert!((t - 3.0 * m.latency_us * 1e-6).abs() < 1e-12);
+        assert!((m.ledger_time(&l) - 12.0 * m.latency_us * 1e-6).abs() < 1e-12);
     }
 }

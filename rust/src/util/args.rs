@@ -2,8 +2,29 @@
 //!
 //! Supports `--key value`, `--key=value`, bare `--flag` booleans and
 //! positional arguments. Typed getters with defaults.
+//!
+//! Boolean flags are special-cased at parse time: a flag listed in
+//! [`BOOL_FLAGS`] only consumes the next token as its value when that
+//! token is an explicit boolean literal (`true/false/1/0/yes/no`).
+//! Without this, `--fabric-persistent train` would greedily swallow
+//! the `train` positional as the flag's value — which `bool_or` then
+//! read as *false*, silently inverting the flag AND losing the
+//! subcommand. Unknown flags keep the greedy behavior (the parser
+//! cannot know their type); `bool_or` additionally rejects non-boolean
+//! values loudly instead of mapping them to `false`.
 
 use std::collections::HashMap;
+
+/// Every boolean flag this CLI reads (each has a `bool_or` call site).
+/// The parser must not consume the following token as their value
+/// unless it is an explicit boolean literal. Extend this list when
+/// adding a boolean flag — and only then, so a future value-typed flag
+/// can never be silently misparsed by appearing here.
+pub const BOOL_FLAGS: &[&str] = &["fabric-persistent", "fine", "full", "snapshot-only"];
+
+fn is_bool_literal(s: &str) -> bool {
+    matches!(s, "true" | "false" | "1" | "0" | "yes" | "no")
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -22,7 +43,10 @@ impl Args {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if it
                     .peek()
-                    .map(|n| !n.starts_with("--"))
+                    .map(|n| {
+                        !n.starts_with("--")
+                            && (!BOOL_FLAGS.contains(&rest) || is_bool_literal(n))
+                    })
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
@@ -72,10 +96,17 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Boolean getter. Accepts the explicit literals
+    /// `true/false/1/0/yes/no` and panics on anything else — a garbage
+    /// value silently reading as `false` is exactly the bug the
+    /// non-greedy parse above exists to prevent.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
-        self.get(key)
-            .map(|v| matches!(v, "true" | "1" | "yes"))
-            .unwrap_or(default)
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a boolean, got {v:?}"),
+        }
     }
 }
 
@@ -109,5 +140,57 @@ mod tests {
     fn trailing_flag() {
         let a = parse("--dry-run");
         assert!(a.bool_or("dry-run", false));
+    }
+
+    #[test]
+    fn bool_flag_does_not_swallow_positional() {
+        // Regression: `--fabric-persistent train` used to consume
+        // `train` as the flag value (read back as false!) and lose the
+        // subcommand.
+        let a = parse("--fabric-persistent train --steps 5");
+        assert!(a.bool_or("fabric-persistent", false));
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("steps", 0), 5);
+        // and the flag-before-subcommand shape for every listed flag
+        for flag in BOOL_FLAGS {
+            let a = parse(&format!("--{flag} table1"));
+            assert!(a.bool_or(flag, false), "--{flag}");
+            assert_eq!(a.positional, vec!["table1"], "--{flag}");
+        }
+    }
+
+    #[test]
+    fn bool_flag_still_takes_explicit_literals() {
+        let a = parse("--fabric-persistent false train");
+        assert!(!a.bool_or("fabric-persistent", true));
+        assert_eq!(a.positional, vec!["train"]);
+        let a = parse("--snapshot-only 1 --full no");
+        assert!(a.bool_or("snapshot-only", false));
+        assert!(!a.bool_or("full", true));
+    }
+
+    #[test]
+    fn bool_flag_equals_form_still_works() {
+        let a = parse("--fabric-persistent=false bench");
+        assert!(!a.bool_or("fabric-persistent", true));
+        assert_eq!(a.positional, vec!["bench"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects a boolean")]
+    fn bool_getter_rejects_garbage_value() {
+        // `=` form can still smuggle arbitrary text into a bool flag;
+        // the getter must fail loudly rather than read it as false.
+        let a = parse("--verbose=banana");
+        a.bool_or("verbose", false);
+    }
+
+    #[test]
+    fn unknown_flags_stay_greedy() {
+        // Only *known* boolean flags are non-greedy; a typed value
+        // flag keeps consuming the next token.
+        let a = parse("--policy w8g8 train");
+        assert_eq!(a.str_or("policy", ""), "w8g8");
+        assert_eq!(a.positional, vec!["train"]);
     }
 }

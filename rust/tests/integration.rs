@@ -79,9 +79,15 @@ fn fabric_trainer_fp32_loss_identical_across_backends() {
     };
     let lockstep = run(FabricKind::Lockstep, eng.clone());
     let flat = run(FabricKind::Flat, eng.clone());
-    let ring = run(FabricKind::Async, eng);
+    let ring = run(FabricKind::Async, eng.clone());
     assert_eq!(lockstep, flat, "flat fabric changed the FP32 loss trajectory");
     assert_eq!(lockstep, ring, "async fabric changed the FP32 loss trajectory");
+    if qsdp::collectives::loopback_available() {
+        let socket = run(FabricKind::Socket, eng);
+        assert_eq!(lockstep, socket, "socket fabric changed the FP32 loss trajectory");
+    } else {
+        eprintln!("SKIP: socket fabric trainer run (loopback TCP unavailable in this sandbox)");
+    }
 }
 
 #[test]
