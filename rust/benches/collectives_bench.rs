@@ -18,11 +18,14 @@
 //! by: `async-persistent` vs `async-spawn-per-call` on small-tensor
 //! all_gather (the spawn/join overhead the persistent runtime
 //! removes), `socket` (the same ring over real localhost TCP — its gap
-//! to `async-persistent` is the kernel-socket tax), and `to_bytes` vs
-//! `to_bytes_into` / `from_bytes+decode` vs `view_bytes+decode` on the
-//! wire path (the allocation + copy the reusing/borrowing serializers
-//! remove). Environments without loopback TCP get a printed note and
-//! no socket rows.
+//! to `async-persistent` is the kernel-socket tax),
+//! `start_all_gather+wait` (the non-blocking submission path with the
+//! wait issued immediately — its gap to the blocking `all_gather` row
+//! is the pure submit/handle overhead the overlap scheduler pays), and
+//! `to_bytes` vs `to_bytes_into` / `from_bytes+decode` vs
+//! `view_bytes+decode` on the wire path (the allocation + copy the
+//! reusing/borrowing serializers remove). Environments without
+//! loopback TCP get a printed note and no socket rows.
 
 use qsdp::collectives::{
     AsyncFabric, Collective, FlatFabric, LockstepFabric, SocketFabric, TrafficLedger,
@@ -144,6 +147,33 @@ fn snapshot_grid() -> Vec<BenchRow> {
             });
             rows.push(BenchRow { op: "all_gather", fabric: *fname, codec: *cname, median_ns: med });
 
+            // Non-blocking submission path, wait issued immediately:
+            // measures the submit + handle overhead on top of the same
+            // transfer (the cost the overlap scheduler pays per call).
+            let mut nb_out = Vec::new();
+            for _ in 0..SNAP_WARMUP {
+                ledger.reset();
+                fabric
+                    .start_all_gather(&shards, &mut nb_out, &mut ledger)
+                    .wait()
+                    .expect("bench start+wait");
+                std::hint::black_box(&nb_out);
+            }
+            let med = median_ns(SNAP_REPS, || {
+                ledger.reset();
+                fabric
+                    .start_all_gather(&shards, &mut nb_out, &mut ledger)
+                    .wait()
+                    .expect("bench start+wait");
+                std::hint::black_box(&nb_out);
+            });
+            rows.push(BenchRow {
+                op: "start_all_gather+wait",
+                fabric: *fname,
+                codec: *cname,
+                median_ns: med,
+            });
+
             let mut rs_rng = Pcg64::seeded(11);
             for _ in 0..SNAP_WARMUP {
                 ledger.reset();
@@ -263,6 +293,19 @@ fn print_snapshot(rows: &[BenchRow]) {
                 a,
                 t,
                 t / a
+            );
+        }
+        // Submission-path tax: non-blocking start + immediate wait vs
+        // the blocking call on the persistent runtime.
+        if let (Some(b), Some(nb)) = (
+            find_ns(rows, "all_gather", "async-persistent", codec),
+            find_ns(rows, "start_all_gather+wait", "async-persistent", codec),
+        ) {
+            println!(
+                "all_gather {codec:8}: blocking   {:9.0} ns vs start+wait     {:9.0} ns -> {:.2}x submit tax",
+                b,
+                nb,
+                nb / b
             );
         }
     }

@@ -33,6 +33,16 @@
 //! * `Shutdown` — sent to every worker when the fabric is dropped; the
 //!   runtime joins all threads before `Drop` returns.
 //!
+//! The command protocol is async underneath, and the non-blocking
+//! `Collective::start_all_gather` / `start_reduce_scatter` overrides
+//! expose that directly: they dispatch the same commands and return a
+//! `PendingCollective` handle while the ring is still exchanging, so
+//! caller compute between `start_*` and `wait()` overlaps the wire.
+//! The handle holds the dispatch lock (at most one collective in
+//! flight per fabric) and `wait()` performs the same all-ranks drain
+//! the blocking calls do inline — `coordinator/overlap.rs` builds the
+//! per-layer prefetch scheduler on top of this.
+//!
 //! Each worker owns a scratch pool (outgoing byte buffer, encode
 //! message, f32 accumulator, decoded block slots) that persists across
 //! calls: outgoing messages are serialized with
@@ -114,12 +124,13 @@
 //! own resolution. With lossless codecs (FP32) all backends agree
 //! bit-for-bit at `P = 2` and to rounding order beyond.
 
-use super::fabric::{check_inputs, Collective};
+use super::fabric::{check_inputs, Collective, PendingCollective};
 use super::ledger::TrafficLedger;
 use super::ring::{
     ag_rank, assert_same_bits, concat_slots, rs_ring, runtime_all_gather_into,
-    runtime_all_reduce, runtime_reduce_scatter, world1_reduce_scatter, FabricRuntime,
-    RankScratch, RingError, RingTransport,
+    runtime_all_reduce, runtime_reduce_scatter, submit_all_gather_into,
+    submit_reduce_scatter_into, world1_reduce_scatter, FabricRuntime, RankScratch, RingError,
+    RingTransport,
 };
 use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
@@ -442,6 +453,58 @@ impl Collective for AsyncFabric {
         collect_gathered(results, &mut out, ledger);
         out
     }
+
+    /// Non-blocking ring AllGather: submit to the persistent runtime
+    /// and return while the ring is still exchanging. Without the
+    /// persistent runtime (world 1, or spawn-per-call mode) this is
+    /// the eager fallback — same numerics, completion at `start` time.
+    fn start_all_gather<'a>(
+        &'a self,
+        shards: &'a [EncodedTensor],
+        out: &'a mut Vec<f32>,
+        ledger: &'a mut TrafficLedger,
+    ) -> PendingCollective<'a> {
+        match &self.runtime {
+            Some(rt) => {
+                assert_eq!(shards.len(), self.topo.world(), "one shard per rank");
+                let check = self.check_due();
+                PendingCollective::in_flight(submit_all_gather_into(
+                    rt, "async", shards, out, ledger, check,
+                ))
+            }
+            None => {
+                self.all_gather_into(shards, out, ledger);
+                PendingCollective::ready()
+            }
+        }
+    }
+
+    /// Non-blocking ring ReduceScatter into the caller's reusable
+    /// `outs` pool. The per-rank rng base is drawn at submit time, so
+    /// issue order fixes the stochastic stream exactly as the blocking
+    /// call does.
+    fn start_reduce_scatter<'a>(
+        &'a self,
+        inputs: &'a [Vec<f32>],
+        codec: &'a dyn Codec,
+        rng: &mut Pcg64,
+        outs: &'a mut Vec<Vec<f32>>,
+        ledger: &'a mut TrafficLedger,
+    ) -> PendingCollective<'a> {
+        match &self.runtime {
+            Some(rt) => {
+                let n_elems = check_inputs(&self.topo, inputs);
+                let base = rng.next_u64();
+                PendingCollective::in_flight(submit_reduce_scatter_into(
+                    rt, "async", inputs, codec, base, n_elems, outs, ledger,
+                ))
+            }
+            None => {
+                *outs = self.reduce_scatter(inputs, codec, rng, ledger);
+                PendingCollective::ready()
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -647,5 +710,69 @@ mod tests {
             assert_eq!(out, first, "repeat call changed the result");
             assert_eq!(ledger, first_ledger, "repeat call changed the traffic");
         }
+    }
+
+    #[test]
+    fn overlap_start_wait_matches_blocking_on_persistent_runtime() {
+        // The non-blocking submit/wait path must be bit-identical to
+        // the blocking calls — results AND ledgers — for both
+        // primitives, including under a stochastic codec.
+        let topo = Topology::new(2, 2);
+        let n = 1037; // ragged blocks
+        let full = rand_vec(n, 21);
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|r| rand_vec(n, 90 + r as u64)).collect();
+        let codec = MinMaxCodec::new(4, 128, true);
+        let mut enc_rng = Pcg64::seeded(22);
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut enc_rng))
+            .collect();
+        let blocking = AsyncFabric::new(topo);
+        let nonblocking = AsyncFabric::new(topo);
+        let (mut lb, mut ln) = (TrafficLedger::new(), TrafficLedger::new());
+        let gb = blocking.all_gather(&shards, &mut lb);
+        let mut gn = Vec::new();
+        nonblocking
+            .start_all_gather(&shards, &mut gn, &mut ln)
+            .wait()
+            .expect("healthy ring");
+        assert_eq!(gn, gb, "start/wait all_gather diverged from blocking");
+        let rb = blocking.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(23), &mut lb);
+        let mut rn: Vec<Vec<f32>> = Vec::new();
+        nonblocking
+            .start_reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(23), &mut rn, &mut ln)
+            .wait()
+            .expect("healthy ring");
+        assert_eq!(rn, rb, "start/wait reduce_scatter diverged from blocking");
+        assert_eq!(ln, lb, "ledgers diverged across submission modes");
+    }
+
+    #[test]
+    fn overlap_pending_drop_without_wait_drains_safely() {
+        // Dropping an unwaited handle must still drain the runtime
+        // (safety backstop): the result lands in `out`, the traffic is
+        // discarded, and the fabric stays usable.
+        let topo = Topology::new(2, 2);
+        let n = 512;
+        let full = rand_vec(n, 31);
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| EncodedTensor::fp32(&full[topo.shard_range(n, r)]))
+            .collect();
+        let fabric = AsyncFabric::new(topo);
+        let mut expected = Vec::new();
+        let mut ledger = TrafficLedger::new();
+        fabric.all_gather_into(&shards, &mut expected, &mut ledger);
+        let mut out = Vec::new();
+        let mut sink = TrafficLedger::new();
+        let pending = fabric.start_all_gather(&shards, &mut out, &mut sink);
+        drop(pending);
+        assert_eq!(out, expected, "dropped handle must still complete the gather");
+        // and the fabric is still healthy afterwards
+        let mut again = Vec::new();
+        fabric
+            .start_all_gather(&shards, &mut again, &mut sink)
+            .wait()
+            .expect("fabric usable after a dropped handle");
+        assert_eq!(again, expected);
     }
 }

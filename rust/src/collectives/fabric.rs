@@ -23,15 +23,98 @@
 //! runtime.
 
 use super::ledger::TrafficLedger;
+use super::ring::PendingRing;
 use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
 use crate::util::Pcg64;
+
+/// A collective that failed in the transport: one or more ranks could
+/// not complete the ring, and the message aggregates every rank's
+/// diagnosis (which rank, which link, which step) — the same text the
+/// blocking methods panic with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CollectiveError {
+    message: String,
+}
+
+impl CollectiveError {
+    pub(super) fn new(message: String) -> Self {
+        CollectiveError { message }
+    }
+}
+
+impl std::fmt::Display for CollectiveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for CollectiveError {}
+
+/// A collective submitted through [`Collective::start_all_gather`] /
+/// [`Collective::start_reduce_scatter`] but not yet completed.
+///
+/// The handle borrows every input and output of the call for its whole
+/// life, and completion is [`PendingCollective::wait`]: the output
+/// buffers hold the result only after `wait` returns `Ok`. Transport
+/// failures surface there as a [`CollectiveError`] carrying the same
+/// aggregated per-rank diagnosis the blocking methods panic with — a
+/// scheduler can report it without unwinding through its pipeline.
+///
+/// Backends differ only in *when* the work happens. The lockstep
+/// fabrics (and the async fabric's spawn-per-call mode) are eager:
+/// `start_*` runs the whole collective before returning and `wait` is
+/// a no-op `Ok`. The persistent ring backends submit to their worker
+/// runtime and return while the ring is still exchanging — compute
+/// done between `start_*` and `wait` overlaps the wire. At most one
+/// collective may be in flight per fabric: the handle holds the
+/// runtime's dispatch lock, so issuing another collective before
+/// `wait` (or drop) blocks — on a single thread, deadlocks. Dropping
+/// a handle without waiting still drains the runtime safely (its
+/// traffic is discarded); `mem::forget` on a live handle is the one
+/// unsupported move, as with any scoped-concurrency guard.
+pub struct PendingCollective<'a> {
+    inner: PendingInner<'a>,
+}
+
+enum PendingInner<'a> {
+    /// Eager backends complete at `start_*` time.
+    Ready,
+    /// Ring backends: a command in flight on the persistent runtime.
+    Ring(PendingRing<'a>),
+}
+
+impl<'a> PendingCollective<'a> {
+    /// An already-completed collective: eager backends finish their
+    /// work at `start_*` time, so `wait` only reports success.
+    pub fn ready() -> Self {
+        PendingCollective { inner: PendingInner::Ready }
+    }
+
+    pub(super) fn in_flight(pending: PendingRing<'a>) -> Self {
+        PendingCollective { inner: PendingInner::Ring(pending) }
+    }
+
+    /// Block until the collective completes. On `Ok` the output
+    /// buffers passed to `start_*` hold the result and the ledger has
+    /// absorbed the call's traffic; on `Err` the transport failed and
+    /// the error lists every failing rank's diagnosis.
+    pub fn wait(self) -> Result<(), CollectiveError> {
+        match self.inner {
+            PendingInner::Ready => Ok(()),
+            PendingInner::Ring(pending) => pending.wait().map_err(CollectiveError::new),
+        }
+    }
+}
 
 /// Quantized collectives over a simulated transport.
 ///
 /// `all_gather` moves pre-encoded shards (the wire format is
 /// self-describing, so heterogeneous per-tensor codecs just work);
 /// `reduce_scatter` encodes internally through the supplied codec.
+/// The `start_*` variants submit the same collectives without
+/// blocking, returning a [`PendingCollective`] whose `wait()`
+/// completes the call — the overlap scheduler's entry point.
 pub trait Collective {
     /// Backend identifier (for logs and tables).
     fn name(&self) -> &'static str;
@@ -86,6 +169,43 @@ pub trait Collective {
         let encoded: Vec<EncodedTensor> =
             shards.iter().map(|s| codec_ag.encode(s, rng)).collect();
         self.all_gather(&encoded, ledger)
+    }
+
+    /// Begin an AllGather without blocking: on `wait()` success, `out`
+    /// holds the concatenation of all dequantized shards and `ledger`
+    /// has absorbed the call's traffic. The default is the *correct
+    /// eager fallback* — it runs the blocking gather before returning,
+    /// so every backend satisfies the same API and differential pins;
+    /// the persistent ring backends override it to submit to their
+    /// worker runtime and return while the ring is still exchanging.
+    fn start_all_gather<'a>(
+        &'a self,
+        shards: &'a [EncodedTensor],
+        out: &'a mut Vec<f32>,
+        ledger: &'a mut TrafficLedger,
+    ) -> PendingCollective<'a> {
+        self.all_gather_into(shards, out, ledger);
+        PendingCollective::ready()
+    }
+
+    /// Begin a ReduceScatter without blocking: on `wait()` success,
+    /// `outs[r]` holds rank `r`'s reduced shard. `outs` is a reusable
+    /// pool — backends resize it to one slot per rank once and then
+    /// recycle the slots' capacity across calls. `rng` is consumed at
+    /// submit time (the per-call stream base is drawn before `start_*`
+    /// returns), so issue order alone fixes the stochastic-codec
+    /// stream, exactly as in the blocking call. The default is the
+    /// eager fallback, as in [`Self::start_all_gather`].
+    fn start_reduce_scatter<'a>(
+        &'a self,
+        inputs: &'a [Vec<f32>],
+        codec: &'a dyn Codec,
+        rng: &mut Pcg64,
+        outs: &'a mut Vec<Vec<f32>>,
+        ledger: &'a mut TrafficLedger,
+    ) -> PendingCollective<'a> {
+        *outs = self.reduce_scatter(inputs, codec, rng, ledger);
+        PendingCollective::ready()
     }
 }
 
@@ -590,6 +710,55 @@ mod tests {
         );
         for (r, o) in outs.iter().enumerate() {
             assert_eq!(o.len(), topo.shard_range(100, r).len());
+        }
+    }
+
+    #[test]
+    fn overlap_eager_start_all_gather_matches_blocking() {
+        // The trait's default `start_*` is the eager fallback: same
+        // result, same traffic, `wait` always `Ok`.
+        let topo = Topology::new(2, 2);
+        let full = rand_vec(257, 11);
+        let shards: Vec<EncodedTensor> = (0..4)
+            .map(|r| EncodedTensor::fp32(&full[topo.shard_range(257, r)]))
+            .collect();
+        let (lock, flat) = (LockstepFabric::new(topo), FlatFabric::new(topo));
+        let fabrics: [&dyn Collective; 2] = [&lock, &flat];
+        for fabric in fabrics {
+            let mut ledger = TrafficLedger::new();
+            let blocking = fabric.all_gather(&shards, &mut ledger);
+            let mut out = Vec::new();
+            let mut l2 = TrafficLedger::new();
+            let pending = fabric.start_all_gather(&shards, &mut out, &mut l2);
+            pending.wait().expect("eager start_all_gather cannot fail");
+            assert_eq!(out, blocking, "{}", fabric.name());
+            assert_eq!(l2, ledger, "{}", fabric.name());
+        }
+    }
+
+    #[test]
+    fn overlap_eager_start_reduce_scatter_matches_blocking() {
+        let topo = Topology::new(2, 2);
+        let inputs: Vec<Vec<f32>> = (0..4).map(|r| rand_vec(96, 80 + r as u64)).collect();
+        let codec = MinMaxCodec::new(8, 64, true);
+        let (lock, flat) = (LockstepFabric::new(topo), FlatFabric::new(topo));
+        let fabrics: [&dyn Collective; 2] = [&lock, &flat];
+        for fabric in fabrics {
+            let mut ledger = TrafficLedger::new();
+            let blocking =
+                fabric.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(9), &mut ledger);
+            let mut outs = Vec::new();
+            let mut l2 = TrafficLedger::new();
+            let pending = fabric.start_reduce_scatter(
+                &inputs,
+                &codec,
+                &mut Pcg64::seeded(9),
+                &mut outs,
+                &mut l2,
+            );
+            pending.wait().expect("eager start_reduce_scatter cannot fail");
+            assert_eq!(outs, blocking, "{}", fabric.name());
+            assert_eq!(l2, ledger, "{}", fabric.name());
         }
     }
 }

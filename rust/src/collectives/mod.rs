@@ -10,6 +10,20 @@
 //! every message's byte size is tallied in a [`TrafficLedger`], which
 //! the network model converts to seconds.
 //!
+//! Every backend additionally satisfies the **non-blocking submission
+//! API**: `start_all_gather` / `start_reduce_scatter` return a typed
+//! [`PendingCollective`] handle whose `wait()` completes the call,
+//! surfacing transport failures as a [`CollectiveError`] carrying the
+//! per-rank ring diagnoses instead of a panic. The persistent ring
+//! backends submit to their worker runtime and return while frames are
+//! in flight — compute between `start_*` and `wait()` overlaps the
+//! wire (the `coordinator::overlap` scheduler is built on this); the
+//! lockstep backends and the async spawn-per-call mode use the trait's
+//! correct eager default, so all four `FabricKind`s pass the same
+//! differential pins. At most one collective per fabric may be in
+//! flight at a time, and dropping an unwaited handle still drains the
+//! runtime safely.
+//!
 //! Registered backends (`--fabric lockstep|flat|async|socket`, see
 //! [`crate::config::FabricKind`]):
 //!
@@ -63,6 +77,6 @@ mod ring;
 pub mod socket_fabric;
 
 pub use async_fabric::AsyncFabric;
-pub use fabric::{Collective, FlatFabric, LockstepFabric};
+pub use fabric::{Collective, CollectiveError, FlatFabric, LockstepFabric, PendingCollective};
 pub use ledger::TrafficLedger;
 pub use socket_fabric::{loopback_available, SocketFabric};

@@ -31,7 +31,7 @@ use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
 use crate::util::Pcg64;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 /// How one rank's wire octets reach its ring successor (and the
@@ -339,7 +339,11 @@ pub(crate) fn world1_reduce_scatter(
 // died (its done-channel disconnected, which only happens when the
 // worker thread has exited). Workers touch the pointers only between
 // receiving a command and sending `Done` / exiting, so no pointer
-// outlives the caller's borrow. A worker that fails mid-ring reports
+// outlives the caller's borrow. The non-blocking path preserves the
+// same contract by reifying the drain obligation: `submit` returns a
+// [`PendingRun`] whose lifetime is tied to the command's borrows and
+// which performs the full all-ranks drain in `drain()` — or, as a
+// backstop, in its `Drop` — before those borrows can end. A worker that fails mid-ring reports
 // through `Done` (or exits silently), dropping its ring link, which
 // cascades exchange errors around the ring — every worker quiesces,
 // the dispatching call observes all P completions/disconnects, and
@@ -649,64 +653,41 @@ impl FabricRuntime {
         op: &'static str,
         cmd: Command,
         ledger: &mut TrafficLedger,
-        mut on_check: impl FnMut(usize, Vec<f32>),
+        on_check: impl FnMut(usize, Vec<f32>),
     ) {
+        let mut pending = self.submit(label, op, cmd);
+        if let Err(msg) = pending.drain(ledger, on_check) {
+            panic!("{msg}");
+        }
+    }
+
+    /// Non-blocking half of [`FabricRuntime::run`]: dispatch one
+    /// command to every worker and return the [`PendingRun`] that owns
+    /// the drain obligation. The handle holds the runtime lock for its
+    /// whole life, so at most one command is ever in flight per
+    /// runtime; a second collective issued before the handle drains
+    /// blocks behind the lock (on a single thread, that is a deadlock
+    /// — drain or drop the handle first).
+    pub(crate) fn submit(
+        &self,
+        label: &'static str,
+        op: &'static str,
+        cmd: Command,
+    ) -> PendingRun<'_> {
         // Recover from poisoning: a previous failed collective already
         // panicked once, and this call should diagnose dead workers
         // rather than die on the lock.
-        let inner = match self.inner.lock() {
+        let guard = match self.inner.lock() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
         };
         let mut failures: Vec<(usize, Option<RingError>)> = Vec::new();
-        for (r, tx) in inner.cmd_txs.iter().enumerate() {
+        for (r, tx) in guard.cmd_txs.iter().enumerate() {
             if tx.send(cmd).is_err() {
                 failures.push((r, None));
             }
         }
-        // Drain every done-channel before surfacing any failure OR
-        // running any cross-check: a recv error means that worker's
-        // thread has exited, so once all P recvs return, no worker
-        // still holds the command's pointers — only then is it safe to
-        // panic (from the aggregated failure below or from an on_check
-        // mismatch) and unwind through the caller's borrows.
-        let mut checks: Vec<(usize, Vec<f32>)> = Vec::new();
-        for (r, rx) in inner.done_rxs.iter().enumerate() {
-            match rx.recv() {
-                Ok(d) => {
-                    ledger.merge(&d.ledger);
-                    match d.outcome {
-                        Ok(Some(o)) => checks.push((r, o)),
-                        Ok(None) => {}
-                        Err(e) => failures.push((r, Some(e))),
-                    }
-                }
-                Err(_) => {
-                    if !failures.iter().any(|(fr, _)| *fr == r) {
-                        failures.push((r, None));
-                    }
-                }
-            }
-        }
-        if !failures.is_empty() {
-            failures.sort_by_key(|(r, _)| *r);
-            let detail: Vec<String> = failures
-                .iter()
-                .map(|(r, e)| match e {
-                    Some(e) => format!("rank {r}: {}", e.describe(*r, self.world)),
-                    None => format!("rank {r}: worker not running"),
-                })
-                .collect();
-            panic!(
-                "{label} {op} failed on {}/{} ranks: {}",
-                failures.len(),
-                self.world,
-                detail.join("; ")
-            );
-        }
-        for (r, o) in checks {
-            on_check(r, o);
-        }
+        PendingRun { label, op, world: self.world, guard, failures, drained: false }
     }
 
     /// Test hook: make worker `rank` exit as if its process died. The
@@ -733,6 +714,107 @@ impl Drop for FabricRuntime {
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// One command submitted to every worker but not yet drained — the
+/// non-blocking half of the module safety contract. The command's raw
+/// pointers stay live in the workers until every rank has reported,
+/// and *this handle owns the obligation to observe those reports*: it
+/// blocks on all P done-channels in [`PendingRun::drain`] and, as a
+/// backstop, on `Drop`, exactly as the blocking dispatch does. It also
+/// holds the runtime lock for its whole life, so no other command can
+/// interleave with the in-flight one.
+///
+/// Caveat (shared with every scoped-spawn-style API): `mem::forget` on
+/// a live handle skips the drain *and* leaks the runtime lock. The
+/// leaked lock makes every later collective on this fabric block
+/// forever — loud, not silent — but workers may still be writing
+/// through the command's pointers when the caller's borrows end, so
+/// forgetting a live handle is unsound. Don't.
+pub(crate) struct PendingRun<'rt> {
+    label: &'static str,
+    op: &'static str,
+    world: usize,
+    guard: MutexGuard<'rt, RuntimeInner>,
+    /// Ranks whose command send already failed (worker gone).
+    failures: Vec<(usize, Option<RingError>)>,
+    drained: bool,
+}
+
+impl PendingRun<'_> {
+    /// Block until every worker has reported, merging per-rank ledgers
+    /// in rank order and handing cross-check vectors to `on_check`.
+    /// A recv error means that worker's thread has exited, so once all
+    /// P recvs return no worker still holds the command's pointers —
+    /// only then does any failure surface. On failure this returns the
+    /// exact aggregated per-rank diagnosis the blocking path panics
+    /// with, as an `Err` a non-blocking caller can handle without
+    /// unwinding. Idempotent: a second call (e.g. from `Drop` after an
+    /// explicit drain) is a no-op.
+    pub(crate) fn drain(
+        &mut self,
+        ledger: &mut TrafficLedger,
+        mut on_check: impl FnMut(usize, Vec<f32>),
+    ) -> Result<(), String> {
+        if self.drained {
+            return Ok(());
+        }
+        self.drained = true;
+        let mut failures = std::mem::take(&mut self.failures);
+        let mut checks: Vec<(usize, Vec<f32>)> = Vec::new();
+        for (r, rx) in self.guard.done_rxs.iter().enumerate() {
+            match rx.recv() {
+                Ok(d) => {
+                    ledger.merge(&d.ledger);
+                    match d.outcome {
+                        Ok(Some(o)) => checks.push((r, o)),
+                        Ok(None) => {}
+                        Err(e) => failures.push((r, Some(e))),
+                    }
+                }
+                Err(_) => {
+                    if !failures.iter().any(|(fr, _)| *fr == r) {
+                        failures.push((r, None));
+                    }
+                }
+            }
+        }
+        if !failures.is_empty() {
+            failures.sort_by_key(|(r, _)| *r);
+            let detail: Vec<String> = failures
+                .iter()
+                .map(|(r, e)| match e {
+                    Some(e) => format!("rank {r}: {}", e.describe(*r, self.world)),
+                    None => format!("rank {r}: worker not running"),
+                })
+                .collect();
+            return Err(format!(
+                "{} {} failed on {}/{} ranks: {}",
+                self.label,
+                self.op,
+                failures.len(),
+                self.world,
+                detail.join("; ")
+            ));
+        }
+        for (r, o) in checks {
+            on_check(r, o);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for PendingRun<'_> {
+    fn drop(&mut self) {
+        if !self.drained {
+            // Safety backstop: the command's pointers must not outlive
+            // the caller's borrows, so an undrained handle drains here.
+            // Traffic lands in a sink ledger and failures are dropped —
+            // the explicit drain is where they surface.
+            let mut sink = TrafficLedger::new();
+            let _ = self.drain(&mut sink, |_, _| {});
         }
     }
 }
@@ -818,4 +900,82 @@ pub(crate) fn runtime_all_reduce(
         assert_same_bits(r, out0, &o);
     });
     out
+}
+
+/// A submitted-but-undrained ring collective: the [`PendingRun`] plus
+/// the caller-side state its completion needs (the ledger the traffic
+/// merges into and — on cross-check gather calls — rank 0's output
+/// slot to compare against). The public `PendingCollective` handle in
+/// `fabric` wraps one of these for the ring backends.
+pub(crate) struct PendingRing<'a> {
+    run: PendingRun<'a>,
+    ledger: &'a mut TrafficLedger,
+    /// `Some` on cross-check gather calls: rank 0's output slot, read
+    /// only after every `Done` is drained.
+    check_out: Option<RawSliceMut<Vec<f32>>>,
+}
+
+impl PendingRing<'_> {
+    /// Block until every rank reports, merge traffic into the caller's
+    /// ledger, and run the gather cross-check when armed. Failures come
+    /// back as the aggregated per-rank diagnosis string.
+    pub(crate) fn wait(mut self) -> Result<(), String> {
+        let check_out = self.check_out;
+        let ledger = &mut *self.ledger;
+        self.run.drain(ledger, |r, o| {
+            if let Some(slot) = check_out {
+                // SAFETY: rank 0's write completed before its Done, and
+                // check vectors are inspected only after every Done is
+                // drained.
+                let out0: &Vec<f32> = unsafe { slot.get(0) };
+                assert_same_bits(r, out0, &o);
+            }
+        })
+    }
+}
+
+/// Non-blocking ring AllGather: submit now, concatenate into `out` by
+/// the time `wait()` returns. All borrows stay live until the handle
+/// drains (see the module safety contract).
+pub(crate) fn submit_all_gather_into<'a>(
+    rt: &'a FabricRuntime,
+    label: &'static str,
+    shards: &'a [EncodedTensor],
+    out: &'a mut Vec<f32>,
+    ledger: &'a mut TrafficLedger,
+    check: bool,
+) -> PendingRing<'a> {
+    let out_slot = RawSliceMut::new(std::slice::from_mut(out));
+    let cmd = Command::AllGather { shards: RawSlice::new(shards), out: out_slot, check };
+    let run = rt.submit(label, "all_gather", cmd);
+    PendingRing { run, ledger, check_out: check.then_some(out_slot) }
+}
+
+/// Non-blocking ring ReduceScatter into the caller's reusable `outs`
+/// buffers (resized to one slot per rank once, then recycled across
+/// calls — the steady state allocates nothing here).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn submit_reduce_scatter_into<'a>(
+    rt: &'a FabricRuntime,
+    label: &'static str,
+    inputs: &'a [Vec<f32>],
+    codec: &'a dyn Codec,
+    base: u64,
+    n_elems: usize,
+    outs: &'a mut Vec<Vec<f32>>,
+    ledger: &'a mut TrafficLedger,
+) -> PendingRing<'a> {
+    let p = inputs.len();
+    if outs.len() != p {
+        outs.resize_with(p, Vec::new);
+    }
+    let cmd = Command::ReduceScatter {
+        inputs: RawSlice::new(inputs),
+        outs: RawSliceMut::new(outs),
+        codec: RawCodec::new(codec),
+        base,
+        n_elems,
+    };
+    let run = rt.submit(label, "reduce_scatter", cmd);
+    PendingRing { run, ledger, check_out: None }
 }

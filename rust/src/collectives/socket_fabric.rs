@@ -12,6 +12,10 @@
 //! [`RingTransport`] implementation differs, so everything the
 //! differential harness pins — FP32 bit-exactness, codec-resolution
 //! error bounds, analytic ring byte counts — carries over unchanged.
+//! That includes the non-blocking `start_all_gather` /
+//! `start_reduce_scatter` submission path: the same runtime commands,
+//! dispatched without blocking and drained in `wait()`, with TCP
+//! frames in flight while the caller computes.
 //!
 //! # Wire protocol
 //!
@@ -48,11 +52,11 @@
 //! **loudly** (a logged SKIP line, never a silent pass) when the
 //! environment cannot support it.
 
-use super::fabric::{check_inputs, Collective};
+use super::fabric::{check_inputs, Collective, PendingCollective};
 use super::ledger::TrafficLedger;
 use super::ring::{
-    runtime_all_gather_into, runtime_all_reduce, runtime_reduce_scatter, world1_reduce_scatter,
-    FabricRuntime, RingError, RingTransport,
+    runtime_all_gather_into, runtime_all_reduce, runtime_reduce_scatter, submit_all_gather_into,
+    submit_reduce_scatter_into, world1_reduce_scatter, FabricRuntime, RingError, RingTransport,
 };
 use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
@@ -490,6 +494,48 @@ impl Collective for SocketFabric {
         let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
         runtime_all_reduce(rt, "socket", inputs, codec_rs, codec_ag, base, n_elems, check, ledger)
     }
+
+    /// Non-blocking ring AllGather over TCP: the frames are in flight
+    /// while the caller computes; `wait()` drains all ranks.
+    fn start_all_gather<'a>(
+        &'a self,
+        shards: &'a [EncodedTensor],
+        out: &'a mut Vec<f32>,
+        ledger: &'a mut TrafficLedger,
+    ) -> PendingCollective<'a> {
+        let p = self.topo.world();
+        assert_eq!(shards.len(), p, "one shard per rank");
+        if p == 1 {
+            shards[0].decode(out);
+            return PendingCollective::ready();
+        }
+        let check = self.check_due();
+        let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
+        PendingCollective::in_flight(submit_all_gather_into(rt, "socket", shards, out, ledger, check))
+    }
+
+    /// Non-blocking ring ReduceScatter over TCP into the caller's
+    /// reusable `outs` pool; the rng base is drawn at submit time.
+    fn start_reduce_scatter<'a>(
+        &'a self,
+        inputs: &'a [Vec<f32>],
+        codec: &'a dyn Codec,
+        rng: &mut Pcg64,
+        outs: &'a mut Vec<Vec<f32>>,
+        ledger: &'a mut TrafficLedger,
+    ) -> PendingCollective<'a> {
+        let topo = self.topo;
+        let n_elems = check_inputs(&topo, inputs);
+        if topo.world() == 1 {
+            *outs = world1_reduce_scatter(&inputs[0], codec, rng);
+            return PendingCollective::ready();
+        }
+        let base = rng.next_u64();
+        let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
+        PendingCollective::in_flight(submit_reduce_scatter_into(
+            rt, "socket", inputs, codec, base, n_elems, outs, ledger,
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -670,5 +716,40 @@ mod tests {
         let b_got = t.join().expect("b thread");
         assert_eq!(buf, b_frame, "a must receive b's frame");
         assert_eq!(b_got, a_frame, "b must receive a's frame");
+    }
+
+    #[test]
+    fn overlap_socket_start_wait_matches_blocking() {
+        if skip_no_loopback() {
+            return;
+        }
+        let topo = Topology::new(2, 2);
+        let n = 1037;
+        let full = rand_vec(n, 61);
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|r| rand_vec(n, 70 + r as u64)).collect();
+        let codec = MinMaxCodec::new(8, 128, true);
+        let mut enc_rng = Pcg64::seeded(62);
+        let shards: Vec<EncodedTensor> = (0..topo.world())
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut enc_rng))
+            .collect();
+        let blocking = SocketFabric::new(topo).expect("construct socket fabric");
+        let nonblocking = SocketFabric::new(topo).expect("construct socket fabric");
+        let (mut lb, mut ln) = (TrafficLedger::new(), TrafficLedger::new());
+        let gb = blocking.all_gather(&shards, &mut lb);
+        let mut gn = Vec::new();
+        nonblocking
+            .start_all_gather(&shards, &mut gn, &mut ln)
+            .wait()
+            .expect("healthy ring");
+        assert_eq!(gn, gb, "start/wait all_gather diverged from blocking");
+        let rb = blocking.reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(63), &mut lb);
+        let mut rn: Vec<Vec<f32>> = Vec::new();
+        nonblocking
+            .start_reduce_scatter(&inputs, &codec, &mut Pcg64::seeded(63), &mut rn, &mut ln)
+            .wait()
+            .expect("healthy ring");
+        assert_eq!(rn, rb, "start/wait reduce_scatter diverged from blocking");
+        assert_eq!(ln, lb, "ledgers diverged across submission modes");
     }
 }

@@ -195,6 +195,12 @@ pub struct RunConfig {
     /// uses 4; weights are re-gathered per microbatch, which is exactly
     /// why FSDP's weight traffic dominates — Appendix B).
     pub n_accum: usize,
+    /// Pipeline the per-tensor collectives through the non-blocking
+    /// fabric API (`--overlap`): encode of tensor t+1 overlaps the wire
+    /// of tensor t, and the simulated clock charges
+    /// max(compute, comm) instead of their sum. Bit-identical loss
+    /// trajectories to the sequential schedule.
+    pub overlap: bool,
     /// Collective transport backend.
     pub fabric: FabricKind,
     /// Async-transport runtime knobs (persistent workers, cross-check
@@ -224,6 +230,7 @@ impl RunConfig {
             corpus_len: args.usize_or("corpus-len", 200_000),
             inter_gbps: args.f64_or("bandwidth", 10.0),
             n_accum: args.usize_or("accum", 1),
+            overlap: args.bool_or("overlap", false),
             fabric: FabricKind::parse(&args.str_or("fabric", "lockstep"))?,
             fabric_opts: FabricOptions {
                 persistent: args.bool_or("fabric-persistent", true),

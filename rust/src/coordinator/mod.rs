@@ -4,7 +4,9 @@
 //! levels refresh, metrics and the simulated cluster clock.
 
 pub mod checkpoint;
+pub mod overlap;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
+pub use overlap::{gather_weights_overlapped, reduce_scatter_grads_overlapped};
 pub use trainer::{Trainer, TrainerOptions};

@@ -1,0 +1,405 @@
+//! Communication/compute overlap scheduler (ROADMAP "overlap" item).
+//!
+//! The blocking trainer path runs encode → gather → encode → gather in
+//! strict sequence, one tensor at a time. This module pipelines the
+//! per-tensor exchanges through the non-blocking collective API
+//! ([`Collective::start_all_gather`] /
+//! [`Collective::start_reduce_scatter`]): while tensor `t` is in flight
+//! on the fabric, the scheduler encodes tensor `t+1` into the *spare*
+//! of two double-buffered scratch pools, then waits `t` and submits
+//! `t+1`. On the persistent ring backends the encode work (quantize +
+//! serialize) genuinely overlaps the wire; on the eager backends the
+//! schedule degenerates to the blocking order, so one code path serves
+//! all four `FabricKind`s.
+//!
+//! **Double-buffer contract.** Exactly two encode pools exist per
+//! pipeline: the *in-flight* pool is borrowed by the pending handle
+//! (the ring workers read its wire octets), the *draining* pool is
+//! owned by the scheduler and refilled for the next submission. The
+//! pools swap roles after every `wait()`; at most one collective is in
+//! flight at a time, matching the fabric's one-in-flight dispatch
+//! lock.
+//!
+//! **Bit-identity.** The pipeline is a pure reordering of *waiting*,
+//! never of rng-consuming work: encodes happen in the same
+//! (tensor, rank) order as the blocking path, and the per-call
+//! stochastic stream base is drawn at `start_*` time in the same
+//! per-tensor order, so overlapped results are bit-identical to the
+//! blocking methods for every codec (pinned by the unit tests below
+//! and by `tests/fabric_differential.rs`).
+//!
+//! **Failure semantics.** `wait()` surfaces transport failures as a
+//! [`crate::collectives::CollectiveError`] carrying the aggregated
+//! per-rank diagnosis; the scheduler re-panics with that exact text,
+//! so an overlapped run fails with the same message a blocking run
+//! would.
+//!
+//! [`gather_weights_chunked`] additionally splits each rank's shard
+//! into sub-pieces so decode of chunk `j` overlaps the wire of chunk
+//! `j+1`. Chunking changes the stochastic-codec rng stream (one encode
+//! per piece instead of per shard) and adds per-piece header bytes, so
+//! it is opt-in (`chunk_elems = 0` disables it) and stays off on the
+//! trainer's bit-identity path; for lossless codecs the stitched
+//! result is bit-identical to the unchunked gather.
+
+use crate::collectives::TrafficLedger;
+use crate::fsdp::store::{FlatParams, ShardedStore};
+use crate::quant::{Codec, EncodedTensor, QuantPolicy, TensorRole};
+use crate::util::Pcg64;
+
+/// Encode tensor `pi`'s per-rank shards into a reusable pool, in rank
+/// order from the shared stream — the same order the blocking
+/// `gather_weights` consumes it.
+fn encode_tensor_shards(
+    store: &ShardedStore,
+    pi: usize,
+    policy: &QuantPolicy,
+    rng: &mut Pcg64,
+    pool: &mut Vec<EncodedTensor>,
+) {
+    let p = store.topo.world();
+    if pool.len() != p {
+        pool.resize_with(p, EncodedTensor::default);
+    }
+    let codec = policy.codec(TensorRole::Weight, store.specs[pi].kind);
+    for (r, slot) in pool.iter_mut().enumerate() {
+        codec.encode_into(store.shard(pi, r), slot, rng);
+    }
+}
+
+/// Quantized weight AllGather with comm/compute overlap: bit-identical
+/// to [`ShardedStore::gather_weights`] on every backend, but tensor
+/// `t+1`'s encode runs while tensor `t` is on the wire.
+pub fn gather_weights_overlapped(
+    store: &ShardedStore,
+    policy: &QuantPolicy,
+    rng: &mut Pcg64,
+    ledger: &mut TrafficLedger,
+) -> FlatParams {
+    let n = store.specs.len();
+    let mut gathered: FlatParams = Vec::with_capacity(n);
+    if n == 0 {
+        return gathered;
+    }
+    let mut cur: Vec<EncodedTensor> = Vec::new();
+    let mut next: Vec<EncodedTensor> = Vec::new();
+    encode_tensor_shards(store, 0, policy, rng, &mut cur);
+    for pi in 0..n {
+        let mut out = Vec::new();
+        let pending = store.fabric().start_all_gather(&cur, &mut out, ledger);
+        if pi + 1 < n {
+            encode_tensor_shards(store, pi + 1, policy, rng, &mut next);
+        }
+        if let Err(e) = pending.wait() {
+            panic!("{e}");
+        }
+        gathered.push(out);
+        std::mem::swap(&mut cur, &mut next);
+    }
+    gathered
+}
+
+/// Refill the reusable per-rank input pool with parameter `pi`'s local
+/// gradients (the draining half of the reduce pipeline's two buffers).
+fn fill_grad_inputs(local_grads: &[FlatParams], pi: usize, pool: &mut Vec<Vec<f32>>) {
+    if pool.len() != local_grads.len() {
+        pool.resize_with(local_grads.len(), Vec::new);
+    }
+    for (slot, g) in pool.iter_mut().zip(local_grads) {
+        slot.clear();
+        slot.extend_from_slice(&g[pi]);
+    }
+}
+
+/// Quantized gradient ReduceScatter + mean with comm/compute overlap:
+/// bit-identical to [`ShardedStore::reduce_scatter_grads`] on every
+/// backend. While parameter `p`'s reduce is in flight, the scheduler
+/// stages parameter `p+1`'s inputs; the grad-accumulation scaling of
+/// `p`'s output happens after its `wait()`, exactly as the blocking
+/// path orders it.
+pub fn reduce_scatter_grads_overlapped(
+    store: &ShardedStore,
+    local_grads: &[FlatParams],
+    policy: &QuantPolicy,
+    rng: &mut Pcg64,
+    ledger: &mut TrafficLedger,
+) -> Vec<Vec<Vec<f32>>> {
+    let p = store.topo.world();
+    assert_eq!(local_grads.len(), p, "one full gradient per rank");
+    let inv_p = 1.0 / p as f32;
+    let n = store.specs.len();
+    let mut results = Vec::with_capacity(n);
+    if n == 0 {
+        return results;
+    }
+    let mut cur: Vec<Vec<f32>> = Vec::new();
+    let mut next: Vec<Vec<f32>> = Vec::new();
+    fill_grad_inputs(local_grads, 0, &mut cur);
+    for pi in 0..n {
+        let codec = policy.codec(TensorRole::Grad, store.specs[pi].kind);
+        let mut outs = Vec::new();
+        let pending = store.fabric().start_reduce_scatter(&cur, &codec, rng, &mut outs, ledger);
+        if pi + 1 < n {
+            fill_grad_inputs(local_grads, pi + 1, &mut next);
+        }
+        if let Err(e) = pending.wait() {
+            panic!("{e}");
+        }
+        for shard in outs.iter_mut() {
+            for x in shard.iter_mut() {
+                *x *= inv_p;
+            }
+        }
+        results.push(outs);
+        std::mem::swap(&mut cur, &mut next);
+    }
+    results
+}
+
+/// The `j`-th of `n_chunks` near-equal pieces of a `len`-element shard
+/// (remainder spread over the low pieces, mirroring
+/// [`crate::sim::Topology::shard_range`]). The pieces partition
+/// `0..len` in order.
+pub fn piece_range(len: usize, j: usize, n_chunks: usize) -> std::ops::Range<usize> {
+    debug_assert!(j < n_chunks);
+    let base = len / n_chunks;
+    let rem = len % n_chunks;
+    let start = j * base + j.min(rem);
+    start..start + base + usize::from(j < rem)
+}
+
+/// Encode chunk `j` of tensor `pi`: each rank contributes the `j`-th
+/// piece of its *own* shard (a chunk never crosses shard ownership, so
+/// the stitched gather lands exactly where the unchunked one would).
+fn encode_chunk(
+    store: &ShardedStore,
+    pi: usize,
+    codec: &dyn Codec,
+    rng: &mut Pcg64,
+    j: usize,
+    n_chunks: usize,
+    pool: &mut Vec<EncodedTensor>,
+) {
+    let p = store.topo.world();
+    if pool.len() != p {
+        pool.resize_with(p, EncodedTensor::default);
+    }
+    for (r, slot) in pool.iter_mut().enumerate() {
+        let shard = store.shard(pi, r);
+        let piece = piece_range(shard.len(), j, n_chunks);
+        codec.encode_into(&shard[piece], slot, rng);
+    }
+}
+
+/// Chunked overlapped AllGather: splits every rank's shard into pieces
+/// of at most `chunk_elems` elements and pipelines the pieces, so the
+/// `view_bytes` decode and stitch of chunk `j` overlap the wire of
+/// chunk `j+1`. `chunk_elems = 0` disables chunking (delegates to
+/// [`gather_weights_overlapped`]). Lossless codecs stitch to a
+/// bit-identical result; stochastic codecs see a different (equally
+/// valid) rng stream, which is why the trainer's bit-identity path
+/// never chunks.
+pub fn gather_weights_chunked(
+    store: &ShardedStore,
+    policy: &QuantPolicy,
+    rng: &mut Pcg64,
+    ledger: &mut TrafficLedger,
+    chunk_elems: usize,
+) -> FlatParams {
+    if chunk_elems == 0 {
+        return gather_weights_overlapped(store, policy, rng, ledger);
+    }
+    let topo = store.topo;
+    let p = topo.world();
+    let mut gathered = Vec::with_capacity(store.specs.len());
+    let mut cur: Vec<EncodedTensor> = Vec::new();
+    let mut next: Vec<EncodedTensor> = Vec::new();
+    let mut chunk_out: Vec<f32> = Vec::new();
+    for (pi, spec) in store.specs.iter().enumerate() {
+        let n = spec.numel();
+        let codec = policy.codec(TensorRole::Weight, spec.kind);
+        let shard_lens: Vec<usize> = (0..p).map(|r| topo.shard_range(n, r).len()).collect();
+        let max_len = shard_lens.iter().copied().max().unwrap_or(0);
+        let min_len = shard_lens.iter().copied().min().unwrap_or(0);
+        // Every rank must contribute a non-empty piece to every chunk
+        // (the fabric wants one shard per rank), so the chunk count is
+        // capped by the smallest shard.
+        let n_chunks = max_len.div_ceil(chunk_elems).clamp(1, min_len.max(1));
+        let mut out = vec![0.0f32; n];
+        encode_chunk(store, pi, &codec, rng, 0, n_chunks, &mut cur);
+        for j in 0..n_chunks {
+            let pending = store.fabric().start_all_gather(&cur, &mut chunk_out, ledger);
+            if j + 1 < n_chunks {
+                encode_chunk(store, pi, &codec, rng, j + 1, n_chunks, &mut next);
+            }
+            if let Err(e) = pending.wait() {
+                panic!("{e}");
+            }
+            // Scatter-stitch: the gathered chunk is the rank-order
+            // concatenation of every rank's j-th piece; copy each
+            // segment to its place in the full tensor.
+            let mut off = 0usize;
+            for (r, &len_r) in shard_lens.iter().enumerate() {
+                let shard_start = topo.shard_range(n, r).start;
+                let piece = piece_range(len_r, j, n_chunks);
+                let seg = &chunk_out[off..off + piece.len()];
+                out[shard_start + piece.start..shard_start + piece.end].copy_from_slice(seg);
+                off += piece.len();
+            }
+            assert_eq!(off, chunk_out.len(), "chunk {j} of {}", spec.name);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        gathered.push(out);
+    }
+    gathered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::AsyncFabric;
+    use crate::model::spec::{ParamKind, ParamSpec};
+    use crate::sim::Topology;
+
+    fn toy_specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w0".into(), shape: vec![32, 48], kind: ParamKind::Matrix },
+            ParamSpec { name: "ln".into(), shape: vec![48], kind: ParamKind::Norm },
+            ParamSpec { name: "w1".into(), shape: vec![48, 21], kind: ParamKind::Matrix },
+            ParamSpec { name: "b".into(), shape: vec![21], kind: ParamKind::Bias },
+        ]
+    }
+
+    fn toy_params(seed: u64) -> FlatParams {
+        let mut rng = Pcg64::seeded(seed);
+        toy_specs()
+            .iter()
+            .map(|s| {
+                let mut v = vec![0.0f32; s.numel()];
+                rng.fill_normal(&mut v, 0.5);
+                v
+            })
+            .collect()
+    }
+
+    fn stores(topo: Topology, seed: u64) -> (ShardedStore, ShardedStore) {
+        let params = toy_params(seed);
+        let lockstep = ShardedStore::from_full(toy_specs(), &params, topo);
+        let ring = ShardedStore::from_full(toy_specs(), &params, topo)
+            .with_fabric(Box::new(AsyncFabric::with_options(topo, true, 0)));
+        (lockstep, ring)
+    }
+
+    #[test]
+    fn overlap_gather_bit_identical_to_blocking() {
+        // Same seed, same policy: the pipelined gather must be
+        // bit-identical to the blocking one — on the eager lockstep
+        // backend AND on the persistent ring runtime where the encode
+        // genuinely overlaps the wire.
+        let topo = Topology::new(2, 2);
+        let (lockstep, ring) = stores(topo, 1);
+        for (name, store) in [("lockstep", &lockstep), ("async", &ring)] {
+            for policy in [QuantPolicy::baseline(), QuantPolicy::wg(8, 8)] {
+                let mut l_blk = TrafficLedger::new();
+                let blocking =
+                    store.gather_weights(&policy, &mut Pcg64::seeded(5), &mut l_blk);
+                let mut l_ovl = TrafficLedger::new();
+                let overlapped = gather_weights_overlapped(
+                    store,
+                    &policy,
+                    &mut Pcg64::seeded(5),
+                    &mut l_ovl,
+                );
+                assert_eq!(overlapped, blocking, "{name}");
+                assert_eq!(l_ovl, l_blk, "{name}: byte accounting must match");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_reduce_bit_identical_to_blocking() {
+        // Stochastic gradient codec: bit-identity requires the pipeline
+        // to consume the caller rng in exactly the blocking order.
+        let topo = Topology::new(2, 2);
+        let (lockstep, ring) = stores(topo, 2);
+        let grads: Vec<FlatParams> = (0..topo.world())
+            .map(|r| toy_params(10 + r as u64))
+            .collect();
+        let policy = QuantPolicy::wg(8, 8);
+        for (name, store) in [("lockstep", &lockstep), ("async", &ring)] {
+            let mut l_blk = TrafficLedger::new();
+            let blocking = store.reduce_scatter_grads(
+                &grads,
+                &policy,
+                &mut Pcg64::seeded(7),
+                &mut l_blk,
+            );
+            let mut l_ovl = TrafficLedger::new();
+            let overlapped = reduce_scatter_grads_overlapped(
+                store,
+                &grads,
+                &policy,
+                &mut Pcg64::seeded(7),
+                &mut l_ovl,
+            );
+            assert_eq!(overlapped, blocking, "{name}");
+            assert_eq!(l_ovl, l_blk, "{name}: byte accounting must match");
+        }
+    }
+
+    #[test]
+    fn overlap_chunked_gather_lossless_bit_identical() {
+        // FP32 weights: the scatter-stitched chunked gather must equal
+        // the blocking gather exactly, at any chunk size (including
+        // ones that leave ragged last pieces), on both backend styles.
+        let topo = Topology::new(2, 2);
+        let (lockstep, ring) = stores(topo, 3);
+        let policy = QuantPolicy::baseline();
+        for (name, store) in [("lockstep", &lockstep), ("async", &ring)] {
+            let mut l_blk = TrafficLedger::new();
+            let blocking = store.gather_weights(&policy, &mut Pcg64::seeded(9), &mut l_blk);
+            for chunk in [7usize, 64, 1 << 20] {
+                let mut l = TrafficLedger::new();
+                let chunked = gather_weights_chunked(
+                    store,
+                    &policy,
+                    &mut Pcg64::seeded(9),
+                    &mut l,
+                    chunk,
+                );
+                assert_eq!(chunked, blocking, "{name} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_chunk_zero_delegates_to_unchunked() {
+        let topo = Topology::new(1, 4);
+        let (store, _) = stores(topo, 4);
+        let policy = QuantPolicy::wg(4, 4);
+        let mut l1 = TrafficLedger::new();
+        let a = gather_weights_overlapped(&store, &policy, &mut Pcg64::seeded(11), &mut l1);
+        let mut l2 = TrafficLedger::new();
+        let b = gather_weights_chunked(&store, &policy, &mut Pcg64::seeded(11), &mut l2, 0);
+        assert_eq!(a, b);
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn overlap_piece_ranges_partition_in_order() {
+        for len in [0usize, 1, 5, 64, 173, 1037] {
+            for n_chunks in [1usize, 2, 3, 7] {
+                if n_chunks > len.max(1) {
+                    continue;
+                }
+                let mut cursor = 0usize;
+                for j in 0..n_chunks {
+                    let r = piece_range(len, j, n_chunks);
+                    assert_eq!(r.start, cursor, "len {len} chunks {n_chunks} piece {j}");
+                    cursor = r.end;
+                }
+                assert_eq!(cursor, len, "pieces must cover 0..{len}");
+            }
+        }
+    }
+}

@@ -162,9 +162,21 @@ impl Trainer {
         let mut loss_sum = 0.0f64;
         let mut max_compute = 0.0f64;
         for acc in 0..n_accum {
-            let gathered = self
-                .store
-                .gather_weights(&self.cfg.policy, &mut self.rng, &mut ledger);
+            // `--overlap` routes the gather through the pipelined
+            // scheduler (encode of tensor t+1 overlaps the wire of
+            // tensor t on the ring backends) — bit-identical results,
+            // so the loss trajectory cannot depend on the schedule.
+            let gathered = if self.cfg.overlap {
+                super::overlap::gather_weights_overlapped(
+                    &self.store,
+                    &self.cfg.policy,
+                    &mut self.rng,
+                    &mut ledger,
+                )
+            } else {
+                self.store
+                    .gather_weights(&self.cfg.policy, &mut self.rng, &mut ledger)
+            };
             for r in 0..world {
                 let tokens = self.samplers[r].batch(dims.batch_size, dims.seq_len);
                 let c0 = Instant::now();
@@ -195,12 +207,22 @@ impl Trainer {
         let mean_loss = loss_sum / (world * n_accum) as f64;
 
         // (3) quantized gradient ReduceScatter (mean over world).
-        let sharded = self.store.reduce_scatter_grads(
-            &local_grads,
-            &self.cfg.policy,
-            &mut self.rng,
-            &mut ledger,
-        );
+        let sharded = if self.cfg.overlap {
+            super::overlap::reduce_scatter_grads_overlapped(
+                &self.store,
+                &local_grads,
+                &self.cfg.policy,
+                &mut self.rng,
+                &mut ledger,
+            )
+        } else {
+            self.store.reduce_scatter_grads(
+                &local_grads,
+                &self.cfg.policy,
+                &mut self.rng,
+                &mut ledger,
+            )
+        };
 
         // (4) sharded AdamW on the FP32 master shards.
         self.t += 1;
@@ -219,7 +241,15 @@ impl Trainer {
         } else {
             self.net.ledger_time(&ledger)
         };
-        let sim_s = max_compute + net_s;
+        // With `--overlap` the comm/compute overlap scheduler hides the
+        // shorter of the two phases behind the longer (the ideal the
+        // analytic `StepTimeModel::step_overlapped` bounds per layer
+        // group); the sequential schedule pays their sum.
+        let sim_s = if self.cfg.overlap {
+            max_compute.max(net_s)
+        } else {
+            max_compute + net_s
+        };
         self.log.push(StepRecord {
             step: t,
             loss: mean_loss,
@@ -497,6 +527,43 @@ mod tests {
         assert!(t4.log.final_loss(2) < t4.log.steps[0].loss);
         c1.n_accum = 1; // silence unused-mut lint paranoia
         let _ = c1;
+    }
+
+    #[test]
+    fn overlap_trainer_loss_trajectory_bit_identical() {
+        // `--overlap` is a pure scheduling change: for the lossless
+        // policy AND the stochastic quantized one, every step's loss
+        // and byte accounting must match the sequential run bit for
+        // bit (the rng stream is consumed in the identical order).
+        if skip() {
+            return;
+        }
+        let eng = Arc::new(Engine::cpu().unwrap());
+        for policy in ["exact", "w8g8"] {
+            let mut seq = Trainer::new(
+                eng.clone(),
+                &artifacts_root(),
+                mk_cfg(policy, 3),
+                Default::default(),
+            )
+            .unwrap();
+            seq.run(3).unwrap();
+            let mut cfg = mk_cfg(policy, 3);
+            cfg.overlap = true;
+            let mut ovl =
+                Trainer::new(eng.clone(), &artifacts_root(), cfg, Default::default()).unwrap();
+            ovl.run(3).unwrap();
+            assert_eq!(seq.log.steps.len(), ovl.log.steps.len());
+            for (a, b) in seq.log.steps.iter().zip(&ovl.log.steps) {
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "{policy} step {}: overlap changed the loss",
+                    a.step
+                );
+                assert_eq!(a.traffic, b.traffic, "{policy} step {}", a.step);
+            }
+        }
     }
 
     #[test]

@@ -64,7 +64,11 @@ pub fn figure3(args: &Args) -> Result<()> {
 }
 
 /// Figure 4 — step time vs inter-node bandwidth for the paper's three
-/// model sizes, FSDP vs QSDP (analytic, real codec byte counts).
+/// model sizes, FSDP vs QSDP (analytic, real codec byte counts). The
+/// `+ovl` rows replace the fixed paper overlap constant with the
+/// fraction the per-layer-group pipeline actually achieves
+/// ([`StepTimeModel::measured_overlap`] threaded through
+/// `total_with_overlap`).
 pub fn figure4(args: &Args) -> Result<()> {
     let bws = [10.0, 50.0, 100.0];
     let models = ["gpt125m", "gpt350m", "gpt1.3b"];
@@ -72,11 +76,22 @@ pub fn figure4(args: &Args) -> Result<()> {
     let qsdp = QuantPolicy::qsdp_default();
     let mut rows = Vec::new();
     for m in models {
-        for (label, p) in [("FSDP", &fsdp), ("QSDP", &qsdp)] {
+        let systems = [
+            ("FSDP", &fsdp, false),
+            ("FSDP+ovl", &fsdp, true),
+            ("QSDP", &qsdp, false),
+            ("QSDP+ovl", &qsdp, true),
+        ];
+        for (label, p, measured) in systems {
             let mut row = vec![m.to_string(), label.to_string()];
             for bw in bws {
                 let model = StepTimeModel::paper(m, bw).unwrap();
-                row.push(format!("{:.2}", model.step_total(p)));
+                let t = if measured {
+                    model.step(p).total_with_overlap(model.measured_overlap(p))
+                } else {
+                    model.step_total(p)
+                };
+                row.push(format!("{t:.2}"));
             }
             rows.push(row);
         }
@@ -85,14 +100,16 @@ pub fn figure4(args: &Args) -> Result<()> {
     let headers = ["model", "system", "10Gbps", "50Gbps", "100Gbps"];
     let t = table::render(&headers, &rows);
     println!(
-        "Figure 4 — step time (s) vs bandwidth (paper: QSDP ~constant, FSDP 1.3B 2.25x slower at 10 Gbps):\n{t}"
+        "Figure 4 — step time (s) vs bandwidth (paper: QSDP ~constant, FSDP 1.3B 2.25x slower at 10 Gbps; +ovl = measured per-layer overlap instead of the fixed 0.6):\n{t}"
     );
     table::write_csv("results/figure4.csv", &headers, &rows)?;
     Ok(())
 }
 
 /// Figure 6 — fake-compression ratio sweep vs step time per model and
-/// bandwidth, with the ideal (no communication) dashed line.
+/// bandwidth, with the ideal (no communication) dashed line. Each
+/// `+ovl` row re-runs the same ratio sweep under the per-layer-group
+/// overlapped clock ([`StepTimeModel::step_overlapped_fake`]).
 pub fn figure6(args: &Args) -> Result<()> {
     let bws = [10.0, 50.0, 100.0];
     let models = ["gpt125m", "gpt350m", "gpt1.3b"];
@@ -107,13 +124,19 @@ pub fn figure6(args: &Args) -> Result<()> {
             }
             row.push(format!("{:.2}", model.fake_total(1e12, 1e12)));
             rows.push(row);
+            let mut ovl = vec![format!("{m}+ovl"), format!("{bw:.0}")];
+            for r in ratios {
+                ovl.push(format!("{:.2}", model.step_overlapped_fake(r, r).overlapped_s));
+            }
+            ovl.push(format!("{:.2}", model.step_overlapped_fake(1e12, 1e12).overlapped_s));
+            rows.push(ovl);
         }
     }
     let _ = args;
     let headers = ["model", "Gbps", "1x", "2x", "4x", "8x", "ideal"];
     let t = table::render(&headers, &rows);
     println!(
-        "Figure 6 — step time (s) vs compression ratio (paper: 8x nearly reaches the ideal line for 1.3B):\n{t}"
+        "Figure 6 — step time (s) vs compression ratio (paper: 8x nearly reaches the ideal line for 1.3B; +ovl = per-layer-group overlapped clock):\n{t}"
     );
     table::write_csv("results/figure6.csv", &headers, &rows)?;
     Ok(())

@@ -59,6 +59,7 @@ pub fn base_cfg(model: &str, steps: u64) -> RunConfig {
         corpus_len: 200_000,
         inter_gbps: 10.0,
         n_accum: 1,
+        overlap: false,
         fabric: crate::config::FabricKind::default(),
         fabric_opts: crate::config::FabricOptions::default(),
     }

@@ -16,7 +16,8 @@ fn usage() -> ! {
         "usage: qsdp <command> [flags]\n\
          commands:\n  \
          train     --config tiny --policy w8g8|baseline|exact --steps N --workers P\n            \
-         --fabric lockstep|flat|async|socket [--fabric-addr IP] [--fabric-port N]\n  \
+         --fabric lockstep|flat|async|socket [--fabric-addr IP] [--fabric-port N]\n            \
+         [--overlap]  (pipeline collectives; comm/compute overlap clock)\n  \
          table1 | table2 | table3 | table5 | table6\n  \
          figure3 | figure4 | figure6 | figure7\n  \
          theory    [--dim N] [--kappa K]\n  \

@@ -15,5 +15,5 @@ pub mod topology;
 
 pub use compute::ComputeModel;
 pub use network::{LinkProfile, NetworkModel};
-pub use steptime::{StepBreakdown, StepTimeModel};
+pub use steptime::{OverlapStep, StepBreakdown, StepTimeModel};
 pub use topology::Topology;

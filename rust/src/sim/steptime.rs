@@ -8,7 +8,8 @@
 //! sizes come from the byte-exact quantization codec; the baseline
 //! transmits FP32 weights and FP16 gradients (§6.1).
 
-use crate::model::spec::GptDims;
+use crate::fsdp::pack_groups;
+use crate::model::spec::{GptDims, ParamSpec};
 use crate::quant::{QuantPolicy, TensorRole};
 
 use super::compute::ComputeModel;
@@ -39,6 +40,35 @@ impl StepBreakdown {
     /// Non-overlapped total (upper bound).
     pub fn total(&self) -> f64 {
         self.compute_s + self.weight_comm_s + self.grad_comm_s
+    }
+}
+
+/// Per-layer-group overlapped schedule totals
+/// ([`StepTimeModel::step_overlapped`]). Each group contributes
+/// `max(compute, comm)` to `overlapped_s`; the sequential schedule
+/// pays `compute + comm` per group, so the hidden time is
+/// `Σ min(compute_g, comm_g)` — provably bounded by the compute
+/// budget.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapStep {
+    /// Σ per-group compute seconds (= the whole step's compute).
+    pub compute_s: f64,
+    /// Σ per-group communication seconds (weight gathers + grad RS).
+    pub comm_s: f64,
+    /// Σ per-group `max(compute, comm)` — the overlapped clock.
+    pub overlapped_s: f64,
+}
+
+impl OverlapStep {
+    /// The sequential schedule's clock: every group pays both phases.
+    pub fn sequential(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+
+    /// Communication hidden under compute: `sequential - overlapped`
+    /// `= Σ min(compute_g, comm_g) ≤ compute_s`.
+    pub fn hidden(&self) -> f64 {
+        self.sequential() - self.overlapped_s
     }
 }
 
@@ -113,6 +143,86 @@ impl StepTimeModel {
             weight_comm_s: self.weight_gathers() as f64
                 * self.net.allgather_time(&self.topo, wb),
             grad_comm_s: self.net.reduce_scatter_time(&self.topo, gb),
+        }
+    }
+
+    /// Element budget that packs the parameter spec into roughly one
+    /// communication group per transformer layer — the granularity the
+    /// overlap scheduler pipelines at.
+    pub fn layer_group_budget(&self) -> usize {
+        let total: usize = self.dims.param_spec().iter().map(|p| p.numel()).sum();
+        (total / self.dims.n_layer.max(1)).max(1)
+    }
+
+    /// Per-layer-group overlapped schedule (the analytic counterpart of
+    /// the `--overlap` trainer path): group `i+1`'s gather rides the
+    /// wire while group `i` computes, so each group contributes
+    /// `max(compute, comm)` to the clock instead of their sum. Uses
+    /// [`Self::layer_group_budget`] — one group per layer, roughly.
+    pub fn step_overlapped(&self, policy: &QuantPolicy) -> OverlapStep {
+        self.step_overlapped_with_budget(policy, self.layer_group_budget())
+    }
+
+    /// [`Self::step_overlapped`] at an explicit group budget (elements
+    /// per group; the ablation grid sweeps this).
+    pub fn step_overlapped_with_budget(&self, policy: &QuantPolicy, budget: usize) -> OverlapStep {
+        self.overlap_over_groups(
+            budget,
+            |p| policy.wire_bytes(TensorRole::Weight, p.numel(), p.kind) as f64,
+            |p| policy.wire_bytes(TensorRole::Grad, p.numel(), p.kind) as f64,
+        )
+    }
+
+    /// Per-layer-group overlapped clock under Appendix-B fake
+    /// compression (baseline payloads shrunk by γ) — the overlap
+    /// column of the Figure 6 grid.
+    pub fn step_overlapped_fake(&self, gamma_w: f64, gamma_g: f64) -> OverlapStep {
+        assert!(gamma_w >= 1.0 && gamma_g >= 1.0);
+        let base = QuantPolicy::baseline();
+        self.overlap_over_groups(
+            self.layer_group_budget(),
+            |p| base.wire_bytes(TensorRole::Weight, p.numel(), p.kind) as f64 / gamma_w,
+            |p| base.wire_bytes(TensorRole::Grad, p.numel(), p.kind) as f64 / gamma_g,
+        )
+    }
+
+    /// Shared group loop: `wb`/`gb` give one tensor's weight/gradient
+    /// wire bytes; compute splits proportionally to group elements.
+    fn overlap_over_groups<FW, FG>(&self, budget: usize, wb: FW, gb: FG) -> OverlapStep
+    where
+        FW: Fn(&ParamSpec) -> f64,
+        FG: Fn(&ParamSpec) -> f64,
+    {
+        let spec = self.dims.param_spec();
+        let groups = pack_groups(&spec, budget);
+        let total_numel: usize = spec.iter().map(|p| p.numel()).sum();
+        let compute_total = self.compute.step_time(&self.dims, &self.topo);
+        let gathers = self.weight_gathers() as f64;
+        let mut out = OverlapStep::default();
+        for g in &groups {
+            let compute_g = compute_total * g.numel as f64 / total_numel as f64;
+            let wb_g: f64 = g.members.iter().map(|&i| wb(&spec[i])).sum();
+            let gb_g: f64 = g.members.iter().map(|&i| gb(&spec[i])).sum();
+            let comm_g = gathers * self.net.allgather_time(&self.topo, wb_g as usize)
+                + self.net.reduce_scatter_time(&self.topo, gb_g as usize);
+            out.compute_s += compute_g;
+            out.comm_s += comm_g;
+            out.overlapped_s += compute_g.max(comm_g);
+        }
+        out
+    }
+
+    /// The overlap fraction the per-layer pipeline actually achieves
+    /// under this (model, cluster, policy) triple: hidden communication
+    /// over total communication, in `[0, 1]`. Feed it to
+    /// [`StepBreakdown::total_with_overlap`] to replace the fixed
+    /// `paper()` constant with a measured value.
+    pub fn measured_overlap(&self, policy: &QuantPolicy) -> f64 {
+        let o = self.step_overlapped(policy);
+        if o.comm_s <= 0.0 {
+            0.0
+        } else {
+            (o.hidden() / o.comm_s).clamp(0.0, 1.0)
         }
     }
 
@@ -193,6 +303,67 @@ mod tests {
         assert!((18.0..32.0).contains(&base), "baseline {base}");
         let ratio = base / w8g8;
         assert!((1.5..2.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn overlap_hidden_time_bounded_by_compute_budget() {
+        // Satellite pin: the per-layer-group overlap can never hide
+        // more communication than there is compute to hide it under,
+        // and the overlapped clock sits between max(compute, comm) and
+        // the sequential sum — strictly below it whenever both phases
+        // are non-trivial.
+        for model in ["gpt125m", "gpt1.3b"] {
+            for bw in [10.0, 100.0] {
+                let m = StepTimeModel::paper(model, bw).unwrap();
+                for policy in [QuantPolicy::baseline(), QuantPolicy::qsdp_default()] {
+                    let o = m.step_overlapped(&policy);
+                    assert!(o.compute_s > 0.0 && o.comm_s > 0.0, "{model} {bw}");
+                    assert!(
+                        o.hidden() <= o.compute_s + 1e-9,
+                        "{model} {bw}: hidden {} > compute {}",
+                        o.hidden(),
+                        o.compute_s
+                    );
+                    assert!(o.hidden() >= 0.0, "{model} {bw}");
+                    assert!(
+                        o.overlapped_s >= o.compute_s.max(o.comm_s) - 1e-9,
+                        "{model} {bw}: overlapped below the lower bound"
+                    );
+                    assert!(
+                        o.overlapped_s < o.sequential(),
+                        "{model} {bw}: per-layer max(compute, comm) must beat the sum"
+                    );
+                    let frac = m.measured_overlap(&policy);
+                    assert!((0.0..=1.0).contains(&frac), "{model} {bw}: frac {frac}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_group_compute_matches_whole_step() {
+        // The per-group compute split is a partition of the whole
+        // step's compute; group budgets only move communication
+        // granularity (per-call latency), never compute.
+        let m = StepTimeModel::paper("gpt1.3b", 10.0).unwrap();
+        let whole = m.step(&QuantPolicy::qsdp_default()).compute_s;
+        for budget in [m.layer_group_budget(), 1, usize::MAX] {
+            let o = m.step_overlapped_with_budget(&QuantPolicy::qsdp_default(), budget);
+            assert!(
+                (o.compute_s - whole).abs() < 1e-9 * whole.max(1.0),
+                "budget {budget}: {} vs {whole}",
+                o.compute_s
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_single_group_degenerates_to_max() {
+        // One giant group: nothing to pipeline, the overlapped clock is
+        // exactly max(compute, comm) of that group.
+        let m = StepTimeModel::paper("gpt125m", 10.0).unwrap();
+        let o = m.step_overlapped_with_budget(&QuantPolicy::baseline(), usize::MAX);
+        assert!((o.overlapped_s - o.compute_s.max(o.comm_s)).abs() < 1e-12);
     }
 
     #[test]

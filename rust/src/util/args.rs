@@ -20,7 +20,7 @@ use std::collections::HashMap;
 /// unless it is an explicit boolean literal. Extend this list when
 /// adding a boolean flag — and only then, so a future value-typed flag
 /// can never be silently misparsed by appearing here.
-pub const BOOL_FLAGS: &[&str] = &["fabric-persistent", "fine", "full", "snapshot-only"];
+pub const BOOL_FLAGS: &[&str] = &["fabric-persistent", "fine", "full", "overlap", "snapshot-only"];
 
 fn is_bool_literal(s: &str) -> bool {
     matches!(s, "true" | "false" | "1" | "0" | "yes" | "no")

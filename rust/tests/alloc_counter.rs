@@ -118,3 +118,56 @@ fn fabric_persistent_all_gather_steady_state_allocates_nothing() {
     assert_eq!(out, expected);
     assert_eq!(ledger, expected_ledger);
 }
+
+#[test]
+fn overlap_start_wait_steady_state_allocates_nothing() {
+    // The non-blocking submission path must inherit the zero-allocation
+    // steady state: `start_all_gather` hands out a stack-held handle
+    // (the runtime's dispatch guard + an empty failure list that only
+    // grows on error), and a successful `wait()` only joins acks — no
+    // allocation on Ok. Same recycled scratch pools as the blocking
+    // call underneath.
+    let topo = Topology::new(2, 2);
+    let p = topo.world();
+    let n = 4096;
+    let codec = MinMaxCodec::new(8, 256, true);
+    let mut rng = Pcg64::seeded(6);
+    let mut full = vec![0.0f32; n];
+    rng.fill_normal(&mut full, 1.0);
+    let shards: Vec<EncodedTensor> = (0..p)
+        .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut rng))
+        .collect();
+    let fabric = AsyncFabric::with_options(topo, true, 0);
+    let mut out = Vec::new();
+    let mut ledger = TrafficLedger::new();
+    for _ in 0..16 {
+        ledger.reset();
+        fabric
+            .start_all_gather(&shards, &mut out, &mut ledger)
+            .wait()
+            .expect("healthy warmup start+wait");
+    }
+    assert_eq!(out.len(), n);
+    let expected = out.clone();
+    let expected_ledger = ledger;
+
+    COUNTING.store(true, Ordering::SeqCst);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..16 {
+        ledger.reset();
+        fabric
+            .start_all_gather(&shards, &mut out, &mut ledger)
+            .wait()
+            .expect("healthy measured start+wait");
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    COUNTING.store(false, Ordering::SeqCst);
+
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state non-blocking submit/wait performed heap allocations"
+    );
+    assert_eq!(out, expected);
+    assert_eq!(ledger, expected_ledger);
+}

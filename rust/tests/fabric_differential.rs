@@ -15,6 +15,11 @@
 //!   from the bit-width carried in the wire format) times the number of
 //!   encodes a backend performs — per-element, in L2, and in mean
 //!   (unbiasedness).
+//! * **Non-blocking equals blocking.** `start_all_gather` /
+//!   `start_reduce_scatter` + `wait()` must reproduce the blocking
+//!   call's outputs and ledger bit-for-bit on every backend (the
+//!   `overlap_`-named tests below) — the submission API only moves the
+//!   wait, never the math or the rng stream.
 //! * **The ring ledgers are analytic.** A ring on an `n × g` cluster
 //!   has exactly `n` node-crossing links; each block traverses all
 //!   links except one. Both ring backends' (`async` over channels,
@@ -557,5 +562,75 @@ fn fabric_differential_ring_seed_reproducibility() {
     }
     for w in per_backend.windows(2) {
         assert_eq!(w[0], w[1], "ring backends diverged on the same seed");
+    }
+}
+
+#[test]
+fn fabric_differential_overlap_start_wait_all_gather_matches_blocking() {
+    // Satellite: the non-blocking submission path is the blocking path
+    // with the wait moved — same decoded tensor, same ledger, on every
+    // registered backend and every wire codec. Lossy codecs carry their
+    // noise inside the pre-encoded payloads, so they too must be
+    // bit-exact; AllGather never touches a caller rng on either path.
+    for topo in [Topology::new(2, 2), Topology::new(1, 3)] {
+        let n = 1037; // ragged shards
+        let full = rand_vec(n, 120);
+        for (cname, codec) in codec_zoo() {
+            let mut rng = Pcg64::seeded(121);
+            let shards: Vec<EncodedTensor> = (0..topo.world())
+                .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut rng))
+                .collect();
+            for (name, fabric) in fabrics(topo) {
+                let mut blocking_ledger = TrafficLedger::new();
+                let blocking = fabric.all_gather(&shards, &mut blocking_ledger);
+                let mut ledger = TrafficLedger::new();
+                let mut out = Vec::new();
+                fabric
+                    .start_all_gather(&shards, &mut out, &mut ledger)
+                    .wait()
+                    .unwrap_or_else(|e| panic!("{name}/{cname}: healthy wait failed: {e}"));
+                assert_eq!(out, blocking, "{name}: codec {cname} start+wait diverged");
+                assert_eq!(
+                    ledger, blocking_ledger,
+                    "{name}: codec {cname} start+wait ledger diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fabric_differential_overlap_start_wait_reduce_scatter_matches_blocking() {
+    // Same contract for ReduceScatter, with fresh same-seed rngs per
+    // path: `start_reduce_scatter` draws the per-call stochastic stream
+    // base at submit time in the same order the blocking call does, so
+    // even stochastic codecs reproduce the blocking result bit-for-bit.
+    for topo in [Topology::new(2, 2), Topology::new(1, 3)] {
+        let n = 997; // prime: ragged blocks everywhere
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|r| rand_vec(n, 130 + r as u64)).collect();
+        for (cname, codec) in codec_zoo() {
+            for (name, fabric) in fabrics(topo) {
+                let mut blocking_ledger = TrafficLedger::new();
+                let blocking = fabric.reduce_scatter(
+                    &inputs,
+                    codec.as_ref(),
+                    &mut Pcg64::seeded(131),
+                    &mut blocking_ledger,
+                );
+                let mut ledger = TrafficLedger::new();
+                let mut outs: Vec<Vec<f32>> = Vec::new();
+                let mut rng = Pcg64::seeded(131);
+                fabric
+                    .start_reduce_scatter(&inputs, codec.as_ref(), &mut rng, &mut outs, &mut ledger)
+                    .wait()
+                    .unwrap_or_else(|e| panic!("{name}/{cname}: healthy wait failed: {e}"));
+                assert_eq!(outs, blocking, "{name}: codec {cname} start+wait diverged");
+                assert_eq!(
+                    ledger, blocking_ledger,
+                    "{name}: codec {cname} start+wait ledger diverged"
+                );
+            }
+        }
     }
 }

@@ -90,6 +90,48 @@ fn fabric_failure_socket_worker_death_reports_rank_and_does_not_hang() {
 }
 
 #[test]
+fn fabric_failure_overlap_start_wait_reports_rank_without_hang() {
+    // The non-blocking path must surface the same per-rank diagnosis
+    // as the blocking panic — but through `wait()`'s `Err`, never a
+    // panic and never a hang. The failure stays sticky and clean
+    // through the same Result channel.
+    let topo = Topology::new(2, 2);
+    let fabric = AsyncFabric::new(topo);
+    let shards = fp32_shards(topo, 256);
+    let mut ledger = TrafficLedger::new();
+    let mut out = Vec::new();
+    fabric
+        .start_all_gather(&shards, &mut out, &mut ledger)
+        .wait()
+        .expect("healthy start+wait must succeed first");
+    assert_eq!(out.len(), 256);
+
+    fabric.fail_rank_for_test(2);
+
+    let mut l = TrafficLedger::new();
+    let mut out = Vec::new();
+    let err = fabric
+        .start_all_gather(&shards, &mut out, &mut l)
+        .wait()
+        .expect_err("start+wait over a dead rank must return Err, not hang");
+    let msg = err.to_string();
+    assert!(msg.contains("all_gather"), "error must name the collective: {msg}");
+    assert!(msg.contains("rank 2"), "error must name the dead rank: {msg}");
+
+    let mut l = TrafficLedger::new();
+    let mut out = Vec::new();
+    let err = fabric
+        .start_all_gather(&shards, &mut out, &mut l)
+        .wait()
+        .expect_err("a failed runtime must keep failing cleanly");
+    let msg = err.to_string();
+    assert!(msg.contains("worker not running"), "sticky failure diagnosis: {msg}");
+
+    // Drop must join survivors without hanging (harness would time out).
+    drop(fabric);
+}
+
+#[test]
 fn fabric_failure_world2_dead_peer_is_diagnosed() {
     // The smallest ring: with one of two ranks dead, the survivor's
     // exchange must fail (channel disconnect / TCP reset), not block.
