@@ -24,18 +24,25 @@
 //! is the pure submit/handle overhead the overlap scheduler pays), and
 //! `to_bytes` vs `to_bytes_into` / `from_bytes+decode` vs
 //! `view_bytes+decode` on the wire path (the allocation + copy the
-//! reusing/borrowing serializers remove). Environments without
-//! loopback TCP get a printed note and no socket rows.
+//! reusing/borrowing serializers remove), and `elastic` (the elastic
+//! fabric with the wire mirror forced on every call — its gap to
+//! `async-persistent` is the mirror + bitwise cross-check tax a rank
+//! pays for fault detection). Environments without loopback TCP get a
+//! printed note and no socket or elastic rows.
 
 use qsdp::collectives::{
-    AsyncFabric, Collective, FlatFabric, LockstepFabric, SocketFabric, TrafficLedger,
+    loopback_available, AsyncFabric, Collective, FlatFabric, LockstepFabric, SocketFabric,
+    TrafficLedger,
 };
+use qsdp::config::ElasticPeer;
 use qsdp::model::ParamKind;
 use qsdp::quant::{Codec, EncodedTensor, Fp32Codec, MinMaxCodec, QuantPolicy, TensorRole};
+use qsdp::runtime::elastic::{ElasticFabric, RendezvousServer};
 use qsdp::sim::{NetworkModel, Topology};
 use qsdp::util::args::Args;
 use qsdp::util::{table, Pcg64};
-use std::time::Instant;
+use std::net::{IpAddr, Ipv4Addr};
+use std::time::{Duration, Instant};
 
 /// Snapshot-grid geometry: world 4 (2 nodes x 2 GPUs), small tensors —
 /// the regime where per-call thread spawn/join dominates and the
@@ -240,7 +247,117 @@ fn snapshot_grid() -> Vec<BenchRow> {
             median_ns: med,
         });
     }
+    elastic_rows(&mut rows);
     rows
+}
+
+/// Elastic rows: a full wire ensemble — one thread per member of the
+/// snapshot world, rendezvoused over loopback — with the wire mirror
+/// forced on every call (`check_every = 1`). Rank 0's median is the
+/// honest per-call elastic cost: the inner channel collective plus a
+/// real-TCP mirror round plus the bitwise cross-check. Every member
+/// runs the identical call sequence (the wire blocks otherwise); only
+/// rank 0 reports.
+fn elastic_rows(rows: &mut Vec<BenchRow>) {
+    if !loopback_available() {
+        println!("note: loopback TCP unavailable; omitting elastic rows");
+        return;
+    }
+    let topo = Topology::new(SNAP_TOPO.0, SNAP_TOPO.1);
+    let world = topo.world();
+    let server = RendezvousServer::spawn(
+        IpAddr::V4(Ipv4Addr::LOCALHOST),
+        world,
+        Duration::from_secs(20),
+        Duration::from_secs(5),
+    )
+    .expect("rendezvous server");
+    let rdv = server.addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            std::thread::spawn(move || -> Vec<BenchRow> {
+                let peer = ElasticPeer {
+                    rank,
+                    rendezvous: rdv,
+                    stall_ms: 10_000,
+                    rendezvous_timeout_ms: 20_000,
+                    ckpt_step: 0,
+                };
+                let fabric = ElasticFabric::connect(topo, peer, IpAddr::V4(Ipv4Addr::LOCALHOST), 1)
+                    .expect("elastic connect");
+                let n = SNAP_N;
+                let mut full = vec![0.0f32; n];
+                Pcg64::seeded(SNAP_SEED).fill_normal(&mut full, 1.0);
+                let inputs: Vec<Vec<f32>> = (0..world)
+                    .map(|r| {
+                        let mut v = vec![0.0f32; n];
+                        Pcg64::seeded(100 + r as u64).fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect();
+                let codecs: [(&'static str, Box<dyn Codec>); 3] = [
+                    ("fp32", Box::new(Fp32Codec)),
+                    ("minmax8", Box::new(MinMaxCodec::new(8, 1024, true))),
+                    ("minmax4", Box::new(MinMaxCodec::new(4, 1024, true))),
+                ];
+                let mut out = Vec::new();
+                for (cname, codec) in &codecs {
+                    let mut enc_rng = Pcg64::seeded(7);
+                    let shards: Vec<EncodedTensor> = (0..world)
+                        .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut enc_rng))
+                        .collect();
+                    let mut ledger = TrafficLedger::new();
+                    for _ in 0..SNAP_WARMUP {
+                        ledger.reset();
+                        std::hint::black_box(fabric.all_gather(&shards, &mut ledger));
+                    }
+                    let med = median_ns(SNAP_REPS, || {
+                        ledger.reset();
+                        std::hint::black_box(fabric.all_gather(&shards, &mut ledger));
+                    });
+                    if rank == 0 {
+                        out.push(BenchRow {
+                            op: "all_gather",
+                            fabric: "elastic",
+                            codec: *cname,
+                            median_ns: med,
+                        });
+                    }
+                    let mut rs_rng = Pcg64::seeded(11);
+                    for _ in 0..SNAP_WARMUP {
+                        ledger.reset();
+                        std::hint::black_box(fabric.reduce_scatter(
+                            &inputs,
+                            codec.as_ref(),
+                            &mut rs_rng,
+                            &mut ledger,
+                        ));
+                    }
+                    let med = median_ns(SNAP_REPS, || {
+                        ledger.reset();
+                        std::hint::black_box(fabric.reduce_scatter(
+                            &inputs,
+                            codec.as_ref(),
+                            &mut rs_rng,
+                            &mut ledger,
+                        ));
+                    });
+                    if rank == 0 {
+                        out.push(BenchRow {
+                            op: "reduce_scatter",
+                            fabric: "elastic",
+                            codec: *cname,
+                            median_ns: med,
+                        });
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+    for h in handles {
+        rows.extend(h.join().expect("elastic bench member"));
+    }
 }
 
 fn find_ns(rows: &[BenchRow], op: &str, fabric: &str, codec: &str) -> Option<f64> {
@@ -293,6 +410,19 @@ fn print_snapshot(rows: &[BenchRow]) {
                 a,
                 t,
                 t / a
+            );
+        }
+        // Elastic mirror tax: the inner channel collective plus a real
+        // TCP mirror round plus the bitwise cross-check, every call.
+        if let (Some(a), Some(e)) = (
+            find_ns(rows, "all_gather", "async-persistent", codec),
+            find_ns(rows, "all_gather", "elastic", codec),
+        ) {
+            println!(
+                "all_gather {codec:8}: channels   {:9.0} ns vs elastic mirror {:9.0} ns -> {:.1}x mirror tax",
+                a,
+                e,
+                e / a
             );
         }
         // Submission-path tax: non-blocking start + immediate wait vs

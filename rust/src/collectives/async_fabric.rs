@@ -179,6 +179,18 @@ fn channel_links(p: usize) -> Vec<ChannelLink> {
     rxs.into_iter().zip(next_txs).map(|(rx, tx)| ChannelLink { tx, rx }).collect()
 }
 
+/// Spawn a persistent [`FabricRuntime`] over in-process channel links —
+/// the execution substrate behind the persistent async mode, exposed
+/// crate-wide so the elastic fabric can host its replicated inner ring
+/// on the same runtime. Requires `topo.world() > 1`.
+pub(crate) fn spawn_channel_runtime(topo: Topology) -> FabricRuntime {
+    let links = channel_links(topo.world())
+        .into_iter()
+        .map(|l| Box::new(l) as Box<dyn RingTransport>)
+        .collect();
+    FabricRuntime::spawn(topo, links)
+}
+
 /// Gather epilogue for the spawn-per-call mode: rank 0 (and, on
 /// cross-check calls, every rank) materializes its concatenated
 /// result; the rest return nothing.
@@ -259,13 +271,7 @@ impl AsyncFabric {
     /// `check_every` the release-build gather cross-check sampling
     /// period (every Nth call; 0 = never — debug builds always check).
     pub fn with_options(topo: Topology, persistent: bool, check_every: u64) -> Self {
-        let runtime = (persistent && topo.world() > 1).then(|| {
-            let links = channel_links(topo.world())
-                .into_iter()
-                .map(|l| Box::new(l) as Box<dyn RingTransport>)
-                .collect();
-            FabricRuntime::spawn(topo, links)
-        });
+        let runtime = (persistent && topo.world() > 1).then(|| spawn_channel_runtime(topo));
         AsyncFabric { topo, check_every, calls: Cell::new(0), persistent, runtime }
     }
 

@@ -17,8 +17,9 @@
 //! byte-exact accounting into a [`TrafficLedger`]) and reuse one
 //! scratch [`EncodedTensor`] + decode buffer per call — the hot loop
 //! allocates nothing per message. The message-passing backends —
-//! [`super::AsyncFabric`] (real threads + byte channels) and
-//! [`super::SocketFabric`] (real threads + localhost TCP) — live in
+//! [`super::AsyncFabric`] (real threads + byte channels),
+//! [`super::SocketFabric`] (real threads + localhost TCP) and the
+//! multi-process [`crate::runtime::elastic::ElasticFabric`] — live in
 //! their own modules and run the same trait over a shared ring
 //! runtime.
 
@@ -210,7 +211,9 @@ pub trait Collective {
 }
 
 /// Check and return the common input length of a reduce-scatter call.
-pub(super) fn check_inputs(topo: &Topology, inputs: &[Vec<f32>]) -> usize {
+/// Crate-visible: the elastic fabric (`runtime::elastic`) validates its
+/// inputs with the same contract as the in-process backends.
+pub(crate) fn check_inputs(topo: &Topology, inputs: &[Vec<f32>]) -> usize {
     assert_eq!(inputs.len(), topo.world(), "one input per rank");
     let n_elems = inputs[0].len();
     for i in inputs {

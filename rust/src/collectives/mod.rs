@@ -1,5 +1,5 @@
 //! Quantized collectives behind the pluggable [`Collective`] transport
-//! trait — a four-backend registry.
+//! trait — a five-backend registry.
 //!
 //! A backend is a *value* implementing [`Collective`]
 //! (`all_gather` / `reduce_scatter` / `all_reduce`): construct the one
@@ -24,8 +24,8 @@
 //! flight at a time, and dropping an unwaited handle still drains the
 //! runtime safely.
 //!
-//! Registered backends (`--fabric lockstep|flat|async|socket`, see
-//! [`crate::config::FabricKind`]):
+//! Registered backends (`--fabric lockstep|flat|async|socket|elastic`,
+//! see [`crate::config::FabricKind`]):
 //!
 //! * [`LockstepFabric`] — the paper's hierarchical two-level NCCL-P2P
 //!   scheme (§5.1): an intra-node phase over NVLink and an inter-node
@@ -49,15 +49,23 @@
 //!   worker-thread panic or a hang. Construction is fallible (some
 //!   sandboxes forbid loopback TCP); [`loopback_available`] is the
 //!   standard probe for a loud, logged skip.
+//! * [`crate::runtime::elastic::ElasticFabric`] — the **multi-process**
+//!   deployment shape: one OS process per rank under the `qsdp launch`
+//!   supervisor, a rendezvous-assigned epoch membership, and a real-TCP
+//!   wire ring that cross-checks the replicated ranks against each
+//!   other. Unlike the in-process backends it cannot be constructed
+//!   hermetically (it needs a rendezvous endpoint), so it is *not* part
+//!   of `FabricKind::ALL` sweeps; see `runtime::elastic` for the epoch
+//!   protocol, fault recovery and degraded-ring semantics.
 //!
 //! The ring schedules, per-rank scratch pools, command protocol,
-//! failure cascade and shutdown-on-drop lifecycle shared by the two
-//! message-passing backends live in the private `ring` module behind
-//! its `RingTransport` trait — `AsyncFabric` supplies a channel
-//! transport, `SocketFabric` a TCP one, and everything the
-//! differential harness pins is common code.
+//! failure cascade and shutdown-on-drop lifecycle shared by the
+//! message-passing backends live in the crate-private `ring` module
+//! behind its `RingTransport` trait — `AsyncFabric` supplies a channel
+//! transport, `SocketFabric` a TCP one, the elastic fabric reuses both,
+//! and everything the differential harness pins is common code.
 //!
-//! All four backends produce the same decoded values for lossless
+//! All backends produce the same decoded values for lossless
 //! codecs (the cross-backend differential harness in
 //! `tests/fabric_differential.rs` pins FP32 agreement bit-for-bit,
 //! bounds the lossy codecs by their own resolution, and pins that
@@ -73,7 +81,7 @@
 pub mod async_fabric;
 pub mod fabric;
 pub mod ledger;
-mod ring;
+pub(crate) mod ring;
 pub mod socket_fabric;
 
 pub use async_fabric::AsyncFabric;

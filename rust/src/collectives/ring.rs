@@ -102,8 +102,15 @@ impl RingError {
 
     /// Human diagnosis naming the peer rank behind the failing link.
     pub(crate) fn describe(&self, rank: usize, world: usize) -> String {
-        let next = (rank + 1) % world;
-        let prev = (rank + world - 1) % world;
+        self.describe_peers((rank + 1) % world, (rank + world - 1) % world)
+    }
+
+    /// Like [`Self::describe`], but with the peer ranks given
+    /// explicitly — for rings whose members are not the contiguous
+    /// `0..world` set (the elastic fabric's degraded wire ring routes
+    /// around lost ranks, so a member's neighbors are the surviving
+    /// ranks, not `rank ± 1`).
+    pub(crate) fn describe_peers(&self, next: usize, prev: usize) -> String {
         match self.fault {
             RingFault::SuccessorGone => format!(
                 "link to ring successor rank {next} failed at step {}: {}",

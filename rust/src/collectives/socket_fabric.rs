@@ -106,6 +106,48 @@ pub(crate) struct SocketLink {
     out: TcpStream,
     inp: TcpStream,
     in_buf: Vec<u8>,
+    /// Per-link stall backstop: if neither direction progresses for
+    /// this long the hop fails. The in-process fabric keeps the
+    /// generous [`STALL_LIMIT`]; the elastic fabric sets a short limit
+    /// so survivors of a dead peer fault within the recovery window
+    /// instead of a minute later.
+    stall: Duration,
+}
+
+impl SocketLink {
+    /// A link with the default (generous) stall backstop. Streams must
+    /// already be non-blocking.
+    pub(crate) fn new(out: TcpStream, inp: TcpStream) -> Self {
+        Self::with_stall(out, inp, STALL_LIMIT)
+    }
+
+    /// A link with an explicit stall backstop (the elastic fabric's
+    /// failure-detection knob).
+    pub(crate) fn with_stall(out: TcpStream, inp: TcpStream, stall: Duration) -> Self {
+        SocketLink { out, inp, in_buf: Vec::new(), stall }
+    }
+}
+
+/// Build one directed ring link for the elastic fabric: connect to the
+/// successor's listener, accept the predecessor's connection on our
+/// own (already-bound) listener, and configure both streams. The
+/// caller advertised `listener`'s address through the rendezvous, so
+/// every member runs this concurrently and the connects complete
+/// against the listen backlogs.
+pub(crate) fn elastic_link(
+    listener: &TcpListener,
+    successor: SocketAddr,
+    stall: Duration,
+) -> Result<SocketLink> {
+    let out = TcpStream::connect_timeout(&successor, CONNECT_TIMEOUT)
+        .with_context(|| format!("elastic wire: connect to ring successor at {successor}"))?;
+    let inp = accept_with_deadline(listener, CONNECT_TIMEOUT)
+        .context("elastic wire: accept from ring predecessor")?;
+    for s in [&out, &inp] {
+        s.set_nodelay(true).context("elastic wire: set_nodelay")?;
+        s.set_nonblocking(true).context("elastic wire: set_nonblocking")?;
+    }
+    Ok(SocketLink::with_stall(out, inp, stall))
 }
 
 /// Write as much of `[header][payload]` as the kernel will take
@@ -249,10 +291,10 @@ impl RingTransport for SocketLink {
                 last_progress = Instant::now();
                 idle_spins = 0;
             } else {
-                if last_progress.elapsed() > STALL_LIMIT {
+                if last_progress.elapsed() > self.stall {
                     return Err(RingError::stalled(format!(
-                        "no progress for {}s (sent {out_pos}/{out_total} bytes)",
-                        STALL_LIMIT.as_secs()
+                        "no progress for {:.1}s (sent {out_pos}/{out_total} bytes)",
+                        self.stall.as_secs_f64()
                     )));
                 }
                 // Spin briefly (a peer mid-hop answers in microseconds),
@@ -309,8 +351,20 @@ fn ring_links(addr: IpAddr, base_port: u16, p: usize) -> Result<Vec<SocketLink>>
                 format!("socket fabric: base port {base_port} + rank {r} overflows u16")
             })?
         };
-        let l = TcpListener::bind(SocketAddr::new(addr, port))
-            .with_context(|| format!("socket fabric: bind rank-{r} listener on {addr}:{port}"))?;
+        let l = TcpListener::bind(SocketAddr::new(addr, port)).map_err(|e| {
+            // A configured port that some other process already holds
+            // used to surface as an opaque connect-timeout on a peer;
+            // name the real cause instead.
+            if e.kind() == ErrorKind::AddrInUse && port != 0 {
+                anyhow::anyhow!(
+                    "socket fabric: rank-{r} port {addr}:{port} is already bound by another \
+                     process — pick a different --fabric-port range, or 0 for ephemeral ports"
+                )
+            } else {
+                anyhow::Error::new(e)
+                    .context(format!("socket fabric: bind rank-{r} listener on {addr}:{port}"))
+            }
+        })?;
         listeners.push(l);
     }
     let mut addrs = Vec::with_capacity(p);
@@ -339,7 +393,7 @@ fn ring_links(addr: IpAddr, base_port: u16, p: usize) -> Result<Vec<SocketLink>>
             s.set_nodelay(true).context("socket fabric: set_nodelay")?;
             s.set_nonblocking(true).context("socket fabric: set_nonblocking")?;
         }
-        links.push(SocketLink { out, inp, in_buf: Vec::new() });
+        links.push(SocketLink::new(out, inp));
     }
     Ok(links)
 }
@@ -578,7 +632,7 @@ mod tests {
         let (out, sink) = tcp_pair()?;
         inp.set_nonblocking(true)?;
         out.set_nonblocking(true)?;
-        Ok((SocketLink { out, inp, in_buf: Vec::new() }, writer, sink))
+        Ok((SocketLink::new(out, inp), writer, sink))
     }
 
     #[test]
@@ -699,8 +753,8 @@ mod tests {
         for s in [&a_out, &a_inp, &b_out, &b_inp] {
             s.set_nonblocking(true).unwrap();
         }
-        let mut a = SocketLink { out: a_out, inp: a_inp, in_buf: Vec::new() };
-        let mut b = SocketLink { out: b_out, inp: b_inp, in_buf: Vec::new() };
+        let mut a = SocketLink::new(a_out, a_inp);
+        let mut b = SocketLink::new(b_out, b_inp);
         // Frames big enough to overflow any default socket buffer:
         // passes only because exchange is full-duplex.
         let a_frame = vec![0xAAu8; 8 << 20];
@@ -751,5 +805,28 @@ mod tests {
             .expect("healthy ring");
         assert_eq!(rn, rb, "start/wait reduce_scatter diverged from blocking");
         assert_eq!(ln, lb, "ledgers diverged across submission modes");
+    }
+
+    #[test]
+    fn socket_configured_port_collision_reports_already_bound() {
+        if skip_no_loopback() {
+            return;
+        }
+        // Occupy a port, then ask the fabric to pin its rank-0 listener
+        // to it: construction must fail naming the real cause (the
+        // port is taken), not time out connecting to a peer.
+        let squatter = TcpListener::bind((Ipv4Addr::LOCALHOST, 0)).unwrap();
+        let port = squatter.local_addr().unwrap().port();
+        let err = SocketFabric::with_options(
+            Topology::new(2, 1),
+            IpAddr::V4(Ipv4Addr::LOCALHOST),
+            port,
+            DEFAULT_CHECK_EVERY,
+        )
+        .expect_err("binding an occupied configured port must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("already bound"), "must name the collision: {msg}");
+        assert!(msg.contains(&port.to_string()), "must name the port: {msg}");
+        drop(squatter);
     }
 }

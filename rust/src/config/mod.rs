@@ -15,12 +15,16 @@
 //!   suffix "+det"         — deterministic (round-to-nearest) gradients
 //!
 //! The collective transport is likewise data: `--fabric
-//! lockstep|flat|async|socket` selects the
+//! lockstep|flat|async|socket|elastic` selects the
 //! [`crate::collectives::Collective`] backend the trainer wires into
 //! its parameter store (`async` is the threaded ring backend over byte
 //! channels, [`crate::collectives::AsyncFabric`]; `socket` is the same
 //! ring over real localhost TCP,
-//! [`crate::collectives::SocketFabric`]). [`FabricOptions`] carries
+//! [`crate::collectives::SocketFabric`]; `elastic` is the
+//! multi-process fabric behind `qsdp launch` — it needs a rendezvous
+//! endpoint carried in [`FabricOptions::elastic`], so it is excluded
+//! from [`FabricKind::ALL`] sweeps, which must build hermetically).
+//! [`FabricOptions`] carries
 //! the runtime knobs: `--fabric-persistent true|false` (async only;
 //! default true: spawn the per-rank worker threads once, at fabric
 //! construction, instead of per call), `--fabric-check-every N`
@@ -39,11 +43,12 @@
 use crate::collectives::{AsyncFabric, Collective, FlatFabric, LockstepFabric, SocketFabric};
 use crate::optim::AdamW;
 use crate::quant::QuantPolicy;
+use crate::runtime::elastic::ElasticFabric;
 use crate::runtime::gpt::StepVariant;
 use crate::sim::Topology;
 use crate::util::args::Args;
 use anyhow::{bail, Result};
-use std::net::{IpAddr, Ipv4Addr};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr};
 
 /// Which [`Collective`] transport backend a run uses.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -59,11 +64,19 @@ pub enum FabricKind {
     /// Threaded ring backend over real localhost TCP sockets with
     /// length-prefixed framing ([`SocketFabric`]).
     Socket,
+    /// Multi-process elastic fabric: one OS process per rank under the
+    /// `qsdp launch` supervisor, with epoch membership and fault
+    /// recovery ([`ElasticFabric`]).
+    Elastic,
 }
 
 impl FabricKind {
-    /// Every registered backend, in registry order — what the
-    /// cross-fabric differential harness sweeps.
+    /// Every *hermetically constructible* backend, in registry order —
+    /// what the cross-fabric differential harness sweeps. The elastic
+    /// backend is deliberately absent: it cannot be built from a
+    /// `Topology` alone (it needs a live rendezvous endpoint and a
+    /// rank identity), so sweeps that call `try_build` would always
+    /// fail on it.
     pub const ALL: [FabricKind; 4] =
         [FabricKind::Lockstep, FabricKind::Flat, FabricKind::Async, FabricKind::Socket];
 
@@ -73,7 +86,8 @@ impl FabricKind {
             "flat" => FabricKind::Flat,
             "async" | "ring" => FabricKind::Async,
             "socket" | "tcp" => FabricKind::Socket,
-            other => bail!("unknown fabric {other:?} (want lockstep|flat|async|socket)"),
+            "elastic" => FabricKind::Elastic,
+            other => bail!("unknown fabric {other:?} (want lockstep|flat|async|socket|elastic)"),
         })
     }
 
@@ -83,6 +97,7 @@ impl FabricKind {
             FabricKind::Flat => "flat",
             FabricKind::Async => "async",
             FabricKind::Socket => "socket",
+            FabricKind::Elastic => "elastic",
         }
     }
 
@@ -92,7 +107,7 @@ impl FabricKind {
     /// ([`crate::sim::NetworkModel::ring_time`]) because their
     /// transfers genuinely overlap across links.
     pub fn is_ring(self) -> bool {
-        matches!(self, FabricKind::Async | FabricKind::Socket)
+        matches!(self, FabricKind::Async | FabricKind::Socket | FabricKind::Elastic)
     }
 
     /// Construct the backend for a cluster with default options,
@@ -119,6 +134,15 @@ impl FabricKind {
                 opts.socket_base_port,
                 opts.check_every,
             )?),
+            FabricKind::Elastic => {
+                let peer = opts.elastic.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "the elastic fabric needs a rendezvous endpoint — run the job through \
+                         `qsdp launch`, or pass --rank/--world/--rendezvous for a standalone rank"
+                    )
+                })?;
+                Box::new(ElasticFabric::connect(topo, peer, opts.socket_addr, opts.check_every)?)
+            }
         })
     }
 
@@ -157,6 +181,12 @@ pub struct FabricOptions {
     /// `socket_base_port + r`; 0 = kernel-assigned ephemeral ports
     /// (`--fabric-port`, default 0).
     pub socket_base_port: u16,
+    /// The elastic backend's per-rank identity and rendezvous
+    /// endpoint; `None` (the default) for every in-process backend.
+    /// Set programmatically by the elastic worker driver (the flags
+    /// `--rank`/`--rendezvous` arrive through `runtime::elastic`, not
+    /// through `RunConfig::from_args`).
+    pub elastic: Option<ElasticPeer>,
 }
 
 impl Default for FabricOptions {
@@ -166,8 +196,32 @@ impl Default for FabricOptions {
             check_every: crate::collectives::async_fabric::DEFAULT_CHECK_EVERY,
             socket_addr: IpAddr::V4(Ipv4Addr::LOCALHOST),
             socket_base_port: 0,
+            elastic: None,
         }
     }
+}
+
+/// One elastic rank's identity: who we are, where the rendezvous
+/// lives, and the failure-detection/recovery timing knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElasticPeer {
+    /// This process's training rank in `0..world`.
+    pub rank: usize,
+    /// The rendezvous service (the `launch` supervisor's
+    /// `RendezvousServer`, `--rendezvous` / `QSDP_RENDEZVOUS`).
+    pub rendezvous: SocketAddr,
+    /// Wire-ring stall limit in milliseconds: a peer silent for this
+    /// long faults the collective and triggers recovery
+    /// (`--stall-ms`).
+    pub stall_ms: u64,
+    /// How long to wait for the rendezvous to hand out an epoch before
+    /// giving up (`--rendezvous-timeout-ms`). Must exceed the
+    /// supervisor's restart backoff for re-admission to work.
+    pub rendezvous_timeout_ms: u64,
+    /// The newest checkpoint step this process can restore from —
+    /// offered at every rendezvous so the round's `restore_step` is
+    /// the minimum over members.
+    pub ckpt_step: u64,
 }
 
 /// A fully-specified training job.
@@ -247,6 +301,7 @@ impl RunConfig {
                 socket_base_port: u16::try_from(args.u64_or("fabric-port", 0)).map_err(|_| {
                     anyhow::anyhow!("--fabric-port expects a port number below 65536")
                 })?,
+                elastic: None,
             },
         })
     }
@@ -463,6 +518,23 @@ mod tests {
         let fabric = c.fabric.build_with(c.topo, c.fabric_opts);
         assert_eq!(fabric.name(), "async");
         assert_eq!(fabric.topo(), c.topo);
+    }
+
+    #[test]
+    fn elastic_fabric_kind_parses_but_needs_a_rendezvous() {
+        assert_eq!(FabricKind::parse("elastic").unwrap(), FabricKind::Elastic);
+        assert_eq!(FabricKind::Elastic.name(), "elastic");
+        assert!(FabricKind::Elastic.is_ring(), "elastic uses the ring contention clock");
+        // Deliberately not in ALL: the differential sweeps build every
+        // entry hermetically, and elastic needs a live rendezvous.
+        assert!(!FabricKind::ALL.contains(&FabricKind::Elastic));
+        let err = FabricKind::Elastic
+            .try_build(Topology::new(2, 1))
+            .expect_err("building without a rendezvous endpoint must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rendezvous"), "error must say what is missing: {msg}");
+        // and the default options carry no peer identity
+        assert_eq!(FabricOptions::default().elastic, None);
     }
 
     #[test]

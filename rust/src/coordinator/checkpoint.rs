@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"QSDPCKPT";
 const VERSION: u32 = 1;
@@ -110,6 +110,68 @@ impl Checkpoint {
         }
         Ok(Checkpoint { step, names, params, adam_m, adam_v })
     }
+
+    /// Atomic save: write to `<path>.tmp` in the same directory, then
+    /// rename over `path`. A worker killed mid-write leaves either the
+    /// previous checkpoint or none — never a truncated file a
+    /// recovering rank would choke on.
+    pub fn save_atomic(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        self.save(&tmp)?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+}
+
+/// `step{t:08}.ckpt` under `dir`: the per-rank step-checkpoint naming
+/// the elastic worker uses (fixed width, so lexicographic order equals
+/// numeric order).
+pub fn step_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("step{step:08}.ckpt"))
+}
+
+/// Checkpoint steps present in `dir`, ascending. A missing directory
+/// is an empty list, not an error (a fresh rank simply has none yet).
+pub fn list_steps(dir: &Path) -> Vec<u64> {
+    let mut steps = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return steps;
+    };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stem = name.strip_prefix("step").and_then(|s| s.strip_suffix(".ckpt"));
+        if let Some(t) = stem.and_then(|s| s.parse::<u64>().ok()) {
+            steps.push(t);
+        }
+    }
+    steps.sort_unstable();
+    steps
+}
+
+/// The newest checkpoint step in `dir`, if any — what a restarted rank
+/// offers the rendezvous as its `ckpt_step`.
+pub fn latest_step(dir: &Path) -> Option<u64> {
+    list_steps(dir).pop()
+}
+
+/// Retention: keep the newest `keep` step checkpoints plus step 0 (the
+/// recovery floor — a rejoining rank can always fall back to it),
+/// delete the rest.
+pub fn prune_steps(dir: &Path, keep: usize) -> Result<()> {
+    let steps = list_steps(dir);
+    if steps.len() <= keep {
+        return Ok(());
+    }
+    for &t in &steps[..steps.len() - keep] {
+        if t == 0 {
+            continue;
+        }
+        std::fs::remove_file(step_path(dir, t))
+            .with_context(|| format!("pruning checkpoint step {t}"))?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -140,6 +202,25 @@ mod tests {
         let p = std::env::temp_dir().join("qsdp_ckpt_garbage.bin");
         std::fs::write(&p, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn step_files_list_latest_and_prune() {
+        let dir = std::env::temp_dir().join("qsdp_ckpt_steps_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        for t in [0u64, 2, 4, 6, 8] {
+            let mut ck = sample();
+            ck.step = t;
+            ck.save_atomic(&step_path(&dir, t)).unwrap();
+        }
+        assert_eq!(list_steps(&dir), vec![0, 2, 4, 6, 8]);
+        assert_eq!(latest_step(&dir), Some(8));
+        prune_steps(&dir, 2).unwrap();
+        assert_eq!(list_steps(&dir), vec![0, 6, 8], "newest two plus the step-0 floor");
+        let back = Checkpoint::load(&step_path(&dir, 8)).unwrap();
+        assert_eq!(back.step, 8, "pruning must not touch survivors");
+        let missing = std::env::temp_dir().join("qsdp_ckpt_steps_missing");
+        assert_eq!(latest_step(&missing), None, "missing dir is empty, not an error");
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collectives::TrafficLedger;
+use crate::collectives::{Collective, TrafficLedger};
 use crate::config::RunConfig;
 use crate::data::{MarkovCorpus, Sampler};
 use crate::fsdp::ShardedStore;
@@ -63,9 +63,6 @@ impl Trainer {
     /// Build a trainer: load artifacts, init params via the exported
     /// initializer, shard them, set up data and optimizer state.
     pub fn new(engine: Arc<Engine>, root: &Path, cfg: RunConfig, opts: TrainerOptions) -> Result<Self> {
-        let rt = GptRuntime::load(engine, root, &cfg.model, cfg.variant)?;
-        let dims = rt.manifest.dims.clone();
-        let full = rt.init_params(cfg.seed as u32)?;
         // The fabric is constructed exactly once per run (a persistent
         // async/socket fabric spawns its rank workers — and, for
         // sockets, opens its TCP ring — here) and reused across every
@@ -76,6 +73,25 @@ impl Trainer {
             .fabric
             .try_build_with(cfg.topo, cfg.fabric_opts)
             .context("constructing the collective fabric")?;
+        Self::with_fabric(engine, root, cfg, opts, fabric)
+    }
+
+    /// Build a trainer around an externally constructed fabric. The
+    /// elastic worker driver goes through here: it keeps a control
+    /// handle to its [`crate::runtime::elastic::ElasticFabric`] and
+    /// mints a fresh fabric value per trainer rebuild after recovery,
+    /// so the live wire (and its epoch state) survives the rebuild.
+    /// Everything else should use [`Trainer::new`].
+    pub fn with_fabric(
+        engine: Arc<Engine>,
+        root: &Path,
+        cfg: RunConfig,
+        opts: TrainerOptions,
+        fabric: Box<dyn Collective>,
+    ) -> Result<Self> {
+        let rt = GptRuntime::load(engine, root, &cfg.model, cfg.variant)?;
+        let dims = rt.manifest.dims.clone();
+        let full = rt.init_params(cfg.seed as u32)?;
         let store = ShardedStore::from_full(rt.manifest.params.clone(), &full, cfg.topo)
             .with_fabric(fabric);
         let world = cfg.topo.world();

@@ -17,6 +17,12 @@ use anyhow::Result;
 
 /// `qsdp train` — run one training job and summarize.
 pub fn cmd_train(args: &Args) -> Result<()> {
+    // Standalone elastic rank mode: `qsdp launch` workers (or a
+    // hand-started rank) carry `--rank`/`QSDP_RANK` and run the
+    // fault-tolerant driver instead of the one-process job.
+    if let Some(ctx) = crate::runtime::elastic::WorkerContext::detect(args)? {
+        return crate::runtime::elastic::run_train_worker(&ctx, args);
+    }
     let cfg = crate::config::RunConfig::from_args(args)?;
     let log = traindrv::run_job(&cfg, args.u64_or("log-every", 10))?;
     let name = crate::config::policy_name(&cfg.policy);

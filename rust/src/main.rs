@@ -2,6 +2,8 @@
 //!
 //! Subcommands map 1:1 to the paper's experiments (DESIGN.md §5):
 //!   train      — run one training job (FSDP baseline or QSDP)
+//!   launch     — supervise P worker processes over the elastic fabric
+//!   smoke      — elastic smoke job / its in-process reference digest
 //!   table1..6  — regenerate the paper's tables
 //!   figure3/4/6/7 — regenerate the paper's figures
 //!   theory     — Theorem 2 / Corollary 3 convergence validation
@@ -18,6 +20,9 @@ fn usage() -> ! {
          train     --config tiny --policy w8g8|baseline|exact --steps N --workers P\n            \
          --fabric lockstep|flat|async|socket [--fabric-addr IP] [--fabric-port N]\n            \
          [--overlap]  (pipeline collectives; comm/compute overlap clock)\n  \
+         launch    --world P [--nodes N --gpus-per-node G] [--max-restarts K]\n            \
+         [--ckpt-dir DIR --ckpt-every K] <train|smoke>  (elastic multi-process run)\n  \
+         smoke     [--world P --iters N --seed S]  (reference digest; worker mode via --rank)\n  \
          table1 | table2 | table3 | table5 | table6\n  \
          figure3 | figure4 | figure6 | figure7\n  \
          theory    [--dim N] [--kappa K]\n  \
@@ -33,6 +38,8 @@ fn main() -> anyhow::Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "train" => experiments::cmd_train(&args),
+        "launch" => qsdp::runtime::elastic::cmd_launch(&args),
+        "smoke" => qsdp::runtime::elastic::cmd_smoke(&args),
         "table1" => experiments::table1(&args),
         "table2" => experiments::table2(&args),
         "table3" => experiments::table3(&args),

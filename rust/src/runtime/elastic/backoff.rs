@@ -1,0 +1,81 @@
+//! Capped exponential backoff for worker restarts.
+//!
+//! The `launch` supervisor restarts a dead rank, but a worker that
+//! dies instantly (bad flags, port squatted, OOM loop) must not be
+//! respawned in a tight loop: each consecutive failure doubles the
+//! delay before the next attempt, up to a cap. A successful stretch
+//! resets the schedule via [`Backoff::reset`].
+
+use std::time::Duration;
+
+/// Deterministic capped exponential backoff: attempt `k` waits
+/// `min(cap, base * 2^k)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration) -> Self {
+        Backoff { base, cap, attempt: 0 }
+    }
+
+    /// The delay before the next attempt; advances the schedule.
+    pub fn next_delay(&mut self) -> Duration {
+        // Clamp the shift so the multiplier cannot overflow u32 — the
+        // cap has long since taken over by then anyway.
+        let factor = 1u32 << self.attempt.min(20);
+        let delay = self.base.saturating_mul(factor).min(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        delay
+    }
+
+    /// Failures so far (restart attempts already scheduled).
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Back to the initial delay (the worker ran healthily for a
+    /// while, so the next failure is treated as fresh).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elastic_backoff_doubles_then_caps() {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(2));
+        assert_eq!(b.next_delay(), Duration::from_millis(100));
+        assert_eq!(b.next_delay(), Duration::from_millis(200));
+        assert_eq!(b.next_delay(), Duration::from_millis(400));
+        assert_eq!(b.next_delay(), Duration::from_millis(800));
+        assert_eq!(b.next_delay(), Duration::from_millis(1600));
+        assert_eq!(b.next_delay(), Duration::from_secs(2), "capped");
+        assert_eq!(b.next_delay(), Duration::from_secs(2), "stays capped");
+        assert_eq!(b.attempt(), 7);
+    }
+
+    #[test]
+    fn elastic_backoff_reset_restarts_schedule() {
+        let mut b = Backoff::new(Duration::from_millis(50), Duration::from_secs(1));
+        b.next_delay();
+        b.next_delay();
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        assert_eq!(b.next_delay(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn elastic_backoff_huge_attempt_count_does_not_overflow() {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(5));
+        for _ in 0..100 {
+            assert!(b.next_delay() <= Duration::from_secs(5));
+        }
+    }
+}

@@ -1,0 +1,640 @@
+//! [`ElasticFabric`]: the multi-process [`Collective`] backend behind
+//! `qsdp launch`.
+//!
+//! Every in-process backend holds all P ranks inside one address
+//! space. The elastic fabric is the deployment shape where each rank
+//! is its **own OS process**: P copies of this binary, each running
+//! the full replicated trainer, cross-validating each other over a
+//! real-TCP wire ring whose membership is an epoch handed out by the
+//! rendezvous (see [`super::membership`]).
+//!
+//! # Execution model: replicated compute, wire cross-check
+//!
+//! Each process computes every collective **locally** on a persistent
+//! channel-link ring runtime (the exact engine behind
+//! [`crate::collectives::AsyncFabric`]) — that is what makes the loss
+//! trajectory bitwise identical to an in-process `--fabric socket`
+//! run, and what lets survivors keep training at full logical world
+//! size when a peer dies (the replicated state reconstructs the lost
+//! rank's shard). On top of that, every collective runs one **wire
+//! round**: the process ships its own rank's block around a compact
+//! TCP ring of the current epoch's members and bit-compares each
+//! received block against its local replica. The wire round is how a
+//! dead or diverged peer is *detected*:
+//!
+//! * a member that dies closes its sockets → every survivor's wire
+//!   exchange fails (EOF/RST, or the short elastic stall limit) within
+//!   one collective;
+//! * a member whose local replica disagrees bit-for-bit with the bytes
+//!   on the wire drops its link, which cascades the same way.
+//!
+//! A wire fault never panics and never corrupts the collective's
+//! result (the local result is authoritative); it is latched into the
+//! fabric and surfaced through [`ElasticHandle::take_fault`]. The
+//! driver then calls [`ElasticHandle::recover`]: re-rendezvous for a
+//! new epoch (re-admitting a restarted rank, or forming a **degraded**
+//! ring that routes around a lost one), roll back to the epoch's
+//! common checkpoint step, and continue.
+//!
+//! Wire-mirror traffic is deliberately kept out of the caller's
+//! [`TrafficLedger`] (it is a deployment-shape cross-check, not part
+//! of the simulated algorithm — folding it in would change the
+//! simulated seconds vs a socket run); it accumulates in a separate
+//! ledger exposed via [`ElasticHandle::wire_traffic`].
+//!
+//! The non-blocking `start_*` API intentionally keeps the trait's
+//! eager defaults: the wire round must complete before the caller may
+//! observe the result, so there is nothing to overlap against.
+
+use super::membership::{rendezvous, RingMembership};
+use crate::collectives::async_fabric::spawn_channel_runtime;
+use crate::collectives::fabric::{check_inputs, Collective};
+use crate::collectives::ledger::TrafficLedger;
+use crate::collectives::ring::{
+    ag_rank, runtime_all_gather_into, runtime_all_reduce, runtime_reduce_scatter,
+    world1_reduce_scatter, FabricRuntime, RankScratch,
+};
+use crate::collectives::socket_fabric::{elastic_link, SocketLink};
+use crate::config::ElasticPeer;
+use crate::quant::{Codec, EncodedTensor};
+use crate::sim::Topology;
+use crate::util::Pcg64;
+use anyhow::{ensure, Context, Result};
+use std::net::{IpAddr, SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock that tolerates a poisoned mutex: a panicking collective on
+/// some other thread must not turn every subsequent fault query into
+/// a second panic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// What [`ElasticHandle::recover`] agreed on: the new epoch, the
+/// checkpoint step every member rolls back to, and who is present.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    pub epoch: u64,
+    pub restore_step: u64,
+    /// Fewer members than the logical world: the wire ring routes
+    /// around the missing ranks.
+    pub degraded: bool,
+    /// Member ranks, sorted.
+    pub members: Vec<usize>,
+}
+
+/// The wire side of the fabric: current epoch membership, the live
+/// ring link (if any), and the scratch + accounting for wire rounds.
+struct WireState {
+    membership: RingMembership,
+    /// `None` below two members, or after a fault dropped the link
+    /// (closing our sockets is what cascades the fault to peers).
+    link: Option<SocketLink>,
+    scratch: RankScratch,
+    ledger: TrafficLedger,
+}
+
+/// Shared state behind both [`ElasticFabric`] and [`ElasticHandle`].
+struct ElasticCore {
+    topo: Topology,
+    peer: ElasticPeer,
+    bind_addr: IpAddr,
+    check_every: u64,
+    calls: AtomicU64,
+    /// The local full-world replicated ring runtime (authoritative
+    /// results). `None` only at world 1.
+    inner: Option<FabricRuntime>,
+    wire: Mutex<WireState>,
+    /// First wire fault since the last `take_fault`/`recover`; later
+    /// faults are suppressed (the link is already down).
+    fault: Mutex<Option<String>>,
+}
+
+impl ElasticCore {
+    /// Always check in debug builds; 1-in-`check_every` calls in
+    /// release (same sampling contract as the other ring backends).
+    fn check_due(&self) -> bool {
+        let k = self.calls.fetch_add(1, Ordering::Relaxed);
+        cfg!(debug_assertions) || (self.check_every > 0 && k % self.check_every == 0)
+    }
+
+    fn set_fault(&self, msg: String) {
+        let mut f = lock(&self.fault);
+        if f.is_none() {
+            *f = Some(msg);
+        }
+    }
+
+    /// One wire round: gather every member's own block around the
+    /// compact TCP ring and bit-compare each against the local
+    /// replica's value (`expected(rank)`). Any wire error or
+    /// divergence latches a fault and drops the link; the collective's
+    /// local result is untouched either way.
+    fn mirror<'a>(
+        &self,
+        op: &'static str,
+        own: &EncodedTensor,
+        expected: impl Fn(usize) -> &'a [f32],
+    ) {
+        let mut guard = lock(&self.wire);
+        let ws = &mut *guard;
+        let Some(widx) = ws.membership.index_of(self.peer.rank) else {
+            return;
+        };
+        let Some(link) = ws.link.as_mut() else {
+            return;
+        };
+        let m = ws.membership.members.len();
+        let wire_topo = Topology::new(1, m);
+        match ag_rank(wire_topo, widx, own, &mut ws.scratch, link) {
+            Err(e) => {
+                let succ = ws.membership.successor_of(self.peer.rank).map_or(0, |s| s.rank);
+                let pred = ws.membership.predecessor_of(self.peer.rank).map_or(0, |s| s.rank);
+                let msg = format!(
+                    "elastic {op}: epoch {}: {}",
+                    ws.membership.epoch,
+                    e.describe_peers(succ, pred)
+                );
+                ws.link = None;
+                self.set_fault(msg);
+            }
+            Ok(()) => {
+                let wire_bytes = ws.scratch.ledger.take();
+                ws.ledger.merge(&wire_bytes);
+                for (i, mem) in ws.membership.members.iter().enumerate() {
+                    let exp = expected(mem.rank);
+                    let got = &ws.scratch.slots[i];
+                    let same = got.len() == exp.len()
+                        && got.iter().zip(exp).all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !same {
+                        let (epoch, rank) = (ws.membership.epoch, mem.rank);
+                        let msg = format!(
+                            "elastic {op}: epoch {epoch}: wire divergence — member rank {rank} \
+                             shipped a block that differs bitwise from the local replica"
+                        );
+                        ws.link = None;
+                        self.set_fault(msg);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Bind a fresh wire listener, register with the rendezvous, and (if
+/// at least two members answered) wire up the compact ring link for
+/// the new epoch. Used both at construction and on every recovery —
+/// joining and rejoining are the same operation.
+fn join_epoch(
+    peer: &ElasticPeer,
+    bind_addr: IpAddr,
+    world: usize,
+    ckpt_step: u64,
+) -> Result<(RingMembership, Option<SocketLink>)> {
+    let listener = TcpListener::bind(SocketAddr::new(bind_addr, 0))
+        .context("elastic wire: bind epoch listener")?;
+    let wire_addr = listener.local_addr().context("elastic wire: listener local_addr")?;
+    let membership = rendezvous(
+        peer.rendezvous,
+        peer.rank,
+        world,
+        wire_addr,
+        ckpt_step,
+        Duration::from_millis(peer.rendezvous_timeout_ms),
+    )?;
+    let link = if membership.members.len() >= 2 {
+        let succ =
+            membership.successor_of(peer.rank).expect("rendezvous epochs include the caller");
+        Some(elastic_link(&listener, succ.addr, Duration::from_millis(peer.stall_ms))?)
+    } else {
+        None
+    };
+    Ok((membership, link))
+}
+
+/// The multi-process elastic [`Collective`] backend — see the module
+/// docs for the execution model. Cheap to clone via
+/// [`ElasticHandle::fabric`]; all clones share one core.
+pub struct ElasticFabric {
+    core: Arc<ElasticCore>,
+}
+
+impl std::fmt::Debug for ElasticFabric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ElasticFabric")
+            .field("topo", &self.core.topo)
+            .field("rank", &self.core.peer.rank)
+            .finish()
+    }
+}
+
+impl ElasticFabric {
+    /// Join the ring: bind a wire listener, rendezvous at
+    /// `peer.rendezvous` for the next epoch, and connect the compact
+    /// ring. World 1 needs no rendezvous and opens no sockets (the
+    /// collectives short-circuit, same contract as [`crate::collectives::SocketFabric`]).
+    pub fn connect(
+        topo: Topology,
+        peer: ElasticPeer,
+        bind_addr: IpAddr,
+        check_every: u64,
+    ) -> Result<ElasticFabric> {
+        let p = topo.world();
+        ensure!(peer.rank < p, "elastic: rank {} outside world {p}", peer.rank);
+        let (membership, link) = if p == 1 {
+            (RingMembership::solo(peer.rank, p, SocketAddr::new(bind_addr, 0)), None)
+        } else {
+            join_epoch(&peer, bind_addr, p, peer.ckpt_step)?
+        };
+        let inner = (p > 1).then(|| spawn_channel_runtime(topo));
+        let core = ElasticCore {
+            topo,
+            peer,
+            bind_addr,
+            check_every,
+            calls: AtomicU64::new(0),
+            inner,
+            wire: Mutex::new(WireState {
+                membership,
+                link,
+                scratch: RankScratch::default(),
+                ledger: TrafficLedger::new(),
+            }),
+            fault: Mutex::new(None),
+        };
+        Ok(ElasticFabric { core: Arc::new(core) })
+    }
+
+    /// A control handle sharing this fabric's core: fault polling,
+    /// recovery, membership inspection. Keep one in the driver loop —
+    /// it stays valid across trainer rebuilds.
+    pub fn handle(&self) -> ElasticHandle {
+        ElasticHandle { core: Arc::clone(&self.core) }
+    }
+}
+
+/// Driver-side control surface for a live [`ElasticFabric`]:
+/// poll for wire faults, run epoch recovery, mint fresh fabric values
+/// for rebuilt trainers.
+pub struct ElasticHandle {
+    core: Arc<ElasticCore>,
+}
+
+impl std::fmt::Debug for ElasticHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ElasticHandle")
+            .field("topo", &self.core.topo)
+            .field("rank", &self.core.peer.rank)
+            .finish()
+    }
+}
+
+impl ElasticHandle {
+    /// The first wire fault since the last poll (or recovery), if any.
+    /// Taking it clears the latch; the wire link is already down when
+    /// a fault is pending, so collectives keep serving local results.
+    pub fn take_fault(&self) -> Option<String> {
+        lock(&self.core.fault).take()
+    }
+
+    /// Re-rendezvous for a new epoch after a fault: drop whatever is
+    /// left of the old wire, register with `ckpt_step` (the newest
+    /// checkpoint this rank can restore), and wire the new compact
+    /// ring. Returns what the epoch agreed — the caller must roll its
+    /// trainer back to `restore_step` before training on.
+    pub fn recover(&self, ckpt_step: u64) -> Result<RecoveryReport> {
+        let core = &self.core;
+        let world = core.topo.world();
+        let mut ws = lock(&core.wire);
+        if world > 1 {
+            // Close our old sockets *before* saying hello again: peers
+            // that have not faulted yet do so within one stall, landing
+            // in the same rendezvous round (see membership module docs).
+            ws.link = None;
+            let (membership, link) = join_epoch(&core.peer, core.bind_addr, world, ckpt_step)?;
+            ws.membership = membership;
+            ws.link = link;
+        }
+        *lock(&core.fault) = None;
+        Ok(RecoveryReport {
+            epoch: ws.membership.epoch,
+            restore_step: ws.membership.restore_step,
+            degraded: ws.membership.is_degraded(),
+            members: ws.membership.members.iter().map(|m| m.rank).collect(),
+        })
+    }
+
+    /// A fresh fabric value over the same core (same inner runtime,
+    /// same wire) — what a rebuilt trainer gets after recovery.
+    pub fn fabric(&self) -> ElasticFabric {
+        ElasticFabric { core: Arc::clone(&self.core) }
+    }
+
+    /// Current epoch membership (cloned snapshot).
+    pub fn membership(&self) -> RingMembership {
+        lock(&self.core.wire).membership.clone()
+    }
+
+    /// Current epoch number.
+    pub fn epoch(&self) -> u64 {
+        lock(&self.core.wire).membership.epoch
+    }
+
+    /// Accumulated wire-mirror traffic — kept separate from the
+    /// collective ledgers so simulated seconds match a socket run.
+    pub fn wire_traffic(&self) -> TrafficLedger {
+        lock(&self.core.wire).ledger
+    }
+}
+
+impl Collective for ElasticFabric {
+    fn name(&self) -> &'static str {
+        "elastic"
+    }
+
+    fn topo(&self) -> Topology {
+        self.core.topo
+    }
+
+    fn all_gather(&self, shards: &[EncodedTensor], ledger: &mut TrafficLedger) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.all_gather_into(shards, &mut out, ledger);
+        out
+    }
+
+    /// Local replicated ring gather (authoritative), then one wire
+    /// round shipping this rank's encoded shard, bit-checked against
+    /// the local decode of every member's block.
+    fn all_gather_into(
+        &self,
+        shards: &[EncodedTensor],
+        out: &mut Vec<f32>,
+        ledger: &mut TrafficLedger,
+    ) {
+        let p = self.core.topo.world();
+        assert_eq!(shards.len(), p, "one shard per rank");
+        if p == 1 {
+            shards[0].decode(out);
+            return;
+        }
+        let check = self.core.check_due();
+        let rt = self.core.inner.as_ref().expect("world > 1 spawns the inner runtime");
+        runtime_all_gather_into(rt, "elastic", shards, out, ledger, check);
+        // Rank q's decoded block starts at the prefix sum of the
+        // preceding shards' element counts.
+        let mut bounds = Vec::with_capacity(p);
+        let mut off = 0usize;
+        for s in shards {
+            bounds.push((off, s.n));
+            off += s.n;
+        }
+        self.core.mirror("all_gather", &shards[self.core.peer.rank], |q| {
+            let (o, n) = bounds[q];
+            &out[o..o + n]
+        });
+    }
+
+    /// Local replicated reduce-and-forward ring, then a wire round
+    /// shipping this rank's reduced shard (FP32 — the reduced values
+    /// are already post-codec, and replicas must agree bitwise).
+    fn reduce_scatter(
+        &self,
+        inputs: &[Vec<f32>],
+        codec: &dyn Codec,
+        rng: &mut Pcg64,
+        ledger: &mut TrafficLedger,
+    ) -> Vec<Vec<f32>> {
+        let topo = self.core.topo;
+        let n_elems = check_inputs(&topo, inputs);
+        if topo.world() == 1 {
+            return world1_reduce_scatter(&inputs[0], codec, rng);
+        }
+        let base = rng.next_u64();
+        let rt = self.core.inner.as_ref().expect("world > 1 spawns the inner runtime");
+        let outs = runtime_reduce_scatter(rt, "elastic", inputs, codec, base, n_elems, ledger);
+        let own = EncodedTensor::fp32(&outs[self.core.peer.rank]);
+        self.core.mirror("reduce_scatter", &own, |q| &outs[q][..]);
+        outs
+    }
+
+    /// Fused local all-reduce, then a wire round over this rank's
+    /// block of the reduced vector.
+    fn all_reduce(
+        &self,
+        inputs: &[Vec<f32>],
+        codec_rs: &dyn Codec,
+        codec_ag: &dyn Codec,
+        rng: &mut Pcg64,
+        ledger: &mut TrafficLedger,
+    ) -> Vec<f32> {
+        let topo = self.core.topo;
+        let n_elems = check_inputs(&topo, inputs);
+        if topo.world() == 1 {
+            // Match the trait's default composition exactly (shared
+            // caller rng stream — see `world1_reduce_scatter`).
+            let shards = self.reduce_scatter(inputs, codec_rs, rng, ledger);
+            let encoded: Vec<EncodedTensor> =
+                shards.iter().map(|s| codec_ag.encode(s, rng)).collect();
+            return self.all_gather(&encoded, ledger);
+        }
+        let base = rng.next_u64();
+        let check = self.core.check_due();
+        let rt = self.core.inner.as_ref().expect("world > 1 spawns the inner runtime");
+        let out = runtime_all_reduce(
+            rt, "elastic", inputs, codec_rs, codec_ag, base, n_elems, check, ledger,
+        );
+        let own = EncodedTensor::fp32(&out[topo.shard_range(n_elems, self.core.peer.rank)]);
+        self.core.mirror("all_reduce", &own, |q| &out[topo.shard_range(n_elems, q)]);
+        out
+    }
+
+    // start_all_gather / start_reduce_scatter: the trait's eager
+    // defaults are the correct semantics here — the wire round must
+    // complete before the result may be observed, so submission
+    // cannot usefully overlap (see module docs).
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::membership::RendezvousServer;
+    use super::*;
+    use crate::collectives::{loopback_available, AsyncFabric, LockstepFabric};
+    use crate::quant::{Fp32Codec, MinMaxCodec};
+    use std::net::Ipv4Addr;
+
+    fn skip_no_loopback() -> bool {
+        if loopback_available() {
+            false
+        } else {
+            eprintln!("SKIP: loopback TCP unavailable in this sandbox; elastic test not run");
+            true
+        }
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn localhost() -> IpAddr {
+        IpAddr::V4(Ipv4Addr::LOCALHOST)
+    }
+
+    fn peer(rank: usize, rendezvous: SocketAddr) -> ElasticPeer {
+        // Generous stall: a loaded CI machine may delay a member's
+        // entry into its wire round; only the dedicated failure tests
+        // use short stalls.
+        ElasticPeer {
+            rank,
+            rendezvous,
+            stall_ms: 10_000,
+            rendezvous_timeout_ms: 20_000,
+            ckpt_step: 0,
+        }
+    }
+
+    #[test]
+    fn elastic_world1_matches_lockstep_without_sockets() {
+        // World 1 never rendezvouses and never opens a socket, so this
+        // runs even where loopback is forbidden.
+        let topo = Topology::new(1, 1);
+        let rdv = SocketAddr::new(localhost(), 1); // never contacted
+        let fabric = ElasticFabric::connect(topo, peer(0, rdv), localhost(), 64)
+            .expect("world-1 construction is socket-free");
+        assert_eq!(fabric.name(), "elastic");
+        let input = vec![rand_vec(257, 5)];
+        let mut ledger = TrafficLedger::new();
+        let shard = vec![EncodedTensor::fp32(&input[0])];
+        assert_eq!(fabric.all_gather(&shard, &mut ledger), input[0]);
+        let codec = MinMaxCodec::new(8, 64, true);
+        let outs = fabric.reduce_scatter(&input, &codec, &mut Pcg64::seeded(3), &mut ledger);
+        let mut ll = TrafficLedger::new();
+        let lock = LockstepFabric::new(topo).reduce_scatter(
+            &input,
+            &codec,
+            &mut Pcg64::seeded(3),
+            &mut ll,
+        );
+        assert_eq!(outs, lock, "world-1 numerics must not depend on the fabric");
+        assert!(fabric.handle().take_fault().is_none());
+    }
+
+    /// Spin up a rendezvous + one connected ElasticFabric per member
+    /// rank, run `work` on each member's own thread, and return the
+    /// per-rank results.
+    fn ensemble<T: Send + 'static>(
+        world: usize,
+        members: &[usize],
+        join_window: Duration,
+        work: impl Fn(ElasticFabric, usize) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let readmit = Duration::from_secs(10);
+        let server = RendezvousServer::spawn(localhost(), world, join_window, readmit)
+            .expect("spawn rendezvous");
+        let rdv = server.addr();
+        let work = Arc::new(work);
+        let handles: Vec<_> = members
+            .iter()
+            .map(|&r| {
+                let work = Arc::clone(&work);
+                std::thread::spawn(move || {
+                    let topo = Topology::new(world, 1);
+                    let fabric = ElasticFabric::connect(topo, peer(r, rdv), localhost(), 64)
+                        .unwrap_or_else(|e| panic!("rank {r}: connect: {e:#}"));
+                    work(fabric, r)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("member thread")).collect()
+    }
+
+    #[test]
+    fn elastic_full_ensemble_matches_async_reference_bitwise() {
+        if skip_no_loopback() {
+            return;
+        }
+        let world = 3;
+        let n = 1037;
+        let full = rand_vec(n, 21);
+        let topo = Topology::new(world, 1);
+        let codec = MinMaxCodec::new(8, 64, true);
+        let mut enc_rng = Pcg64::seeded(22);
+        let shards: Vec<EncodedTensor> = (0..world)
+            .map(|r| codec.encode(&full[topo.shard_range(n, r)], &mut enc_rng))
+            .collect();
+        let inputs: Vec<Vec<f32>> = (0..world).map(|r| rand_vec(n, 30 + r as u64)).collect();
+        // Reference: the in-process async backend over the same
+        // channel-ring engine.
+        let reference = AsyncFabric::new(topo);
+        let mut lr = TrafficLedger::new();
+        let mut ref_rng = Pcg64::seeded(9);
+        let ref_gather = reference.all_gather(&shards, &mut lr);
+        let ref_outs = reference.reduce_scatter(&inputs, &Fp32Codec, &mut ref_rng, &mut lr);
+        let shards2 = shards.clone();
+        let inputs2 = inputs.clone();
+        let results = ensemble(world, &[0, 1, 2], Duration::from_secs(20), move |fabric, r| {
+            let mut ledger = TrafficLedger::new();
+            let mut rs_rng = Pcg64::seeded(9);
+            let gathered = fabric.all_gather(&shards2, &mut ledger);
+            let outs = fabric.reduce_scatter(&inputs2, &Fp32Codec, &mut rs_rng, &mut ledger);
+            let handle = fabric.handle();
+            let fault = handle.take_fault();
+            assert!(fault.is_none(), "rank {r}: unexpected wire fault: {fault:?}");
+            assert_eq!(handle.epoch(), 1, "first epoch");
+            assert!(!handle.membership().is_degraded());
+            assert!(handle.wire_traffic().total_bytes() > 0, "wire rounds moved real bytes");
+            (gathered, outs, ledger)
+        });
+        for (r, (gathered, outs, ledger)) in results.iter().enumerate() {
+            assert_eq!(gathered, &ref_gather, "rank {r}: gather diverged from async reference");
+            assert_eq!(outs, &ref_outs, "rank {r}: reduce_scatter diverged from async reference");
+            assert_eq!(ledger, &lr, "rank {r}: collective ledger must match the async reference");
+        }
+    }
+
+    #[test]
+    fn elastic_degraded_ensemble_survivors_match_full_reference() {
+        if skip_no_loopback() {
+            return;
+        }
+        // Rank 2 never shows up: after the short join window the epoch
+        // forms DEGRADED with members {0, 1, 3} of world 4. The wire
+        // ring compacts to the three survivors while the replicated
+        // local runtime keeps the full logical world — so every
+        // survivor's results stay bit-identical to the full-world
+        // reference, which is the degraded-ring differential pin.
+        let world = 4;
+        let n = 513;
+        let full = rand_vec(n, 41);
+        let topo = Topology::new(world, 1);
+        let shards: Vec<EncodedTensor> = (0..world)
+            .map(|r| EncodedTensor::fp32(&full[topo.shard_range(n, r)]))
+            .collect();
+        let reference = AsyncFabric::new(topo);
+        let mut lr = TrafficLedger::new();
+        let ref_gather = reference.all_gather(&shards, &mut lr);
+        let shards2 = shards.clone();
+        let results = ensemble(world, &[0, 1, 3], Duration::from_millis(700), move |fabric, r| {
+            let mut ledger = TrafficLedger::new();
+            let gathered = fabric.all_gather(&shards2, &mut ledger);
+            let handle = fabric.handle();
+            let fault = handle.take_fault();
+            assert!(fault.is_none(), "rank {r}: unexpected wire fault: {fault:?}");
+            let membership = handle.membership();
+            assert!(membership.is_degraded(), "rank 2 is missing");
+            let ranks: Vec<usize> = membership.members.iter().map(|m| m.rank).collect();
+            assert_eq!(ranks, vec![0, 1, 3]);
+            gathered
+        });
+        for (i, gathered) in results.iter().enumerate() {
+            let bits_equal = gathered.len() == ref_gather.len()
+                && gathered.iter().zip(&ref_gather).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(bits_equal, "survivor #{i}: degraded run diverged from full reference");
+        }
+    }
+}

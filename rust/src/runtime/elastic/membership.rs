@@ -1,0 +1,486 @@
+//! The `RingMembership` epoch protocol: who is in the ring right now,
+//! and how ranks agree on it.
+//!
+//! Every wire ring the elastic fabric builds belongs to an **epoch** —
+//! a monotonically increasing generation number handed out by a tiny
+//! line-based rendezvous service (hosted by the `launch` supervisor,
+//! or by anything that speaks the protocol for standalone ranks).
+//! Joining, restarting, and recovering are all the same operation:
+//! connect to the rendezvous, say hello, and wait for the next epoch.
+//!
+//! # Protocol (one line each way, UTF-8, `\n`-terminated)
+//!
+//! ```text
+//! worker → server:  HELLO <rank> <world> <wire_addr> <ckpt_step>
+//! server → worker:  EPOCH <epoch> <world> <restore_step> <m> <rank>@<addr> ...
+//!                   ERR <reason>
+//! ```
+//!
+//! `wire_addr` is the worker's freshly bound wire listener (every
+//! epoch gets new connections, so stale peers hit closed sockets
+//! instead of mixing generations), and `ckpt_step` is the newest
+//! checkpoint the worker can restore. The server collects hellos into
+//! a round and closes it when either **all `world` ranks** are present
+//! (early close) or the round deadline expires with a partial set —
+//! producing a *degraded* membership that routes around the missing
+//! ranks. The reply's `restore_step` is the **minimum** of the
+//! members' checkpoint steps: recovery rolls every replica back to the
+//! newest state all of them can load, because the rng/data streams are
+//! not checkpointed and replicas must re-align exactly (see
+//! `coordinator::trainer`).
+//!
+//! Round deadlines are asymmetric: the *initial* round (epoch 0 → 1)
+//! waits a long `join` window for slow process startup; *recovery*
+//! rounds wait the shorter `readmit` window, which must still exceed
+//! the wire stall limit so that survivors faulting one collective
+//! apart land in the same round (split-brain avoidance by timing: a
+//! member never observes two live epochs because it drops its link
+//! before saying hello, and everyone else faults within one stall of
+//! that).
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One ring member: its training rank and its wire listener address
+/// for the current epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Member {
+    pub rank: usize,
+    pub addr: SocketAddr,
+}
+
+/// An agreed ring generation: the epoch number, the full logical world
+/// size, the checkpoint step every member restores from, and the
+/// members present (sorted by rank; possibly fewer than `world` — the
+/// degraded ring).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RingMembership {
+    pub epoch: u64,
+    pub world: usize,
+    pub restore_step: u64,
+    pub members: Vec<Member>,
+}
+
+impl RingMembership {
+    /// A world-1 (or pre-rendezvous) membership containing only `rank`.
+    pub fn solo(rank: usize, world: usize, addr: SocketAddr) -> Self {
+        RingMembership { epoch: 0, world, restore_step: 0, members: vec![Member { rank, addr }] }
+    }
+
+    /// Fewer members than the logical world: the ring routes around
+    /// the missing ranks, whose shards the replicated survivors
+    /// reconstruct from checkpoint state.
+    pub fn is_degraded(&self) -> bool {
+        self.members.len() < self.world
+    }
+
+    /// This rank's position in the (rank-sorted) member list — its
+    /// index in the compact wire ring.
+    pub fn index_of(&self, rank: usize) -> Option<usize> {
+        self.members.iter().position(|m| m.rank == rank)
+    }
+
+    /// The next member around the compact wire ring.
+    pub fn successor_of(&self, rank: usize) -> Option<Member> {
+        let i = self.index_of(rank)?;
+        Some(self.members[(i + 1) % self.members.len()])
+    }
+
+    /// The previous member around the compact wire ring.
+    pub fn predecessor_of(&self, rank: usize) -> Option<Member> {
+        let i = self.index_of(rank)?;
+        let m = self.members.len();
+        Some(self.members[(i + m - 1) % m])
+    }
+
+    /// Serialize as the server's `EPOCH` reply line (no newline).
+    fn epoch_line(&self) -> String {
+        let mut s = format!(
+            "EPOCH {} {} {} {}",
+            self.epoch,
+            self.world,
+            self.restore_step,
+            self.members.len()
+        );
+        for m in &self.members {
+            s.push_str(&format!(" {}@{}", m.rank, m.addr));
+        }
+        s
+    }
+}
+
+/// Parse a worker's `HELLO` line into (rank, world, wire_addr,
+/// ckpt_step).
+fn parse_hello(line: &str) -> Result<(usize, usize, SocketAddr, u64)> {
+    let mut it = line.split_whitespace();
+    if it.next() != Some("HELLO") {
+        bail!("rendezvous: expected HELLO, got {line:?}");
+    }
+    let rank: usize = it.next().context("HELLO missing rank")?.parse()?;
+    let world: usize = it.next().context("HELLO missing world")?.parse()?;
+    let addr: SocketAddr = it.next().context("HELLO missing wire addr")?.parse()?;
+    let ckpt: u64 = it.next().context("HELLO missing ckpt step")?.parse()?;
+    Ok((rank, world, addr, ckpt))
+}
+
+/// Parse a server reply line into a membership (or the server's error).
+fn parse_epoch(line: &str) -> Result<RingMembership> {
+    let mut it = line.split_whitespace();
+    match it.next() {
+        Some("EPOCH") => {}
+        Some("ERR") => {
+            bail!("rendezvous refused: {}", line.trim_start().trim_start_matches("ERR").trim())
+        }
+        _ => bail!("rendezvous: expected EPOCH, got {line:?}"),
+    }
+    let epoch: u64 = it.next().context("EPOCH missing epoch")?.parse()?;
+    let world: usize = it.next().context("EPOCH missing world")?.parse()?;
+    let restore_step: u64 = it.next().context("EPOCH missing restore step")?.parse()?;
+    let m: usize = it.next().context("EPOCH missing member count")?.parse()?;
+    let mut members = Vec::with_capacity(m);
+    for _ in 0..m {
+        let tok = it.next().context("EPOCH truncated member list")?;
+        let (rank, addr) = tok.split_once('@').context("member token missing '@'")?;
+        members.push(Member { rank: rank.parse()?, addr: addr.parse()? });
+    }
+    Ok(RingMembership { epoch, world, restore_step, members })
+}
+
+/// One worker waiting in the current rendezvous round.
+struct PendingHello {
+    rank: usize,
+    addr: SocketAddr,
+    ckpt_step: u64,
+    stream: TcpStream,
+}
+
+/// The supervisor-hosted rendezvous service. Spawns its accept loop on
+/// a background thread at construction; the thread stops (and the
+/// listener closes) on drop.
+pub struct RendezvousServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RendezvousServer {
+    /// Bind an ephemeral listener on `bind_addr` and start serving
+    /// epochs for a `world`-rank job. `join` bounds the initial round
+    /// (process startup), `readmit` the recovery rounds (must exceed
+    /// the wire stall limit — see the module docs).
+    pub fn spawn(
+        bind_addr: IpAddr,
+        world: usize,
+        join: Duration,
+        readmit: Duration,
+    ) -> Result<RendezvousServer> {
+        let listener = TcpListener::bind(SocketAddr::new(bind_addr, 0))
+            .context("rendezvous: bind listener")?;
+        let addr = listener.local_addr().context("rendezvous: listener local_addr")?;
+        listener.set_nonblocking(true).context("rendezvous: set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("elastic-rendezvous".into())
+            .spawn(move || serve(listener, world, join, readmit, &stop2))
+            .context("rendezvous: spawn server thread")?;
+        Ok(RendezvousServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The address workers rendezvous at (pass via `--rendezvous` /
+    /// `QSDP_RENDEZVOUS`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for RendezvousServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The server loop: collect hellos, close rounds, hand out epochs.
+fn serve(
+    listener: TcpListener,
+    world: usize,
+    join: Duration,
+    readmit: Duration,
+    stop: &AtomicBool,
+) {
+    let mut epoch = 0u64;
+    let mut pending: Vec<PendingHello> = Vec::new();
+    let mut deadline: Option<Instant> = None;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Some(hello) = read_hello(stream, world) {
+                    // A re-registration (client retried) replaces the
+                    // stale entry for that rank.
+                    pending.retain(|p| p.rank != hello.rank);
+                    pending.push(hello);
+                    if deadline.is_none() {
+                        let window = if epoch == 0 { join } else { readmit };
+                        deadline = Some(Instant::now() + window);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+        let expired = deadline.is_some_and(|d| Instant::now() >= d);
+        if !pending.is_empty() && (pending.len() == world || expired) {
+            epoch += 1;
+            pending.sort_by_key(|p| p.rank);
+            let restore_step = pending.iter().map(|p| p.ckpt_step).min().unwrap_or(0);
+            let membership = RingMembership {
+                epoch,
+                world,
+                restore_step,
+                members: pending.iter().map(|p| Member { rank: p.rank, addr: p.addr }).collect(),
+            };
+            let line = membership.epoch_line();
+            let tag = if membership.is_degraded() { " DEGRADED" } else { "" };
+            println!(
+                "elastic: epoch {epoch} formed with {}/{world} ranks at restore step \
+                 {restore_step}{tag}",
+                membership.members.len()
+            );
+            for p in &mut pending {
+                let _ = p.stream.set_write_timeout(Some(Duration::from_secs(2)));
+                let _ = p.stream.write_all(format!("{line}\n").as_bytes());
+            }
+            pending.clear();
+            deadline = None;
+        }
+    }
+}
+
+/// Read and validate one HELLO off a fresh connection. Returns `None`
+/// (dropping the stream) on malformed or mismatched hellos.
+fn read_hello(stream: TcpStream, world: usize) -> Option<PendingHello> {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    let mut stream = reader.into_inner();
+    match parse_hello(&line) {
+        Ok((rank, w, addr, ckpt_step)) if w == world && rank < world => {
+            Some(PendingHello { rank, addr, ckpt_step, stream })
+        }
+        Ok((rank, w, ..)) => {
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+            let msg = format!("ERR rank {rank}/world {w} does not fit world {world}\n");
+            let _ = stream.write_all(msg.as_bytes());
+            None
+        }
+        Err(_) => None,
+    }
+}
+
+/// Client side: register with the rendezvous and block until the next
+/// epoch is handed out (or `timeout` elapses — a late rejoiner whose
+/// peers already formed a degraded ring exits through this error, and
+/// the supervisor's max-restarts cap bounds the loop).
+pub fn rendezvous(
+    server: SocketAddr,
+    rank: usize,
+    world: usize,
+    wire_addr: SocketAddr,
+    ckpt_step: u64,
+    timeout: Duration,
+) -> Result<RingMembership> {
+    let deadline = Instant::now() + timeout;
+    let mut stream = loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            bail!(
+                "rank {rank}: rendezvous at {server} unreachable within {:.1}s",
+                timeout.as_secs_f64()
+            );
+        }
+        match TcpStream::connect_timeout(&server, remaining.min(Duration::from_secs(1))) {
+            Ok(s) => break s,
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    stream
+        .write_all(format!("HELLO {rank} {world} {wire_addr} {ckpt_step}\n").as_bytes())
+        .with_context(|| format!("rank {rank}: send HELLO to rendezvous"))?;
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        bail!("rank {rank}: rendezvous timed out before the epoch reply");
+    }
+    stream.set_read_timeout(Some(remaining)).context("rendezvous: set_read_timeout")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).with_context(|| {
+        format!(
+            "rank {rank}: no epoch within {:.1}s — the ring may have formed without us",
+            timeout.as_secs_f64()
+        )
+    })?;
+    if line.is_empty() {
+        bail!("rank {rank}: rendezvous hung up before handing out an epoch");
+    }
+    let membership = parse_epoch(&line)?;
+    if membership.index_of(rank).is_none() {
+        bail!("rank {rank}: epoch {} does not include us", membership.epoch);
+    }
+    Ok(membership)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::loopback_available;
+    use std::net::Ipv4Addr;
+
+    fn skip_no_loopback() -> bool {
+        if loopback_available() {
+            false
+        } else {
+            eprintln!("SKIP: loopback TCP unavailable in this sandbox; rendezvous test not run");
+            true
+        }
+    }
+
+    fn sa(port: u16) -> SocketAddr {
+        SocketAddr::new(IpAddr::V4(Ipv4Addr::LOCALHOST), port)
+    }
+
+    #[test]
+    fn elastic_membership_epoch_line_round_trips() {
+        let m = RingMembership {
+            epoch: 7,
+            world: 4,
+            restore_step: 12,
+            members: vec![
+                Member { rank: 0, addr: sa(9000) },
+                Member { rank: 1, addr: sa(9001) },
+                Member { rank: 3, addr: sa(9003) },
+            ],
+        };
+        let parsed = parse_epoch(&m.epoch_line()).expect("round trip");
+        assert_eq!(parsed, m);
+        assert!(parsed.is_degraded());
+    }
+
+    #[test]
+    fn elastic_membership_ring_neighbors_skip_lost_ranks() {
+        let m = RingMembership {
+            epoch: 2,
+            world: 4,
+            restore_step: 0,
+            members: vec![
+                Member { rank: 0, addr: sa(1) },
+                Member { rank: 1, addr: sa(2) },
+                Member { rank: 3, addr: sa(3) },
+            ],
+        };
+        assert_eq!(m.index_of(3), Some(2));
+        assert_eq!(m.index_of(2), None, "lost rank is not a member");
+        assert_eq!(m.successor_of(1).unwrap().rank, 3, "ring routes around rank 2");
+        assert_eq!(m.successor_of(3).unwrap().rank, 0, "wraps to the first member");
+        assert_eq!(m.predecessor_of(0).unwrap().rank, 3);
+    }
+
+    #[test]
+    fn elastic_membership_hello_parses_and_rejects_garbage() {
+        let (rank, world, addr, ckpt) =
+            parse_hello("HELLO 2 4 127.0.0.1:5555 17").expect("valid hello");
+        assert_eq!((rank, world, ckpt), (2, 4, 17));
+        assert_eq!(addr, sa(5555));
+        assert!(parse_hello("GOODBYE 2 4 127.0.0.1:5555 17").is_err());
+        assert!(parse_hello("HELLO 2 4").is_err());
+        assert!(parse_epoch("ERR no room").is_err());
+    }
+
+    #[test]
+    fn elastic_rendezvous_full_round_closes_early() {
+        if skip_no_loopback() {
+            return;
+        }
+        // Full quorum must form the epoch well before the join window
+        // expires (early close), and every member must see the same
+        // rank-sorted membership.
+        let server = RendezvousServer::spawn(
+            IpAddr::V4(Ipv4Addr::LOCALHOST),
+            3,
+            Duration::from_secs(30),
+            Duration::from_secs(30),
+        )
+        .expect("spawn server");
+        let addr = server.addr();
+        let started = Instant::now();
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                std::thread::spawn(move || {
+                    let wire = sa(7000 + r as u16);
+                    rendezvous(addr, r, 3, wire, 5 + r as u64, Duration::from_secs(20))
+                })
+            })
+            .collect();
+        let results: Vec<RingMembership> =
+            handles.into_iter().map(|h| h.join().unwrap().expect("rendezvous")).collect();
+        assert!(started.elapsed() < Duration::from_secs(15), "early close, not window expiry");
+        for m in &results {
+            assert_eq!(m, &results[0], "all members agree on the epoch");
+        }
+        assert_eq!(results[0].epoch, 1);
+        assert!(!results[0].is_degraded());
+        assert_eq!(results[0].restore_step, 5, "minimum of the offered checkpoint steps");
+        let ranks: Vec<usize> = results[0].members.iter().map(|m| m.rank).collect();
+        assert_eq!(ranks, vec![0, 1, 2], "sorted by rank");
+    }
+
+    #[test]
+    fn elastic_rendezvous_partial_round_forms_degraded_epoch() {
+        if skip_no_loopback() {
+            return;
+        }
+        let server = RendezvousServer::spawn(
+            IpAddr::V4(Ipv4Addr::LOCALHOST),
+            2,
+            Duration::from_millis(300),
+            Duration::from_millis(300),
+        )
+        .expect("spawn server");
+        let m = rendezvous(server.addr(), 0, 2, sa(7100), 9, Duration::from_secs(10))
+            .expect("lone member still gets an epoch");
+        assert_eq!(m.epoch, 1);
+        assert!(m.is_degraded());
+        assert_eq!(m.members.len(), 1);
+        assert_eq!(m.restore_step, 9);
+    }
+
+    #[test]
+    fn elastic_rendezvous_consecutive_rounds_bump_the_epoch() {
+        if skip_no_loopback() {
+            return;
+        }
+        let server = RendezvousServer::spawn(
+            IpAddr::V4(Ipv4Addr::LOCALHOST),
+            1,
+            Duration::from_secs(5),
+            Duration::from_secs(5),
+        )
+        .expect("spawn server");
+        let a = rendezvous(server.addr(), 0, 1, sa(7200), 0, Duration::from_secs(10)).unwrap();
+        let b = rendezvous(server.addr(), 0, 1, sa(7201), 4, Duration::from_secs(10)).unwrap();
+        assert_eq!(a.epoch, 1);
+        assert_eq!(b.epoch, 2, "every round is a new generation");
+        assert_eq!(b.restore_step, 4);
+    }
+}

@@ -1,0 +1,59 @@
+//! Elastic multi-process rank fabric: `qsdp launch`, standalone rank
+//! mode, and reconnect-with-recovery for the socket ring.
+//!
+//! # Launch lifecycle
+//!
+//! `qsdp launch --world P <train|smoke>` ([`supervisor`]) hosts a
+//! [`RendezvousServer`] and fork/execs `P` workers — plain
+//! `qsdp <job>` invocations of the same binary. Each worker detects
+//! standalone rank mode ([`WorkerContext::detect`]) from
+//! `--rank`/`QSDP_RANK` (flags win over env), joins the rendezvous
+//! for epoch 1, and trains over an [`ElasticFabric`]. The supervisor
+//! restarts dead workers with capped exponential backoff
+//! ([`Backoff`]) until a per-rank `--max-restarts` budget runs out.
+//!
+//! # Env/flag contract
+//!
+//! | flag | env | meaning |
+//! |---|---|---|
+//! | `--rank` | `QSDP_RANK` | this process's rank (presence ⇒ worker) |
+//! | `--world` | `QSDP_WORLD` | logical world size |
+//! | `--rendezvous` | `QSDP_RENDEZVOUS` | rendezvous `host:port` |
+//! | `--ckpt-dir` | `QSDP_CKPT_DIR` | checkpoint root (per-rank subdirs) |
+//! | `--restarts` | `QSDP_RESTARTS` | incarnation counter (guards stale epochs) |
+//!
+//! # Epoch protocol
+//!
+//! Membership is an epoch: each member sends one
+//! `HELLO <rank> <world> <addr> <ckpt_step>` line; the server closes
+//! the round on full quorum or at the window deadline and replies
+//! `EPOCH <epoch> <world> <restore_step> <m> <rank>@<addr>...` to
+//! everyone, with `restore_step` the *minimum* checkpoint step any
+//! member offered (see [`membership`]). A wire fault latches in the
+//! fabric; the driver polls [`ElasticHandle::take_fault`], calls
+//! [`ElasticHandle::recover`] to rendezvous for the next epoch, rolls
+//! its trainer back to the agreed `restore_step`, and continues.
+//!
+//! # Degraded semantics
+//!
+//! An epoch with fewer members than the world is *degraded*: the wire
+//! ring routes around the missing ranks while every survivor's inner
+//! full-world runtime keeps the numerics bitwise identical to a
+//! fault-free run. A re-admitted rank restores the epoch's common
+//! checkpoint and the job is whole again; a rank whose restart budget
+//! is spent stays gone and the job finishes degraded rather than
+//! hanging.
+
+pub mod backoff;
+pub mod fabric;
+pub mod membership;
+pub mod supervisor;
+pub mod worker;
+
+pub use backoff::Backoff;
+pub use fabric::{ElasticFabric, ElasticHandle, RecoveryReport};
+pub use membership::{rendezvous, Member, RendezvousServer, RingMembership};
+pub use supervisor::{cmd_launch, LaunchOptions};
+pub use worker::{
+    cmd_smoke, run_smoke, run_train_worker, smoke_reference_digest, state_digest, WorkerContext,
+};

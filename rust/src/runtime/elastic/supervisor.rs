@@ -1,0 +1,341 @@
+//! The `qsdp launch` supervisor: fork/exec one worker process per
+//! rank, host the rendezvous, and restart dead ranks with capped
+//! exponential backoff.
+//!
+//! `qsdp launch --world P <train|smoke>` spawns `P` copies of the
+//! current binary, each an ordinary `qsdp <job>` invocation carrying
+//! its elastic identity twice — as `--rank/--world/--rendezvous/...`
+//! flags and as `QSDP_*` environment variables (flags win; the
+//! duplication is what makes a hand-started standalone rank, e.g. on
+//! another host, interchangeable with a supervised one). Job flags the
+//! supervisor does not own (`--steps`, `--config`, ...) are forwarded
+//! verbatim.
+//!
+//! A worker that exits nonzero is restarted after
+//! `min(cap, base * 2^k)`; `--max-restarts` bounds the budget per
+//! rank, after which the rank is left down and the launch reports
+//! failure once the remaining ranks finish (they keep running
+//! degraded — that is the elastic contract, not a hang).
+
+use super::backoff::Backoff;
+use super::membership::RendezvousServer;
+use crate::collectives::loopback_available;
+use crate::util::args::Args;
+use anyhow::{bail, ensure, Context, Result};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Flags the supervisor owns (consumed here and re-emitted with
+/// resolved values, or per-rank like `--rank`); everything else is
+/// forwarded to the workers verbatim. Kept sorted.
+const LAUNCH_FLAGS: &[&str] = &[
+    "backoff-cap-ms",
+    "backoff-ms",
+    "ckpt-dir",
+    "ckpt-every",
+    "gpus-per-node",
+    "join-ms",
+    "launch-timeout-s",
+    "max-restarts",
+    "nodes",
+    "rank",
+    "readmit-ms",
+    "rendezvous",
+    "rendezvous-timeout-ms",
+    "restarts",
+    "skip-if-no-loopback",
+    "stall-ms",
+    "world",
+];
+
+/// Parsed `qsdp launch` configuration.
+#[derive(Clone, Debug)]
+pub struct LaunchOptions {
+    pub world: usize,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// The subcommand each worker runs (`train` or `smoke`).
+    pub job: String,
+    pub ckpt_dir: PathBuf,
+    pub ckpt_every: u64,
+    pub stall_ms: u64,
+    pub rendezvous_timeout_ms: u64,
+    /// First-epoch rendezvous window.
+    pub join_ms: u64,
+    /// Recovery-epoch window; must cover a worker's fault-detect +
+    /// restart backoff so a restarted rank lands in the survivors'
+    /// round.
+    pub readmit_ms: u64,
+    pub max_restarts: u64,
+    pub backoff_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Watchdog: kill everything and fail after this many seconds
+    /// (0 = no watchdog).
+    pub launch_timeout_s: u64,
+    /// Print `SKIP:` and exit 0 instead of failing where loopback TCP
+    /// is unavailable (CI sandboxes).
+    pub skip_if_no_loopback: bool,
+}
+
+impl LaunchOptions {
+    pub fn from_args(args: &Args) -> Result<LaunchOptions> {
+        let job = args
+            .positional
+            .get(1)
+            .cloned()
+            .context("usage: qsdp launch [flags] <train|smoke>")?;
+        ensure!(
+            job == "train" || job == "smoke",
+            "elastic: launch can run `train` or `smoke`, got {job:?}"
+        );
+        let (world, nodes, gpus_per_node) = if args.has("nodes") || args.has("gpus-per-node") {
+            let nodes = args.usize_or("nodes", 1);
+            let gpus = args.usize_or("gpus-per-node", 1);
+            let world = nodes * gpus;
+            if args.has("world") {
+                let w = args.usize_or("world", world);
+                ensure!(
+                    w == world,
+                    "elastic: --world {w} disagrees with --nodes {nodes} x --gpus-per-node {gpus}"
+                );
+            }
+            (world, nodes, gpus)
+        } else {
+            let world = args.usize_or("world", 2);
+            (world, world, 1)
+        };
+        ensure!(world > 0, "elastic: world must be positive");
+        let stall_ms = args.u64_or("stall-ms", 2000);
+        Ok(LaunchOptions {
+            world,
+            nodes,
+            gpus_per_node,
+            job,
+            ckpt_dir: args.get("ckpt-dir").map(PathBuf::from).unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("qsdp-launch-{}", std::process::id()))
+            }),
+            ckpt_every: args.u64_or("ckpt-every", 5),
+            stall_ms,
+            rendezvous_timeout_ms: args.u64_or("rendezvous-timeout-ms", 30_000),
+            join_ms: args.u64_or("join-ms", 15_000),
+            readmit_ms: args.u64_or("readmit-ms", 4 * stall_ms + 2000),
+            max_restarts: args.u64_or("max-restarts", 3),
+            backoff_ms: args.u64_or("backoff-ms", 200),
+            backoff_cap_ms: args.u64_or("backoff-cap-ms", 5000),
+            launch_timeout_s: args.u64_or("launch-timeout-s", 0),
+            skip_if_no_loopback: args.bool_or("skip-if-no-loopback", false),
+        })
+    }
+}
+
+/// The argv one worker gets: the job subcommand, the user's job flags
+/// (minus the supervisor-owned ones), then the elastic contract flags
+/// with resolved values.
+fn worker_argv(opts: &LaunchOptions, args: &Args, rdv: SocketAddr, rank: usize) -> Vec<String> {
+    let mut argv = vec![opts.job.clone()];
+    for (k, v) in args.flags() {
+        if !LAUNCH_FLAGS.contains(&k) {
+            argv.push(format!("--{k}={v}"));
+        }
+    }
+    let own = [
+        ("rank", rank.to_string()),
+        ("world", opts.world.to_string()),
+        ("nodes", opts.nodes.to_string()),
+        ("gpus-per-node", opts.gpus_per_node.to_string()),
+        ("rendezvous", rdv.to_string()),
+        ("ckpt-dir", opts.ckpt_dir.display().to_string()),
+        ("ckpt-every", opts.ckpt_every.to_string()),
+        ("stall-ms", opts.stall_ms.to_string()),
+        ("rendezvous-timeout-ms", opts.rendezvous_timeout_ms.to_string()),
+    ];
+    for (k, v) in own {
+        argv.push(format!("--{k}={v}"));
+    }
+    argv
+}
+
+/// Spawn one worker. stdout/stderr are inherited (rank digest lines
+/// surface through the supervisor); the env mirrors the identity
+/// flags, plus the restart counter the stale-epoch guard reads.
+fn spawn_worker(
+    exe: &Path,
+    opts: &LaunchOptions,
+    args: &Args,
+    rdv: SocketAddr,
+    rank: usize,
+    restarts: u64,
+) -> Result<Child> {
+    let argv = worker_argv(opts, args, rdv, rank);
+    let child = Command::new(exe)
+        .args(&argv)
+        .env("QSDP_RANK", rank.to_string())
+        .env("QSDP_WORLD", opts.world.to_string())
+        .env("QSDP_RENDEZVOUS", rdv.to_string())
+        .env("QSDP_CKPT_DIR", opts.ckpt_dir.display().to_string())
+        .env("QSDP_RESTARTS", restarts.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning worker rank {rank}"))?;
+    println!("elastic: worker rank={rank} pid={} spawned", child.id());
+    Ok(child)
+}
+
+/// Supervisor view of one rank.
+enum Slot {
+    Running(Child),
+    /// Dead, waiting out its backoff delay.
+    Respawn { at: Instant },
+    Done { code: i32 },
+}
+
+fn supervise(exe: &Path, opts: &LaunchOptions, args: &Args, rdv: SocketAddr) -> Result<()> {
+    let mut slots = Vec::with_capacity(opts.world);
+    let mut backoffs = Vec::with_capacity(opts.world);
+    let mut restarts = vec![0u64; opts.world];
+    for rank in 0..opts.world {
+        slots.push(Slot::Running(spawn_worker(exe, opts, args, rdv, rank, 0)?));
+        backoffs.push(Backoff::new(
+            Duration::from_millis(opts.backoff_ms),
+            Duration::from_millis(opts.backoff_cap_ms),
+        ));
+    }
+    let deadline = (opts.launch_timeout_s > 0)
+        .then(|| Instant::now() + Duration::from_secs(opts.launch_timeout_s));
+    while !slots.iter().all(|s| matches!(s, Slot::Done { .. })) {
+        if deadline.is_some_and(|d| Instant::now() > d) {
+            for s in &mut slots {
+                if let Slot::Running(child) = s {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+            bail!("elastic: launch watchdog expired after {}s", opts.launch_timeout_s);
+        }
+        for rank in 0..opts.world {
+            let next: Option<Slot> = match &mut slots[rank] {
+                Slot::Running(child) => match child.try_wait()? {
+                    None => None,
+                    Some(status) if status.success() => {
+                        println!("elastic: worker rank={rank} exited cleanly");
+                        Some(Slot::Done { code: 0 })
+                    }
+                    Some(status) if restarts[rank] >= opts.max_restarts => {
+                        eprintln!(
+                            "elastic: worker rank={rank} died ({status}); restart budget spent"
+                        );
+                        Some(Slot::Done { code: status.code().unwrap_or(-1) })
+                    }
+                    Some(status) => {
+                        restarts[rank] += 1;
+                        let n = restarts[rank];
+                        let delay = backoffs[rank].next_delay();
+                        eprintln!(
+                            "elastic: worker rank={rank} died ({status}); restart {}/{} in {:?}",
+                            n, opts.max_restarts, delay
+                        );
+                        Some(Slot::Respawn { at: Instant::now() + delay })
+                    }
+                },
+                Slot::Respawn { at } if Instant::now() >= *at => {
+                    Some(Slot::Running(spawn_worker(exe, opts, args, rdv, rank, restarts[rank])?))
+                }
+                _ => None,
+            };
+            if let Some(s) = next {
+                slots[rank] = s;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let failed: Vec<usize> = slots
+        .iter()
+        .enumerate()
+        .filter_map(|(r, s)| match s {
+            Slot::Done { code } if *code != 0 => Some(r),
+            _ => None,
+        })
+        .collect();
+    ensure!(failed.is_empty(), "elastic: ranks {failed:?} exhausted their restart budget");
+    println!("elastic: launch complete — all {} workers exited cleanly", opts.world);
+    Ok(())
+}
+
+/// `qsdp launch`: host the rendezvous and supervise the worker fleet.
+pub fn cmd_launch(args: &Args) -> Result<()> {
+    let opts = LaunchOptions::from_args(args)?;
+    if !loopback_available() {
+        if opts.skip_if_no_loopback {
+            println!("SKIP: loopback TCP unavailable in this sandbox; launch not run");
+            return Ok(());
+        }
+        bail!("elastic: launch needs loopback TCP (pass --skip-if-no-loopback to no-op instead)");
+    }
+    std::fs::create_dir_all(&opts.ckpt_dir)
+        .with_context(|| format!("creating checkpoint dir {}", opts.ckpt_dir.display()))?;
+    let server = RendezvousServer::spawn(
+        IpAddr::V4(Ipv4Addr::LOCALHOST),
+        opts.world,
+        Duration::from_millis(opts.join_ms),
+        Duration::from_millis(opts.readmit_ms),
+    )?;
+    println!(
+        "elastic: launching {} x `qsdp {}` (rendezvous {}, ckpt dir {})",
+        opts.world,
+        opts.job,
+        server.addr(),
+        opts.ckpt_dir.display()
+    );
+    let exe = std::env::current_exe().context("resolving the qsdp binary path")?;
+    supervise(&exe, &opts, args, server.addr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(line: &str) -> Args {
+        Args::parse(line.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn elastic_launch_options_parse() {
+        assert!(LAUNCH_FLAGS.windows(2).all(|w| w[0] < w[1]), "LAUNCH_FLAGS must stay sorted");
+        let o = LaunchOptions::from_args(&argv("launch --world 3 train")).unwrap();
+        assert_eq!((o.world, o.nodes, o.gpus_per_node), (3, 3, 1));
+        let line = "launch --nodes 2 --gpus-per-node 2 --stall-ms 500 smoke";
+        let o = LaunchOptions::from_args(&argv(line)).unwrap();
+        assert_eq!((o.world, o.nodes, o.gpus_per_node), (4, 2, 2));
+        assert_eq!(o.readmit_ms, 4 * 500 + 2000, "readmit window tracks the stall limit");
+        let conflict = argv("launch --world 3 --nodes 2 --gpus-per-node 2 train");
+        assert!(LaunchOptions::from_args(&conflict).is_err());
+        assert!(LaunchOptions::from_args(&argv("launch --world 2")).is_err(), "job is required");
+        let unknown = argv("launch --world 2 tables");
+        assert!(LaunchOptions::from_args(&unknown).is_err(), "only train/smoke are launchable");
+    }
+
+    #[test]
+    fn elastic_launch_forwards_job_flags_but_owns_its_own() {
+        let line = "launch --world 2 --ckpt-every 3 --steps 6 --config nano --kill-at 5 train";
+        let args = argv(line);
+        let opts = LaunchOptions::from_args(&args).unwrap();
+        let rdv: SocketAddr = "127.0.0.1:4242".parse().unwrap();
+        let wargv = worker_argv(&opts, &args, rdv, 1);
+        assert_eq!(wargv[0], "train");
+        for want in [
+            "--steps=6",
+            "--config=nano",
+            "--kill-at=5",
+            "--rank=1",
+            "--world=2",
+            "--rendezvous=127.0.0.1:4242",
+            "--ckpt-every=3",
+        ] {
+            assert!(wargv.iter().any(|a| a == want), "missing {want} in {wargv:?}");
+        }
+        let worlds = wargv.iter().filter(|a| a.starts_with("--world=")).count();
+        assert_eq!(worlds, 1, "the supervisor owns --world");
+    }
+}

@@ -1,0 +1,495 @@
+//! The per-process side of `qsdp launch`: standalone rank mode.
+//!
+//! A worker is an ordinary `qsdp train` (or `qsdp smoke`) invocation
+//! that discovers its elastic identity from `--rank`/`QSDP_RANK` (and
+//! the companion world/rendezvous settings — flags win over
+//! environment). It joins the rendezvous for an epoch, trains over an
+//! [`ElasticFabric`], checkpoints every `--ckpt-every` steps under
+//! `ckpt_dir/rank{r}/`, and on a wire fault re-rendezvouses, rolls
+//! back to the epoch's agreed `restore_step`, and keeps going instead
+//! of aborting the job.
+//!
+//! The `smoke` job is the multi-process acceptance vehicle: a tiny
+//! fully-checkpointed iteration (gather → elementwise map →
+//! reduce-scatter, pure IEEE ops only, so every binary computes the
+//! same bits) whose final state digest is reproducible by
+//! [`smoke_reference_digest`] in-process — kill any rank mid-run and
+//! the recovered run must still print the reference digest.
+
+use super::fabric::{ElasticFabric, ElasticHandle, RecoveryReport};
+use crate::collectives::{AsyncFabric, Collective, TrafficLedger};
+use crate::config::{ElasticPeer, FabricKind, RunConfig};
+use crate::coordinator::checkpoint::{latest_step, prune_steps, step_path, Checkpoint};
+use crate::coordinator::{Trainer, TrainerOptions};
+use crate::metrics::TrainLog;
+use crate::model::spec::artifacts_root;
+use crate::quant::{EncodedTensor, Fp32Codec};
+use crate::runtime::Engine;
+use crate::sim::Topology;
+use crate::util::args::Args;
+use crate::util::Pcg64;
+use anyhow::{ensure, Context, Result};
+use std::net::{IpAddr, SocketAddr};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Step checkpoints retained per rank (plus the step-0 recovery floor).
+const KEEP_CKPTS: usize = 4;
+
+/// Flag value if present, else the environment variable (the launch
+/// supervisor sets both; flags win so a human can override).
+fn flag_or_env(args: &Args, flag: &str, env: &str) -> Option<String> {
+    args.get(flag).map(str::to_string).or_else(|| std::env::var(env).ok())
+}
+
+/// Elastic identity of one worker process, resolved from flags and
+/// `QSDP_*` environment variables.
+#[derive(Clone, Debug)]
+pub struct WorkerContext {
+    pub rank: usize,
+    pub world: usize,
+    pub rendezvous: SocketAddr,
+    /// Root checkpoint directory; this rank writes under `rank{r}/`.
+    pub ckpt_dir: PathBuf,
+    /// Checkpoint every k steps (0 = never — recovery then always
+    /// rolls back to step 0).
+    pub ckpt_every: u64,
+    pub stall_ms: u64,
+    pub rendezvous_timeout_ms: u64,
+    /// How many times the supervisor has restarted this rank already
+    /// (`QSDP_RESTARTS`). Gates the stale-solo-epoch guard.
+    pub restarts: u64,
+}
+
+impl WorkerContext {
+    /// `Some(ctx)` when this process is an elastic worker (a rank was
+    /// given), `None` for ordinary single-process runs.
+    pub fn detect(args: &Args) -> Result<Option<WorkerContext>> {
+        let Some(rank) = flag_or_env(args, "rank", "QSDP_RANK") else {
+            return Ok(None);
+        };
+        let rank: usize = rank.parse().context("parsing --rank / QSDP_RANK")?;
+        let world: usize = flag_or_env(args, "world", "QSDP_WORLD")
+            .context("elastic worker: --world / QSDP_WORLD is required alongside --rank")?
+            .parse()
+            .context("parsing --world / QSDP_WORLD")?;
+        ensure!(world > 0, "elastic worker: world must be positive");
+        ensure!(rank < world, "elastic worker: rank {rank} outside world {world}");
+        let rendezvous: SocketAddr = flag_or_env(args, "rendezvous", "QSDP_RENDEZVOUS")
+            .context("elastic worker: --rendezvous / QSDP_RENDEZVOUS is required alongside --rank")?
+            .parse()
+            .context("parsing --rendezvous / QSDP_RENDEZVOUS")?;
+        let ckpt_dir = flag_or_env(args, "ckpt-dir", "QSDP_CKPT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| std::env::temp_dir().join("qsdp-elastic"));
+        let restarts = flag_or_env(args, "restarts", "QSDP_RESTARTS")
+            .map(|s| s.parse::<u64>().context("parsing --restarts / QSDP_RESTARTS"))
+            .transpose()?
+            .unwrap_or(0);
+        Ok(Some(WorkerContext {
+            rank,
+            world,
+            rendezvous,
+            ckpt_dir,
+            ckpt_every: args.u64_or("ckpt-every", 5),
+            stall_ms: args.u64_or("stall-ms", 2000),
+            rendezvous_timeout_ms: args.u64_or("rendezvous-timeout-ms", 30_000),
+            restarts,
+        }))
+    }
+
+    /// This rank's private checkpoint directory.
+    pub fn rank_dir(&self) -> PathBuf {
+        self.ckpt_dir.join(format!("rank{}", self.rank))
+    }
+
+    fn peer(&self, ckpt_step: u64) -> ElasticPeer {
+        ElasticPeer {
+            rank: self.rank,
+            rendezvous: self.rendezvous,
+            stall_ms: self.stall_ms,
+            rendezvous_timeout_ms: self.rendezvous_timeout_ms,
+            ckpt_step,
+        }
+    }
+}
+
+/// Refuse an epoch that smells like a stale restart: a rank that was
+/// restarted after its peers already formed a ring without it would
+/// otherwise fork the job into a second solo "ring". Exiting nonzero
+/// hands the decision back to the supervisor, whose restart budget
+/// bounds the retries. The lone survivor of a two-rank world is
+/// legitimate degraded operation, so `world == 2` first-launch solos
+/// pass.
+fn guard_stale_epoch(members: usize, world: usize, restarts: u64) -> Result<()> {
+    ensure!(
+        !(members == 1 && world > 1 && (restarts > 0 || world > 2)),
+        "elastic: refusing a solo epoch at world {world} (restart #{restarts}) — \
+         peers likely formed a ring without us; exiting for a supervised retry"
+    );
+    Ok(())
+}
+
+/// Re-rendezvous after a wire fault, offering our newest checkpoint,
+/// and vet the resulting epoch.
+fn recover_and_guard(
+    handle: &ElasticHandle,
+    rank_dir: &Path,
+    ctx: &WorkerContext,
+) -> Result<RecoveryReport> {
+    let offered = latest_step(rank_dir).unwrap_or(0);
+    let report = handle.recover(offered)?;
+    guard_stale_epoch(report.members.len(), ctx.world, ctx.restarts)?;
+    eprintln!(
+        "elastic: rank {} rejoined at epoch {} ({} members, restore step {}{})",
+        ctx.rank,
+        report.epoch,
+        report.members.len(),
+        report.restore_step,
+        if report.degraded { ", degraded" } else { "" }
+    );
+    Ok(report)
+}
+
+/// Fresh trainer over the live elastic core, rolled back to
+/// `restore_step`. Step 0 needs no file — every replica regenerates
+/// the seed-derived initial state identically.
+fn rebuild_trainer(
+    engine: &Arc<Engine>,
+    root: &Path,
+    cfg: &RunConfig,
+    opts: &TrainerOptions,
+    handle: &ElasticHandle,
+    rank_dir: &Path,
+    restore_step: u64,
+) -> Result<Trainer> {
+    let mut tr = Trainer::with_fabric(
+        Arc::clone(engine),
+        root,
+        cfg.clone(),
+        opts.clone(),
+        Box::new(handle.fabric()),
+    )?;
+    if restore_step > 0 {
+        tr.load_checkpoint(&step_path(rank_dir, restore_step))
+            .with_context(|| format!("restoring checkpoint step {restore_step}"))?;
+    }
+    Ok(tr)
+}
+
+/// Atomic step checkpoint + retention for the training job.
+fn save_train_checkpoint(tr: &Trainer, rank_dir: &Path) -> Result<()> {
+    let path = step_path(rank_dir, tr.steps_done());
+    let tmp = path.with_extension("tmp");
+    tr.save_checkpoint(&tmp)?;
+    std::fs::rename(&tmp, &path).with_context(|| format!("committing {}", path.display()))?;
+    prune_steps(rank_dir, KEEP_CKPTS)
+}
+
+/// Per-step loss bits, written next to the checkpoints — exact (hex
+/// f64 bits, no decimal rounding), so the launch-vs-in-process
+/// differential pin can demand bitwise equality.
+fn write_loss_bits(path: &Path, log: &TrainLog) -> Result<()> {
+    let mut out = String::from("step,loss_bits\n");
+    for r in &log.steps {
+        out.push_str(&format!("{},{:016x}\n", r.step, r.loss.to_bits()));
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// `qsdp train` in standalone rank mode: the whole training loop with
+/// fault polling, checkpointing, and reconnect-with-recovery.
+pub fn run_train_worker(ctx: &WorkerContext, args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::from_args(args)?;
+    ensure!(
+        cfg.topo.world() == ctx.world,
+        "elastic worker: topology world {} != launch world {}",
+        cfg.topo.world(),
+        ctx.world
+    );
+    let rank_dir = ctx.rank_dir();
+    std::fs::create_dir_all(&rank_dir)?;
+    let offered = latest_step(&rank_dir).unwrap_or(0);
+    cfg.fabric = FabricKind::Elastic;
+    cfg.fabric_opts.elastic = Some(ctx.peer(offered));
+    let fabric = ElasticFabric::connect(
+        cfg.topo,
+        ctx.peer(offered),
+        cfg.fabric_opts.socket_addr,
+        cfg.fabric_opts.check_every,
+    )?;
+    let handle = fabric.handle();
+    let membership = handle.membership();
+    guard_stale_epoch(membership.members.len(), ctx.world, ctx.restarts)?;
+    eprintln!(
+        "elastic: rank {} joined epoch {} ({} members, restore step {})",
+        ctx.rank,
+        membership.epoch,
+        membership.members.len(),
+        membership.restore_step
+    );
+    let opts = TrainerOptions {
+        log_every: if ctx.rank == 0 { args.u64_or("log-every", 10) } else { 0 },
+    };
+    let engine = crate::experiments::traindrv::engine();
+    let root = artifacts_root();
+    let restore = membership.restore_step;
+    let mut tr = rebuild_trainer(&engine, &root, &cfg, &opts, &handle, &rank_dir, restore)?;
+    while tr.steps_done() < cfg.steps {
+        tr.run(1)?;
+        if let Some(fault) = handle.take_fault() {
+            eprintln!("elastic: rank {} wire fault: {fault}", ctx.rank);
+            let report = recover_and_guard(&handle, &rank_dir, ctx)?;
+            let restore = report.restore_step;
+            tr = rebuild_trainer(&engine, &root, &cfg, &opts, &handle, &rank_dir, restore)?;
+            continue;
+        }
+        if ctx.ckpt_every > 0 && tr.steps_done() % ctx.ckpt_every == 0 {
+            save_train_checkpoint(&tr, &rank_dir)?;
+        }
+    }
+    write_loss_bits(&rank_dir.join("losses.csv"), &tr.log)?;
+    if let Some(r) = tr.log.steps.last() {
+        println!("elastic: rank {} finished — step {}, loss {:.4}", ctx.rank, r.step, r.loss);
+    } else {
+        println!("elastic: rank {} finished at step {}", ctx.rank, tr.steps_done());
+    }
+    Ok(())
+}
+
+/// FNV-1a over the f32 bit patterns: the smoke job's state
+/// fingerprint. Bit-exact by construction — any single flipped
+/// mantissa bit anywhere changes it.
+pub fn state_digest(x: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in x {
+        h ^= u64::from(v.to_bits());
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Seed-derived initial smoke state (identical on every replica).
+fn smoke_init(n: usize, seed: u64) -> Vec<f32> {
+    let mut x = vec![0.0f32; n];
+    Pcg64::new(seed, 0x57A7E).fill_normal(&mut x, 1.0);
+    x
+}
+
+/// One smoke iteration: AllGather the sharded state, derive per-rank
+/// contributions with pure IEEE add/mul (no transcendentals, no FMA —
+/// the digest must be bit-stable across binaries), ReduceScatter them
+/// back, and contract so values stay bounded. Depends only on
+/// `(x, iter, seed)`, so replay from a checkpoint is bit-identical.
+fn smoke_step(
+    fabric: &dyn Collective,
+    x: &mut [f32],
+    iter: u64,
+    seed: u64,
+    ledger: &mut TrafficLedger,
+    abort_after_gather: bool,
+) {
+    let topo = fabric.topo();
+    let p = topo.world();
+    let n = x.len();
+    let shards: Vec<EncodedTensor> =
+        (0..p).map(|r| EncodedTensor::fp32(&x[topo.shard_range(n, r)])).collect();
+    let gathered = fabric.all_gather(&shards, ledger);
+    if abort_after_gather {
+        eprintln!("elastic: smoke chaos kill at iter {iter}");
+        std::process::abort();
+    }
+    let inputs: Vec<Vec<f32>> = (0..p)
+        .map(|r| {
+            gathered
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v * 0.5 + i as f32 * 1e-4 + r as f32 * 1e-2)
+                .collect()
+        })
+        .collect();
+    let mut rng = Pcg64::new(seed ^ iter, 0xE1A);
+    let outs = fabric.reduce_scatter(&inputs, &Fp32Codec, &mut rng, ledger);
+    for (r, out) in outs.iter().enumerate() {
+        x[topo.shard_range(n, r)].copy_from_slice(out);
+    }
+    for v in x.iter_mut() {
+        *v *= 1.0 / (p as f32 + 1.0);
+    }
+}
+
+/// Restore smoke state for `step` (0 = regenerate from the seed; no
+/// file needed). Returns `(state, completed_iters)`.
+fn smoke_restore(rank_dir: &Path, step: u64, n: usize, seed: u64) -> Result<(Vec<f32>, u64)> {
+    if step == 0 {
+        return Ok((smoke_init(n, seed), 0));
+    }
+    let ck = Checkpoint::load(&step_path(rank_dir, step))?;
+    ensure!(ck.names == ["smoke_x"], "unexpected smoke checkpoint contents");
+    ensure!(ck.params[0].len() == n, "smoke checkpoint length mismatch");
+    Ok((ck.params[0].clone(), ck.step))
+}
+
+/// Atomic smoke checkpoint after `iter` completed iterations.
+fn smoke_save(rank_dir: &Path, iter: u64, x: &[f32]) -> Result<()> {
+    let ck = Checkpoint {
+        step: iter,
+        names: vec!["smoke_x".into()],
+        params: vec![x.to_vec()],
+        adam_m: vec![Vec::new()],
+        adam_v: vec![Vec::new()],
+    };
+    ck.save_atomic(&step_path(rank_dir, iter))?;
+    prune_steps(rank_dir, KEEP_CKPTS)
+}
+
+/// `qsdp smoke` in standalone rank mode. `--kill-at N --kill-rank R`
+/// makes rank R abort mid-collective at iteration N on its *first*
+/// incarnation only — the chaos hook the process-kill test drives.
+pub fn run_smoke(ctx: &WorkerContext, args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 4096);
+    let iters = args.u64_or("iters", 40);
+    let seed = args.u64_or("seed", 7);
+    let sleep_ms = args.u64_or("iter-sleep-ms", 0);
+    let kill_at = args.u64_or("kill-at", 0);
+    let kill_rank = args.usize_or("kill-rank", 0);
+    let bind: IpAddr = args
+        .str_or("fabric-addr", "127.0.0.1")
+        .parse()
+        .context("parsing --fabric-addr")?;
+    // Mirror every collective: re-admission hinges on survivors
+    // noticing a dead peer within about one collective call.
+    let check_every = args.u64_or("fabric-check-every", 1);
+    let rank_dir = ctx.rank_dir();
+    std::fs::create_dir_all(&rank_dir)?;
+    let offered = latest_step(&rank_dir).unwrap_or(0);
+    let topo = Topology::new(1, ctx.world);
+    let fabric = ElasticFabric::connect(topo, ctx.peer(offered), bind, check_every)?;
+    let handle = fabric.handle();
+    let membership = handle.membership();
+    guard_stale_epoch(membership.members.len(), ctx.world, ctx.restarts)?;
+    let (mut x, mut iter) = smoke_restore(&rank_dir, membership.restore_step, n, seed)?;
+    let mut ledger = TrafficLedger::new();
+    while iter < iters {
+        let chaos = ctx.restarts == 0 && kill_at > 0 && ctx.rank == kill_rank && iter == kill_at;
+        smoke_step(&fabric, &mut x, iter, seed, &mut ledger, chaos);
+        if let Some(fault) = handle.take_fault() {
+            eprintln!("elastic: smoke rank {} wire fault: {fault}", ctx.rank);
+            let report = recover_and_guard(&handle, &rank_dir, ctx)?;
+            (x, iter) = smoke_restore(&rank_dir, report.restore_step, n, seed)?;
+            continue;
+        }
+        iter += 1;
+        if ctx.ckpt_every > 0 && iter % ctx.ckpt_every == 0 {
+            smoke_save(&rank_dir, iter, &x)?;
+        }
+        if sleep_ms > 0 {
+            std::thread::sleep(Duration::from_millis(sleep_ms));
+        }
+    }
+    println!("smoke rank={} iters={iters} digest={:016x}", ctx.rank, state_digest(&x));
+    Ok(())
+}
+
+/// The smoke job's expected digest, computed in-process over the
+/// channel-link reference fabric (the same engine that backs every
+/// elastic worker's inner runtime) — the oracle the chaos test
+/// compares worker output against.
+pub fn smoke_reference_digest(world: usize, n: usize, iters: u64, seed: u64) -> u64 {
+    let fabric = AsyncFabric::new(Topology::new(1, world));
+    let mut x = smoke_init(n, seed);
+    let mut ledger = TrafficLedger::new();
+    for iter in 0..iters {
+        smoke_step(&fabric, &mut x, iter, seed, &mut ledger, false);
+    }
+    state_digest(&x)
+}
+
+/// `qsdp smoke`: standalone rank mode when a rank is given, otherwise
+/// print the in-process reference digest for the same parameters.
+pub fn cmd_smoke(args: &Args) -> Result<()> {
+    if let Some(ctx) = WorkerContext::detect(args)? {
+        return run_smoke(&ctx, args);
+    }
+    let world = args.usize_or("world", 2);
+    let n = args.usize_or("n", 4096);
+    let iters = args.u64_or("iters", 40);
+    let seed = args.u64_or("seed", 7);
+    let digest = smoke_reference_digest(world, n, iters, seed);
+    println!("smoke reference world={world} iters={iters} digest={digest:016x}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(line: &str) -> Args {
+        Args::parse(line.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn elastic_worker_context_detection() {
+        assert!(WorkerContext::detect(&argv("train")).unwrap().is_none());
+        let args = argv(
+            "train --rank 2 --world 4 --rendezvous 127.0.0.1:9999 \
+             --ckpt-dir /tmp/qsdp-wctx --ckpt-every 3",
+        );
+        let ctx = WorkerContext::detect(&args).unwrap().expect("worker context");
+        assert_eq!((ctx.rank, ctx.world), (2, 4));
+        assert_eq!(ctx.ckpt_every, 3);
+        assert_eq!(ctx.rank_dir(), PathBuf::from("/tmp/qsdp-wctx/rank2"));
+        assert!(WorkerContext::detect(&argv("train --rank 1")).is_err(), "world is required");
+        let bad = argv("train --rank 5 --world 4 --rendezvous 127.0.0.1:9");
+        assert!(WorkerContext::detect(&bad).is_err(), "rank outside world");
+    }
+
+    #[test]
+    fn elastic_stale_solo_guard() {
+        guard_stale_epoch(3, 4, 0).expect("normal degraded epoch passes");
+        guard_stale_epoch(1, 1, 0).expect("world 1 is always solo");
+        guard_stale_epoch(1, 2, 0).expect("lone survivor of a pair keeps going");
+        assert!(guard_stale_epoch(1, 2, 1).is_err(), "restarted rank must not fork the pair");
+        assert!(guard_stale_epoch(1, 4, 0).is_err(), "solo at world 4 is a stale epoch");
+    }
+
+    #[test]
+    fn elastic_smoke_digest_is_deterministic_and_sensitive() {
+        let a = smoke_reference_digest(3, 257, 6, 7);
+        assert_eq!(a, smoke_reference_digest(3, 257, 6, 7));
+        assert_ne!(a, smoke_reference_digest(3, 257, 6, 8), "seed must matter");
+        assert_ne!(a, smoke_reference_digest(3, 257, 7, 7), "iteration count must matter");
+        let mut x = smoke_init(64, 1);
+        let d0 = state_digest(&x);
+        x[17] = f32::from_bits(x[17].to_bits() ^ 1);
+        assert_ne!(d0, state_digest(&x), "a single flipped bit must change the digest");
+    }
+
+    #[test]
+    fn elastic_smoke_checkpoint_roundtrip_and_rollback_replay() {
+        let dir = std::env::temp_dir().join("qsdp_smoke_rollback_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let fabric = AsyncFabric::new(Topology::new(1, 2));
+        let mut ledger = TrafficLedger::new();
+        let mut x = smoke_init(129, 3);
+        for iter in 0..5u64 {
+            smoke_step(&fabric, &mut x, iter, 3, &mut ledger, false);
+            if iter + 1 == 4 {
+                smoke_save(&dir, iter + 1, &x).unwrap();
+            }
+        }
+        let (mut y, mut iter) = smoke_restore(&dir, 4, 129, 3).unwrap();
+        assert_eq!(iter, 4, "checkpoint records completed iterations");
+        while iter < 8 {
+            smoke_step(&fabric, &mut y, iter, 3, &mut ledger, false);
+            iter += 1;
+        }
+        assert_eq!(
+            state_digest(&y),
+            smoke_reference_digest(2, 129, 8, 3),
+            "rollback + replay must be bit-identical to an uninterrupted run"
+        );
+    }
+}

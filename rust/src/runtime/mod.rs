@@ -10,6 +10,7 @@
 //! Python runs only at build time (`make artifacts`); the executables
 //! compiled here are the entire compute engine of the training runtime.
 
+pub mod elastic;
 pub mod engine;
 pub mod gpt;
 

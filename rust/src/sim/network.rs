@@ -194,11 +194,45 @@ impl LinkProfile {
         let inter_links = if topo.nodes > 1 { topo.nodes } else { 0 };
         LinkProfile { intra_links: p - inter_links, inter_links, concurrent_msgs: p }
     }
+
+    /// A `p`-rank ring where consecutive ranks are packed onto hosts
+    /// of `per_host` ranks each (the elastic launch placement: worker
+    /// processes fill one machine before spilling to the next). The
+    /// last host may be partial. Equivalent to [`LinkProfile::ring`]
+    /// on `Topology::new(hosts, per_host)` when `per_host` divides
+    /// `p`; this constructor also covers the ragged case a restarted
+    /// or missing rank leaves behind.
+    pub fn per_host(p: usize, per_host: usize) -> Self {
+        if p <= 1 {
+            return Self::serialized();
+        }
+        let hosts = p.div_ceil(per_host.max(1));
+        let inter_links = if hosts > 1 { hosts } else { 0 };
+        LinkProfile { intra_links: p - inter_links, inter_links, concurrent_msgs: p }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_host_link_classes_match_ring_topologies() {
+        // Everything on one host: identical to a single-node ring.
+        assert_eq!(LinkProfile::per_host(4, 4), LinkProfile::ring(&Topology::new(1, 4)));
+        assert_eq!(LinkProfile::per_host(4, 8), LinkProfile::ring(&Topology::new(1, 4)));
+        // Two ranks per host: identical to the 2x2 ring.
+        assert_eq!(LinkProfile::per_host(4, 2), LinkProfile::ring(&Topology::new(2, 2)));
+        // One rank per host: every hop crosses a node boundary.
+        let p = LinkProfile::per_host(4, 1);
+        assert_eq!((p.intra_links, p.inter_links), (0, 4));
+        // Ragged: 5 ranks at 2 per host occupy 3 hosts.
+        let p = LinkProfile::per_host(5, 2);
+        assert_eq!((p.intra_links, p.inter_links, p.concurrent_msgs), (2, 3, 5));
+        // Degenerate worlds serialize.
+        assert_eq!(LinkProfile::per_host(1, 4), LinkProfile::serialized());
+        assert_eq!(LinkProfile::per_host(0, 0), LinkProfile::serialized());
+    }
 
     #[test]
     fn achieved_bandwidth_saturates() {

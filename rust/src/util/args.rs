@@ -20,7 +20,8 @@ use std::collections::HashMap;
 /// unless it is an explicit boolean literal. Extend this list when
 /// adding a boolean flag — and only then, so a future value-typed flag
 /// can never be silently misparsed by appearing here.
-pub const BOOL_FLAGS: &[&str] = &["fabric-persistent", "fine", "full", "overlap", "snapshot-only"];
+pub const BOOL_FLAGS: &[&str] =
+    &["fabric-persistent", "fine", "full", "overlap", "skip-if-no-loopback", "snapshot-only"];
 
 fn is_bool_literal(s: &str) -> bool {
     matches!(s, "true" | "false" | "1" | "0" | "yes" | "no")
@@ -94,6 +95,16 @@ impl Args {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
             .unwrap_or(default)
+    }
+
+    /// Every parsed flag as `(key, value)`, sorted by key — what the
+    /// launch supervisor forwards to its workers (minus the flags it
+    /// owns). Sorted so the forwarded argv is deterministic.
+    pub fn flags(&self) -> Vec<(&str, &str)> {
+        let mut out: Vec<(&str, &str)> =
+            self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        out.sort_unstable();
+        out
     }
 
     /// Boolean getter. Accepts the explicit literals
@@ -183,6 +194,15 @@ mod tests {
         // the getter must fail loudly rather than read it as false.
         let a = parse("--verbose=banana");
         a.bool_or("verbose", false);
+    }
+
+    #[test]
+    fn flags_listing_is_sorted_and_complete() {
+        let a = parse("train --steps 6 --config nano --overlap --lr=0.01");
+        assert_eq!(
+            a.flags(),
+            vec![("config", "nano"), ("lr", "0.01"), ("overlap", "true"), ("steps", "6")]
+        );
     }
 
     #[test]

@@ -18,9 +18,13 @@
 //! pinned by the unit tests in `collectives::socket_fabric`.
 
 use qsdp::collectives::{loopback_available, AsyncFabric, Collective, SocketFabric, TrafficLedger};
+use qsdp::config::ElasticPeer;
 use qsdp::quant::EncodedTensor;
+use qsdp::runtime::elastic::{smoke_reference_digest, ElasticFabric, RendezvousServer};
 use qsdp::sim::Topology;
+use std::net::{IpAddr, Ipv4Addr};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
 
 fn fp32_shards(topo: Topology, n: usize) -> Vec<EncodedTensor> {
     let full: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
@@ -148,4 +152,134 @@ fn fabric_failure_world2_dead_peer_is_diagnosed() {
     .expect_err("dead peer must fail the collective");
     let msg = panic_text(err);
     assert!(msg.contains("rank 1"), "must name the dead rank: {msg}");
+}
+
+#[test]
+fn fabric_failure_elastic_peer_death_recovers_with_epoch_bump() {
+    // The elastic contract: a dead peer latches a *fault* instead of
+    // panicking, survivors rendezvous on a bumped epoch that routes
+    // around the hole, and the degraded ring still produces
+    // full-world bits — all within a bounded recovery time.
+    if !loopback_available() {
+        eprintln!("SKIP: loopback TCP unavailable in this sandbox; elastic recovery test not run");
+        return;
+    }
+    let world = 4;
+    let topo = Topology::new(1, world);
+    let n = 256;
+    let server = RendezvousServer::spawn(
+        IpAddr::V4(Ipv4Addr::LOCALHOST),
+        world,
+        Duration::from_secs(20),
+        Duration::from_secs(3),
+    )
+    .expect("rendezvous server");
+    let rdv = server.addr();
+    let full: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let full = full.clone();
+            std::thread::spawn(move || {
+                let peer = ElasticPeer {
+                    rank,
+                    rendezvous: rdv,
+                    stall_ms: 700,
+                    rendezvous_timeout_ms: 20_000,
+                    ckpt_step: 0,
+                };
+                let fabric = ElasticFabric::connect(topo, peer, IpAddr::V4(Ipv4Addr::LOCALHOST), 1)
+                    .expect("connect");
+                let handle = fabric.handle();
+                let shards = fp32_shards(topo, n);
+                let mut ledger = TrafficLedger::new();
+                for _ in 0..3 {
+                    assert_eq!(fabric.all_gather(&shards, &mut ledger), full);
+                    assert!(handle.take_fault().is_none(), "healthy ring must not fault");
+                }
+                if rank == 2 {
+                    return; // dies: dropping the fabric closes its ring sockets
+                }
+                let mut fault = None;
+                for _ in 0..50 {
+                    assert_eq!(
+                        fabric.all_gather(&shards, &mut ledger),
+                        full,
+                        "a faulted collective must still serve the inner result"
+                    );
+                    fault = handle.take_fault();
+                    if fault.is_some() {
+                        break;
+                    }
+                }
+                fault.expect("survivors must detect the dead peer");
+                let t0 = Instant::now();
+                let report = handle.recover(0).expect("recovery must succeed");
+                assert!(t0.elapsed() < Duration::from_secs(15), "recovery must be bounded");
+                assert!(report.epoch >= 2, "recovery must bump the epoch");
+                assert!(report.degraded, "three of four members is a degraded ring");
+                assert_eq!(report.members, vec![0, 1, 3]);
+                assert_eq!(report.restore_step, 0, "nobody offered a checkpoint");
+                assert_eq!(
+                    handle.fabric().all_gather(&shards, &mut ledger),
+                    full,
+                    "the degraded ring must still produce full-world bits"
+                );
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("no rank may panic");
+    }
+}
+
+#[test]
+fn fabric_failure_elastic_process_kill_recovers_and_preserves_digest() {
+    // The acceptance pin for `qsdp launch`: kill worker rank 1
+    // mid-collective at iteration 5 of a 30-iteration smoke job. The
+    // supervisor must restart it, the ring must re-admit it at epoch
+    // 2 after a checkpoint rollback, and every rank's final digest
+    // must equal the in-process reference — without the supervisor
+    // hanging (a 120 s watchdog turns a hang into a clean failure).
+    if !loopback_available() {
+        eprintln!("SKIP: loopback TCP unavailable in this sandbox; process-kill test not run");
+        return;
+    }
+    let exe = env!("CARGO_BIN_EXE_qsdp");
+    let dir = std::env::temp_dir().join("qsdp_elastic_kill_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = std::process::Command::new(exe)
+        .args([
+            "launch",
+            "--world=3",
+            "--ckpt-every=2",
+            "--stall-ms=500",
+            "--launch-timeout-s=120",
+            &format!("--ckpt-dir={}", dir.display()),
+            "--iters=30",
+            "--n=2048",
+            "--iter-sleep-ms=25",
+            "--seed=7",
+            "--kill-at=5",
+            "--kill-rank=1",
+            "smoke",
+        ])
+        .output()
+        .expect("launch must execute");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launch must succeed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    let spawned = stdout.matches("spawned").count();
+    assert!(spawned >= 4, "3 initial workers + >=1 restart, saw {spawned}:\n{stdout}");
+    assert!(stderr.contains("died"), "the supervisor must report the kill:\n{stderr}");
+    assert!(
+        stdout.contains("epoch 2 formed") || stderr.contains("epoch 2 formed"),
+        "recovery must form epoch 2\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    let expect = format!("digest={:016x}", smoke_reference_digest(3, 2048, 30, 7));
+    let digests: Vec<&str> =
+        stdout.lines().filter(|l| l.starts_with("smoke rank=")).collect();
+    assert_eq!(digests.len(), 3, "every rank must finish and report:\n{stdout}");
+    for line in digests {
+        assert!(line.ends_with(&expect), "digest mismatch: {line} (want {expect})");
+    }
 }

@@ -91,6 +91,60 @@ fn fabric_trainer_fp32_loss_identical_across_backends() {
 }
 
 #[test]
+fn launch_train_matches_in_process_socket_bitwise() {
+    // The elastic acceptance pin: `qsdp launch --world 2 train` runs
+    // two real OS processes, each training the replicated job over the
+    // elastic fabric; their per-step FP32 loss bits must equal an
+    // in-process `--fabric socket` run of the same job exactly.
+    if skip() {
+        return;
+    }
+    if !qsdp::collectives::loopback_available() {
+        eprintln!("SKIP: loopback TCP unavailable in this sandbox; launch differential not run");
+        return;
+    }
+    let dir = std::env::temp_dir().join("qsdp_launch_train_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let job = "--config=nano --policy=exact --steps=6 --eval-every=0 --corpus-len=30000";
+    let exe = env!("CARGO_BIN_EXE_qsdp");
+    let mut argv: Vec<String> = vec![
+        "launch".into(),
+        "--nodes=2".into(),
+        "--gpus-per-node=1".into(),
+        "--launch-timeout-s=300".into(),
+        // Engine setup skew between the two processes must not trip
+        // the wire stall detector in this fault-free pin.
+        "--stall-ms=10000".into(),
+        format!("--ckpt-dir={}", dir.display()),
+    ];
+    argv.extend(job.split_whitespace().map(str::to_string));
+    argv.push("train".into());
+    let out = std::process::Command::new(exe).args(&argv).output().expect("launch must execute");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launch must succeed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+
+    // In-process reference over the socket fabric, same job flags.
+    let line = format!("train {job} --nodes=2 --gpus-per-node=1");
+    let rargs = Args::parse(line.split_whitespace().map(str::to_string));
+    let mut c = RunConfig::from_args(&rargs).unwrap();
+    c.fabric = FabricKind::Socket;
+    let eng = Arc::new(Engine::cpu().unwrap());
+    let mut tr = Trainer::new(eng, &artifacts_root(), c, TrainerOptions::default()).unwrap();
+    tr.run(6).unwrap();
+    let mut expect = String::from("step,loss_bits\n");
+    for r in &tr.log.steps {
+        expect.push_str(&format!("{},{:016x}\n", r.step, r.loss.to_bits()));
+    }
+    for rank in 0..2 {
+        let path = dir.join(format!("rank{rank}")).join("losses.csv");
+        let got = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        assert_eq!(got, expect, "rank {rank} loss bits diverged from the in-process socket run");
+    }
+}
+
+#[test]
 fn world1_fsdp_equals_plain_training() {
     // With one rank and no quantization, the FSDP engine must reproduce
     // a hand-rolled training loop exactly (same rng/data/optimizer).
