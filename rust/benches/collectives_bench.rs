@@ -31,8 +31,8 @@
 //! printed note and no socket or elastic rows.
 
 use qsdp::collectives::{
-    loopback_available, AsyncFabric, Collective, FlatFabric, LockstepFabric, SocketFabric,
-    TrafficLedger,
+    loopback_available, two_level_reduce_scatter, AsyncFabric, Collective, FlatFabric,
+    LockstepFabric, SocketFabric, TensorEf, TrafficLedger, TwoLevelCodecs,
 };
 use qsdp::config::ElasticPeer;
 use qsdp::model::ParamKind;
@@ -247,6 +247,46 @@ fn snapshot_grid() -> Vec<BenchRow> {
             median_ns: med,
         });
     }
+
+    // Two-level hierarchical ReduceScatter (8-bit block intra hop,
+    // 4-bit block inter hop, error feedback carried across reps) — its
+    // gap to the flat single-codec rows above is the extra encode pass
+    // per node partial; its NIC bytes are roughly half the flat 8-bit
+    // row's (the acceptance ratio tests/hier.rs pins).
+    {
+        let codecs = TwoLevelCodecs::default();
+        let mut ef = TensorEf::zeros(&topo, n);
+        let mut rng = Pcg64::seeded(SNAP_SEED);
+        let mut ledger = TrafficLedger::new();
+        for _ in 0..SNAP_WARMUP {
+            ledger.reset();
+            std::hint::black_box(two_level_reduce_scatter(
+                &topo,
+                &inputs,
+                &codecs,
+                &mut ef,
+                &mut rng,
+                &mut ledger,
+            ));
+        }
+        let med = median_ns(SNAP_REPS, || {
+            ledger.reset();
+            std::hint::black_box(two_level_reduce_scatter(
+                &topo,
+                &inputs,
+                &codecs,
+                &mut ef,
+                &mut rng,
+                &mut ledger,
+            ));
+        });
+        rows.push(BenchRow {
+            op: "reduce_scatter",
+            fabric: "two-level",
+            codec: "block8/4",
+            median_ns: med,
+        });
+    }
     elastic_rows(&mut rows);
     rows
 }
@@ -438,6 +478,20 @@ fn print_snapshot(rows: &[BenchRow]) {
                 nb / b
             );
         }
+    }
+    // Hierarchical host-side cost: the two-level 8/4-bit RS vs the flat
+    // 8-bit lockstep RS (the NIC-byte win is pinned in tests/hier.rs;
+    // this is the CPU price paid for it).
+    if let (Some(f), Some(h)) = (
+        find_ns(rows, "reduce_scatter", "lockstep", "minmax8"),
+        find_ns(rows, "reduce_scatter", "two-level", "block8/4"),
+    ) {
+        println!(
+            "reduce_scatter        : flat-8bit  {:9.0} ns vs two-level 8/4  {:9.0} ns -> {:.2}x host tax for ~2x NIC-byte cut",
+            f,
+            h,
+            h / f
+        );
     }
 }
 

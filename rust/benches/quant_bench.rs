@@ -80,9 +80,9 @@ fn main() {
             std::hint::black_box(&e);
         });
         let mut scratch = EncodedTensor::default();
-        codec.encode_into(&values, &mut scratch, &mut rng); // warm buffers
+        codec.encode_into(&values, &mut scratch, &mut rng).unwrap(); // warm buffers
         time(&format!("reuse: encode_into bits={bits} (warm scratch)"), bytes, 8, || {
-            codec.encode_into(&values, &mut scratch, &mut rng);
+            codec.encode_into(&values, &mut scratch, &mut rng).unwrap();
             std::hint::black_box(&scratch);
         });
     }

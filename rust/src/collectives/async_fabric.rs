@@ -448,7 +448,11 @@ impl Collective for AsyncFabric {
                 .unwrap_or_else(|e| {
                     panic!("async spawn-per-call all_reduce: rank {r}: {}", e.describe(r, p))
                 });
-            codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng);
+            codec_ag
+                .encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng)
+                .unwrap_or_else(|e| {
+                    panic!("async spawn-per-call all_reduce: rank {r}: {e}")
+                });
             let enc = std::mem::take(&mut scratch.enc);
             ag_rank(topo, r, &enc, &mut scratch, link).unwrap_or_else(|e| {
                 panic!("async spawn-per-call all_reduce: rank {r}: {}", e.describe(r, p))

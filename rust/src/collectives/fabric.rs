@@ -324,7 +324,9 @@ impl Collective for LockstepFabric {
             let dst_node = topo.node_of(rank);
             let mut shard = vec![0.0f32; range.len()];
             for (node, partial) in node_partials.iter().enumerate() {
-                codec.encode_into(&partial[range.clone()], &mut enc, rng);
+                codec
+                    .encode_into(&partial[range.clone()], &mut enc, rng)
+                    .unwrap_or_else(|e| panic!("lockstep reduce_scatter node {node}: {e}"));
                 let s = enc.byte_size();
                 if node != dst_node {
                     ledger.record(s, true);
@@ -410,7 +412,9 @@ impl Collective for FlatFabric {
             let dst_node = topo.node_of(rank);
             let mut shard = vec![0.0f32; range.len()];
             for (src, input) in inputs.iter().enumerate() {
-                codec.encode_into(&input[range.clone()], &mut enc, rng);
+                codec
+                    .encode_into(&input[range.clone()], &mut enc, rng)
+                    .unwrap_or_else(|e| panic!("flat reduce_scatter rank {src}: {e}"));
                 if src != rank {
                     ledger.record(enc.byte_size(), topo.node_of(src) != dst_node);
                 }

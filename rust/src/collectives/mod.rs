@@ -58,6 +58,12 @@
 //!   of `FabricKind::ALL` sweeps; see `runtime::elastic` for the epoch
 //!   protocol, fault recovery and degraded-ring semantics.
 //!
+//! Beside the backends, [`hier`] implements the **two-level quantized
+//! gradient ReduceScatter** (ZeRO++/SDP4Bit recipe): an 8-bit
+//! block-quantized intra-node hop, a 4-bit cross-node hop, and
+//! per-tensor error feedback ([`TensorEf`]) carried across steps —
+//! `--hier` routes the trainer's gradient exchange through it.
+//!
 //! The ring schedules, per-rank scratch pools, command protocol,
 //! failure cascade and shutdown-on-drop lifecycle shared by the
 //! message-passing backends live in the crate-private `ring` module
@@ -80,11 +86,13 @@
 
 pub mod async_fabric;
 pub mod fabric;
+pub mod hier;
 pub mod ledger;
 pub(crate) mod ring;
 pub mod socket_fabric;
 
 pub use async_fabric::AsyncFabric;
 pub use fabric::{Collective, CollectiveError, FlatFabric, LockstepFabric, PendingCollective};
+pub use hier::{two_level_bytes, two_level_reduce_scatter, TensorEf, TwoLevelCodecs};
 pub use ledger::TrafficLedger;
 pub use socket_fabric::{loopback_available, SocketFabric};

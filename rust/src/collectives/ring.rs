@@ -66,6 +66,10 @@ pub(crate) enum RingFault {
     /// Neither direction made progress for the transport's stall
     /// limit.
     Stalled,
+    /// The local codec refused the outgoing data (non-finite values in
+    /// a lossy encode — see [`crate::quant::EncodeError`]). Nothing was
+    /// sent; the rank's own input is the problem, not a link.
+    EncodeFailed,
 }
 
 /// A failed ring hop: which step, which class of failure, and the
@@ -93,6 +97,10 @@ impl RingError {
 
     pub(crate) fn stalled(detail: impl Into<String>) -> Self {
         RingError { step: 0, fault: RingFault::Stalled, detail: detail.into() }
+    }
+
+    pub(crate) fn encode_failed(e: crate::quant::EncodeError) -> Self {
+        RingError { step: 0, fault: RingFault::EncodeFailed, detail: e.to_string() }
     }
 
     fn at_step(mut self, step: usize) -> Self {
@@ -126,6 +134,10 @@ impl RingError {
             ),
             RingFault::Stalled => format!(
                 "ring exchange with ranks {prev}/{next} stalled at step {}: {}",
+                self.step, self.detail
+            ),
+            RingFault::EncodeFailed => format!(
+                "local encode failed at step {} (nothing sent): {}",
                 self.step, self.detail
             ),
         }
@@ -269,11 +281,15 @@ pub(crate) fn rs_ring(
     let mut res = Ok(());
     for step in 0..p - 1 {
         let send_block = (r + p - 1 - step) % p;
-        if step == 0 {
+        let encoded = if step == 0 {
             let range = topo.shard_range(n_elems, send_block);
-            codec.encode_into(&mine[range], &mut scratch.enc, rng);
+            codec.encode_into(&mine[range], &mut scratch.enc, rng)
         } else {
-            codec.encode_into(&scratch.acc, &mut scratch.enc, rng);
+            codec.encode_into(&scratch.acc, &mut scratch.enc, rng)
+        };
+        if let Err(e) = encoded {
+            res = Err(RingError::encode_failed(e).at_step(step));
+            break;
         }
         scratch.enc.to_bytes_into(&mut wire);
         scratch.ledger.record(wire.len(), inter);
@@ -320,7 +336,9 @@ pub(crate) fn world1_reduce_scatter(
     rng: &mut Pcg64,
 ) -> Vec<Vec<f32>> {
     let mut enc = EncodedTensor::default();
-    codec.encode_into(input, &mut enc, rng);
+    codec
+        .encode_into(input, &mut enc, rng)
+        .unwrap_or_else(|e| panic!("world-1 reduce_scatter: {e}"));
     #[cfg(debug_assertions)]
     {
         // Octet-level identity: NaN-safe, unlike the derived f32
@@ -558,13 +576,18 @@ fn worker_loop(
                         // it. The take/put-back keeps the message
                         // buffer warm while satisfying the borrow
                         // checker across `ag_rank`.
-                        codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng);
-                        let enc = std::mem::take(&mut scratch.enc);
-                        let res = ag_rank(topo, r, &enc, &mut scratch, link.as_mut());
-                        scratch.enc = enc;
-                        match res {
-                            Ok(()) => Ok(finish_gather(r, check, &scratch.slots, out)),
-                            Err(e) => Err(e),
+                        match codec_ag.encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng)
+                        {
+                            Err(e) => Err(RingError::encode_failed(e)),
+                            Ok(()) => {
+                                let enc = std::mem::take(&mut scratch.enc);
+                                let res = ag_rank(topo, r, &enc, &mut scratch, link.as_mut());
+                                scratch.enc = enc;
+                                match res {
+                                    Ok(()) => Ok(finish_gather(r, check, &scratch.slots, out)),
+                                    Err(e) => Err(e),
+                                }
+                            }
                         }
                     }
                 }

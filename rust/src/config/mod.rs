@@ -13,6 +13,9 @@
 //!                           — only "exact" carries FP32 gradients
 //!   "w5g4+learned"        — learned level tables for both
 //!   suffix "+det"         — deterministic (round-to-nearest) gradients
+//!   suffix "+block"       — block-wise symmetric scales (ZeRO++ style,
+//!                           128-element blocks) instead of the bucketed
+//!                           min–max grid; wins over "+learned"
 //!
 //! The collective transport is likewise data: `--fabric
 //! lockstep|flat|async|socket|elastic` selects the
@@ -255,6 +258,16 @@ pub struct RunConfig {
     /// max(compute, comm) instead of their sum. Bit-identical loss
     /// trajectories to the sequential schedule.
     pub overlap: bool,
+    /// Hierarchical two-level gradient reduce-scatter (`--hier`): 8-bit
+    /// block-quantized intra-node hop, 4-bit cross-node hop, per-tensor
+    /// error feedback carried across steps (ZeRO++/SDP4Bit recipe on
+    /// top of QSDP's filter). Requires a quantized gradient policy.
+    pub hier: bool,
+    /// hpZ-style secondary weight partition (`--hpz`): after the first
+    /// full gather of a step, repeat gathers (gradient accumulation)
+    /// are served from an intra-node replica, so cross-node weight
+    /// traffic is charged once per step instead of once per microbatch.
+    pub hpz: bool,
     /// Collective transport backend.
     pub fabric: FabricKind,
     /// Async-transport runtime knobs (persistent workers, cross-check
@@ -285,6 +298,8 @@ impl RunConfig {
             inter_gbps: args.f64_or("bandwidth", 10.0),
             n_accum: args.usize_or("accum", 1),
             overlap: args.bool_or("overlap", false),
+            hier: args.bool_or("hier", false),
+            hpz: args.bool_or("hpz", false),
             fabric: FabricKind::parse(&args.str_or("fabric", "lockstep"))?,
             fabric_opts: FabricOptions {
                 persistent: args.bool_or("fabric-persistent", true),
@@ -317,10 +332,12 @@ pub fn parse_policy(spec: &str) -> Result<QuantPolicy> {
     let base = parts.next().unwrap_or("");
     let mut learned = false;
     let mut det = false;
+    let mut block = false;
     for ext in parts {
         match ext {
             "learned" => learned = true,
             "det" => det = true,
+            "block" => block = true,
             other => bail!("unknown policy suffix {other:?}"),
         }
     }
@@ -361,6 +378,12 @@ pub fn parse_policy(spec: &str) -> Result<QuantPolicy> {
             policy.learned_grads = Some(LearnedLevels::uniform(b));
         }
     }
+    if block {
+        if policy.is_baseline() {
+            bail!("+block needs a quantized policy (e.g. w8g8+block), got {spec:?}");
+        }
+        policy.block = Some(crate::quant::DEFAULT_BLOCK);
+    }
     Ok(policy)
 }
 
@@ -374,6 +397,9 @@ pub fn policy_name(p: &QuantPolicy) -> String {
     let mut s = format!("w{w}g{g}");
     if p.learned_weights.is_some() || p.learned_grads.is_some() {
         s.push_str("+learned");
+    }
+    if p.block.is_some() {
+        s.push_str("+block");
     }
     if p.grad_bits.is_some() && !p.stochastic_grads {
         s.push_str("+det");
@@ -449,6 +475,34 @@ mod tests {
         assert!(parse_policy("w9g9").is_err());
         assert!(parse_policy("w8g8+foo").is_err());
         assert!(parse_policy("w0g4").is_err());
+    }
+
+    #[test]
+    fn block_suffix_parses_and_roundtrips() {
+        let p = parse_policy("w8g8+block").unwrap();
+        assert_eq!(p.block, Some(crate::quant::DEFAULT_BLOCK));
+        assert_eq!(policy_name(&p), "w8g8+block");
+        // composes with +det, and the name orders the suffixes stably
+        let p = parse_policy("w4g4+block+det").unwrap();
+        assert_eq!(p.block, Some(crate::quant::DEFAULT_BLOCK));
+        assert!(!p.stochastic_grads);
+        assert_eq!(policy_name(&p), "w4g4+block+det");
+        // a policy with nothing quantized has no blocks to scale
+        assert!(parse_policy("baseline+block").is_err());
+        assert!(parse_policy("exact+block").is_err());
+    }
+
+    #[test]
+    fn hier_and_hpz_flags_parse() {
+        let a = Args::parse("train".split_whitespace().map(|s| s.to_string()));
+        let c = RunConfig::from_args(&a).unwrap();
+        assert!(!c.hier && !c.hpz, "hierarchical paths must be opt-in");
+        let a = Args::parse(
+            "train --hier --hpz --policy w8g8".split_whitespace().map(|s| s.to_string()),
+        );
+        let c = RunConfig::from_args(&a).unwrap();
+        assert!(c.hier);
+        assert!(c.hpz);
     }
 
     #[test]

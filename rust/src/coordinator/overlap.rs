@@ -63,7 +63,9 @@ fn encode_tensor_shards(
     }
     let codec = policy.codec(TensorRole::Weight, store.specs[pi].kind);
     for (r, slot) in pool.iter_mut().enumerate() {
-        codec.encode_into(store.shard(pi, r), slot, rng);
+        codec
+            .encode_into(store.shard(pi, r), slot, rng)
+            .unwrap_or_else(|e| panic!("overlap gather {}: {e}", store.specs[pi].name));
     }
 }
 
@@ -187,7 +189,9 @@ fn encode_chunk(
     for (r, slot) in pool.iter_mut().enumerate() {
         let shard = store.shard(pi, r);
         let piece = piece_range(shard.len(), j, n_chunks);
-        codec.encode_into(&shard[piece], slot, rng);
+        codec
+            .encode_into(&shard[piece], slot, rng)
+            .unwrap_or_else(|e| panic!("chunked gather {}: {e}", store.specs[pi].name));
     }
 }
 

@@ -18,10 +18,10 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collectives::{Collective, TrafficLedger};
+use crate::collectives::{Collective, TensorEf, TrafficLedger, TwoLevelCodecs};
 use crate::config::RunConfig;
 use crate::data::{MarkovCorpus, Sampler};
-use crate::fsdp::ShardedStore;
+use crate::fsdp::{FlatParams, ShardedStore};
 use crate::metrics::{StepRecord, TrainLog};
 use crate::optim::{AdamState, AdamW, LrSchedule};
 use crate::quant::learned::normalize_bucketwise;
@@ -55,6 +55,16 @@ pub struct Trainer {
     eval_sampler: Sampler,
     net: NetworkModel,
     rng: Pcg64,
+    /// Two-level hop codecs for `--hier` (8-bit intra, 4-bit inter).
+    hier_codecs: TwoLevelCodecs,
+    /// Per-parameter error-feedback state for the `--hier` gradient
+    /// exchange (empty when `cfg.hier` is off, and for §5.1-filtered
+    /// tensors). EF is training state tied to the current trajectory:
+    /// it is zeroed on checkpoint restore (see
+    /// [`Trainer::load_checkpoint`]) and starts zeroed on every
+    /// trainer (re)build — which is exactly what the elastic worker's
+    /// recovery rollback does.
+    hier_ef: Vec<TensorEf>,
     t: u64,
     pub log: TrainLog,
 }
@@ -117,6 +127,24 @@ impl Trainer {
         let sched = LrSchedule::new(cfg.warmup, cfg.steps);
         let net = NetworkModel::paper(cfg.inter_gbps);
         let rng = Pcg64::new(cfg.seed, 0x5D);
+        // `--hier` EF state: one zeroed residual buffer per quantized
+        // tensor (filtered tensors ride the ordinary fabric path and
+        // carry no state).
+        let hier_ef: Vec<TensorEf> = if cfg.hier {
+            store
+                .specs
+                .iter()
+                .map(|s| {
+                    if cfg.policy.quantizes(s.kind) {
+                        TensorEf::zeros(&cfg.topo, s.numel())
+                    } else {
+                        TensorEf::empty()
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         Ok(Trainer {
             cfg,
             opts,
@@ -129,6 +157,8 @@ impl Trainer {
             eval_sampler,
             net,
             rng,
+            hier_codecs: TwoLevelCodecs::default(),
+            hier_ef,
             t: 0,
             log: TrainLog::new(),
         })
@@ -177,26 +207,36 @@ impl Trainer {
         let mut local_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(world);
         let mut loss_sum = 0.0f64;
         let mut max_compute = 0.0f64;
+        let mut gathered_cache: Option<FlatParams> = None;
         for acc in 0..n_accum {
             // `--overlap` routes the gather through the pipelined
             // scheduler (encode of tensor t+1 overlaps the wire of
             // tensor t on the ring backends) — bit-identical results,
             // so the loss trajectory cannot depend on the schedule.
-            let gathered = if self.cfg.overlap {
-                super::overlap::gather_weights_overlapped(
-                    &self.store,
-                    &self.cfg.policy,
-                    &mut self.rng,
-                    &mut ledger,
-                )
+            // `--hpz`: only the step's first gather crosses the NICs;
+            // later microbatches reuse it (weight codecs are
+            // deterministic, so the re-gather would be bit-identical)
+            // and pay the intra-node secondary-shard reassembly bytes.
+            if acc == 0 || !self.cfg.hpz {
+                gathered_cache = Some(if self.cfg.overlap {
+                    super::overlap::gather_weights_overlapped(
+                        &self.store,
+                        &self.cfg.policy,
+                        &mut self.rng,
+                        &mut ledger,
+                    )
+                } else {
+                    self.store
+                        .gather_weights(&self.cfg.policy, &mut self.rng, &mut ledger)
+                });
             } else {
-                self.store
-                    .gather_weights(&self.cfg.policy, &mut self.rng, &mut ledger)
-            };
+                self.store.charge_hpz_regather(&self.cfg.policy, &mut ledger);
+            }
+            let gathered = gathered_cache.as_ref().expect("gathered on acc 0");
             for r in 0..world {
                 let tokens = self.samplers[r].batch(dims.batch_size, dims.seq_len);
                 let c0 = Instant::now();
-                let (loss, grads) = self.rt.step(&tokens, &gathered)?;
+                let (loss, grads) = self.rt.step(&tokens, gathered)?;
                 max_compute = max_compute.max(c0.elapsed().as_secs_f64());
                 loss_sum += loss as f64;
                 if acc == 0 {
@@ -223,7 +263,19 @@ impl Trainer {
         let mean_loss = loss_sum / (world * n_accum) as f64;
 
         // (3) quantized gradient ReduceScatter (mean over world).
-        let sharded = if self.cfg.overlap {
+        // `--hier` wins over `--overlap` here: the two-level exchange
+        // has its own schedule (intra hop, then inter hop) and is not
+        // expressible as one pipelined fabric call.
+        let sharded = if self.cfg.hier {
+            self.store.reduce_scatter_grads_hier(
+                &local_grads,
+                &self.cfg.policy,
+                &self.hier_codecs,
+                &mut self.hier_ef,
+                &mut self.rng,
+                &mut ledger,
+            )
+        } else if self.cfg.overlap {
             super::overlap::reduce_scatter_grads_overlapped(
                 &self.store,
                 &local_grads,
@@ -370,7 +422,23 @@ impl Trainer {
             })
             .collect();
         self.t = ck.step;
+        // Error feedback is trajectory state, not model state: a
+        // restored run's gradients have nothing to do with the
+        // residuals accumulated before the restore, so carrying them
+        // over would inject a stale correction into the first
+        // post-restore step. Zero them — the same semantics a fresh
+        // trainer build (the elastic recovery path) gets for free.
+        for ef in self.hier_ef.iter_mut() {
+            ef.reset();
+        }
         Ok(())
+    }
+
+    /// Σ residual² across every `--hier` error-feedback buffer
+    /// (0.0 when hier is off, after a checkpoint restore, and on a
+    /// freshly built trainer).
+    pub fn ef_residual_sq_norm(&self) -> f64 {
+        self.hier_ef.iter().map(|e| e.sq_norm()).sum()
     }
 
     pub fn steps_done(&self) -> u64 {
@@ -580,6 +648,98 @@ mod tests {
                 assert_eq!(a.traffic, b.traffic, "{policy} step {}", a.step);
             }
         }
+    }
+
+    #[test]
+    fn hier_training_reduces_loss_and_cuts_inter_grad_bytes() {
+        if skip() {
+            return;
+        }
+        let eng = Arc::new(Engine::cpu().unwrap());
+        let mut plain = mk_cfg("w8g8", 8);
+        plain.topo = Topology::new(2, 2);
+        let mut hier = plain.clone();
+        hier.hier = true;
+        let mut tp =
+            Trainer::new(eng.clone(), &artifacts_root(), plain, Default::default()).unwrap();
+        tp.run(8).unwrap();
+        let mut th = Trainer::new(eng, &artifacts_root(), hier, Default::default()).unwrap();
+        assert_eq!(th.ef_residual_sq_norm(), 0.0, "fresh trainer starts with zero EF");
+        th.run(8).unwrap();
+        assert!(
+            th.log.final_loss(3) < th.log.steps[0].loss - 0.2,
+            "hier run didn't train: {} -> {}",
+            th.log.steps[0].loss,
+            th.log.final_loss(3)
+        );
+        // the 4-bit cross-node hop must undercut the flat 8-bit RS
+        assert!(
+            th.log.total_inter_bytes() < tp.log.total_inter_bytes(),
+            "hier inter bytes {} not below flat {}",
+            th.log.total_inter_bytes(),
+            tp.log.total_inter_bytes()
+        );
+        // and the EF buffers now carry live (bounded, nonzero) residuals
+        assert!(th.ef_residual_sq_norm() > 0.0);
+    }
+
+    #[test]
+    fn hier_ef_zeroed_on_checkpoint_restore() {
+        if skip() {
+            return;
+        }
+        let eng = Arc::new(Engine::cpu().unwrap());
+        let mut cfg = mk_cfg("w8g8", 6);
+        cfg.topo = Topology::new(2, 2);
+        cfg.hier = true;
+        let mut tr =
+            Trainer::new(eng, &artifacts_root(), cfg, Default::default()).unwrap();
+        tr.run(3).unwrap();
+        assert!(tr.ef_residual_sq_norm() > 0.0, "training must leave residuals");
+        let ck = std::env::temp_dir().join("qsdp_hier_ef_restore_test.ckpt");
+        tr.save_checkpoint(&ck).unwrap();
+        tr.load_checkpoint(&ck).unwrap();
+        // rollback semantics: restored trajectories start with clean EF
+        assert_eq!(tr.ef_residual_sq_norm(), 0.0, "restore must zero EF");
+        tr.run(3).unwrap();
+        assert!(tr.ef_residual_sq_norm() > 0.0);
+        let _ = std::fs::remove_file(&ck);
+    }
+
+    #[test]
+    fn hpz_repeat_gathers_same_loss_fewer_inter_bytes() {
+        if skip() {
+            return;
+        }
+        let eng = Arc::new(Engine::cpu().unwrap());
+        let mut plain = mk_cfg("w8g8", 3);
+        plain.topo = Topology::new(2, 2);
+        plain.n_accum = 3;
+        let mut hpz = plain.clone();
+        hpz.hpz = true;
+        let mut tp =
+            Trainer::new(eng.clone(), &artifacts_root(), plain, Default::default()).unwrap();
+        tp.run(3).unwrap();
+        let mut tz = Trainer::new(eng, &artifacts_root(), hpz, Default::default()).unwrap();
+        tz.run(3).unwrap();
+        // weight codecs are deterministic, so serving repeat gathers
+        // from the node-local secondary replica is a pure accounting
+        // change: the loss trajectory must match bit for bit.
+        for (a, b) in tp.log.steps.iter().zip(&tz.log.steps) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+        }
+        // n_accum-1 of every step's weight gathers moved off the NICs:
+        // the saving is identical every step (2 gathers' inter bytes)
+        let pi = tp.log.steps[0].traffic.inter_bytes;
+        let zi = tz.log.steps[0].traffic.inter_bytes;
+        assert!(zi < pi, "hpz inter bytes {zi} not below {pi}");
+        let saved = pi - zi;
+        assert_eq!(saved % 2, 0, "two identical gathers' worth of bytes");
+        for (a, b) in tp.log.steps.iter().zip(&tz.log.steps) {
+            assert_eq!(a.traffic.inter_bytes - b.traffic.inter_bytes, saved);
+        }
+        // and the reassembly itself is charged, on NVLink
+        assert!(tz.log.steps[0].traffic.intra_bytes > 0);
     }
 
     #[test]

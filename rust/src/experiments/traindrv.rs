@@ -60,6 +60,8 @@ pub fn base_cfg(model: &str, steps: u64) -> RunConfig {
         inter_gbps: 10.0,
         n_accum: 1,
         overlap: false,
+        hier: false,
+        hpz: false,
         fabric: crate::config::FabricKind::default(),
         fabric_opts: crate::config::FabricOptions::default(),
     }

@@ -18,4 +18,4 @@ pub mod groups;
 pub mod store;
 
 pub use groups::{pack_groups, LayerGroup};
-pub use store::ShardedStore;
+pub use store::{FlatParams, ShardedStore};

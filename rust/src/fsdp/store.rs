@@ -1,5 +1,6 @@
 //! Sharded master parameter store.
 
+use crate::collectives::hier::{two_level_reduce_scatter, TensorEf, TwoLevelCodecs};
 use crate::collectives::{Collective, LockstepFabric, TrafficLedger};
 use crate::model::spec::ParamSpec;
 use crate::quant::{Codec, EncodedTensor, QuantPolicy, TensorRole};
@@ -102,6 +103,38 @@ impl ShardedStore {
             .collect()
     }
 
+    /// Account the traffic of re-assembling full weights from the
+    /// hpZ-style *secondary* intra-node partition (ZeRO++): each node
+    /// keeps a replicated copy of the full parameters, split over its
+    /// `g` ranks, so gradient-accumulation re-gathers never cross a
+    /// NIC — per node, every rank broadcasts its secondary shard (at
+    /// the weight codec's wire size) to the `g-1` peers, and that is
+    /// the *entire* cost. The gathered values are bit-identical to a
+    /// fresh cross-node gather because weight codecs are deterministic
+    /// (round-to-nearest, no rng draws), so the caller simply reuses
+    /// its cached gather; this method only charges the ledger.
+    /// Single-GPU nodes hold a full replica outright: zero bytes.
+    pub fn charge_hpz_regather(&self, policy: &QuantPolicy, ledger: &mut TrafficLedger) {
+        let g = self.topo.gpus_per_node;
+        if g == 1 {
+            return;
+        }
+        // the secondary partition is a g-way split of each full tensor
+        let node_part = Topology::new(1, g);
+        for spec in &self.specs {
+            let codec = policy.codec(TensorRole::Weight, spec.kind);
+            let n = spec.numel();
+            for _node in 0..self.topo.nodes {
+                for j in 0..g {
+                    let len = node_part.shard_range(n, j).len();
+                    for _peer in 0..g - 1 {
+                        ledger.record(codec.wire_bytes(len), false);
+                    }
+                }
+            }
+        }
+    }
+
     /// Quantized gradient ReduceScatter + mean over the world.
     ///
     /// `local_grads[rank]` is rank's full-model gradient (its own
@@ -124,6 +157,57 @@ impl ShardedStore {
                 let inputs: Vec<Vec<f32>> =
                     (0..p).map(|r| local_grads[r][pi].clone()).collect();
                 let mut outs = self.fabric.reduce_scatter(&inputs, &codec, rng, ledger);
+                for shard in outs.iter_mut() {
+                    for x in shard.iter_mut() {
+                        *x *= inv_p;
+                    }
+                }
+                outs
+            })
+            .collect()
+    }
+
+    /// Hierarchical two-level gradient ReduceScatter + mean (`--hier`).
+    ///
+    /// Quantized tensors (the §5.1 `Matrix` set) ride the two-level
+    /// scheme — 8-bit block-quantized intra-node hop, 4-bit cross-node
+    /// hop, error feedback read from and written back to `ef[param]` —
+    /// while filtered tensors (norms/biases) take the store's fabric
+    /// with their ordinary policy codec, exactly as in
+    /// [`Self::reduce_scatter_grads`]. `ef` must hold one [`TensorEf`]
+    /// per parameter ([`TensorEf::zeros`] for quantized tensors,
+    /// [`TensorEf::empty`] for filtered ones).
+    pub fn reduce_scatter_grads_hier(
+        &self,
+        local_grads: &[FlatParams],
+        policy: &QuantPolicy,
+        codecs: &TwoLevelCodecs,
+        ef: &mut [TensorEf],
+        rng: &mut Pcg64,
+        ledger: &mut TrafficLedger,
+    ) -> Vec<Vec<Vec<f32>>> {
+        let p = self.topo.world();
+        assert_eq!(local_grads.len(), p);
+        assert_eq!(ef.len(), self.specs.len(), "one EF state per parameter");
+        let inv_p = 1.0 / p as f32;
+        (0..self.specs.len())
+            .map(|pi| {
+                let spec = &self.specs[pi];
+                let inputs: Vec<Vec<f32>> =
+                    (0..p).map(|r| local_grads[r][pi].clone()).collect();
+                let mut outs = if policy.quantizes(spec.kind) {
+                    two_level_reduce_scatter(
+                        &self.topo,
+                        &inputs,
+                        codecs,
+                        &mut ef[pi],
+                        rng,
+                        ledger,
+                    )
+                } else {
+                    let codec = policy.codec(TensorRole::Grad, spec.kind);
+                    self.fabric.reduce_scatter(&inputs, &codec, rng, ledger)
+                };
                 for shard in outs.iter_mut() {
                     for x in shard.iter_mut() {
                         *x *= inv_p;
@@ -322,6 +406,112 @@ mod tests {
         let a = store.gather_weights(&policy, &mut Pcg64::seeded(11), &mut l);
         let b = store.gather_weights(&policy, &mut Pcg64::seeded(11), &mut l);
         assert_eq!(a, b, "gather must be deterministic given the rng seed");
+    }
+
+    #[test]
+    fn hpz_regather_is_intra_only_and_matches_closed_form() {
+        let topo = Topology::new(2, 2);
+        let store = ShardedStore::from_full(toy_specs(), &toy_params(30), topo);
+        let policy = QuantPolicy::qsdp_default();
+        let mut ledger = TrafficLedger::new();
+        store.charge_hpz_regather(&policy, &mut ledger);
+        // hpZ's whole point: repeat gathers never touch a NIC
+        assert_eq!(ledger.inter_bytes, 0);
+        // closed form: per node, each of g ranks broadcasts its
+        // secondary shard (a g-way split of the full tensor) to g-1
+        // peers at the weight codec's wire size
+        let g = topo.gpus_per_node;
+        let node_part = Topology::new(1, g);
+        let mut expect = 0usize;
+        let mut msgs = 0usize;
+        for spec in &store.specs {
+            for _node in 0..topo.nodes {
+                for j in 0..g {
+                    let len = node_part.shard_range(spec.numel(), j).len();
+                    expect += (g - 1) * policy.wire_bytes(TensorRole::Weight, len, spec.kind);
+                    msgs += g - 1;
+                }
+            }
+        }
+        assert_eq!(ledger.intra_bytes, expect);
+        assert_eq!(ledger.messages, msgs);
+        // and it is strictly cheaper than what a full cross-node
+        // gather would put on the NICs
+        let mut full = TrafficLedger::new();
+        store.gather_weights(&policy, &mut Pcg64::seeded(31), &mut full);
+        assert!(full.inter_bytes > 0);
+    }
+
+    #[test]
+    fn hpz_regather_free_on_single_gpu_nodes() {
+        // g=1: every rank holds a full secondary replica — no traffic.
+        let store =
+            ShardedStore::from_full(toy_specs(), &toy_params(32), Topology::new(3, 1));
+        let mut ledger = TrafficLedger::new();
+        store.charge_hpz_regather(&QuantPolicy::qsdp_default(), &mut ledger);
+        assert_eq!(ledger, TrafficLedger::default());
+    }
+
+    #[test]
+    fn hier_store_reduce_matches_mean_and_filters_exactly() {
+        let topo = Topology::new(2, 2);
+        let specs = toy_specs();
+        let store = ShardedStore::from_full(specs.clone(), &toy_params(40), topo);
+        let grads: Vec<FlatParams> = (0..4).map(|r| toy_params(50 + r as u64)).collect();
+        let policy = QuantPolicy::qsdp_default();
+        let codecs = crate::collectives::TwoLevelCodecs::deterministic();
+        let mut ef: Vec<crate::collectives::TensorEf> = specs
+            .iter()
+            .map(|s| {
+                if policy.quantizes(s.kind) {
+                    crate::collectives::TensorEf::zeros(&topo, s.numel())
+                } else {
+                    crate::collectives::TensorEf::empty()
+                }
+            })
+            .collect();
+        let mut ledger = TrafficLedger::new();
+        let sharded = store.reduce_scatter_grads_hier(
+            &grads,
+            &policy,
+            &codecs,
+            &mut ef,
+            &mut Pcg64::seeded(41),
+            &mut ledger,
+        );
+        // exact mean reference
+        let mut expect: FlatParams = grads[0].clone();
+        for g in &grads[1..] {
+            for (e, gi) in expect.iter_mut().zip(g) {
+                for (a, &b) in e.iter_mut().zip(gi) {
+                    *a += b;
+                }
+            }
+        }
+        for e in expect.iter_mut() {
+            for a in e.iter_mut() {
+                *a *= 0.25;
+            }
+        }
+        for (pi, per) in sharded.iter().enumerate() {
+            let n = specs[pi].numel();
+            for (r, shard) in per.iter().enumerate() {
+                let range = topo.shard_range(n, r);
+                if policy.quantizes(specs[pi].kind) {
+                    // two-level path: close, not exact
+                    for (a, &b) in shard.iter().zip(&expect[pi][range]) {
+                        assert!((a - b).abs() < 0.25, "param {pi} rank {r}: {a} vs {b}");
+                    }
+                } else {
+                    // §5.1 filter: norms/biases ride FP32, exactly
+                    assert_eq!(shard.as_slice(), &expect[pi][range], "param {pi} rank {r}");
+                }
+            }
+        }
+        // only the matrix went through the two-level hops
+        assert!(!ef[0].is_zero(), "matrix EF must carry a residual");
+        assert!(ef[1].is_zero() && ef[2].is_zero());
+        assert!(ledger.inter_bytes > 0);
     }
 
     #[test]

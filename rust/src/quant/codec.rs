@@ -56,6 +56,11 @@ pub enum Scheme {
     Learned,
     /// Random-shift lattice coordinates `Q^w` (Definition 1), i16 LE.
     Lattice,
+    /// Symmetric block-wise quantization (ZeRO++/SDP4Bit style):
+    /// 64–128-element blocks, one FP32 scale per block carried in the
+    /// `levels` section (meta is empty), bit-packed unsigned codes
+    /// centered on `half = 2^(bits-1) − 1`.
+    BlockQuant,
 }
 
 impl Scheme {
@@ -67,6 +72,7 @@ impl Scheme {
             Scheme::MinMax => 2,
             Scheme::Learned => 3,
             Scheme::Lattice => 4,
+            Scheme::BlockQuant => 5,
         }
     }
 
@@ -77,6 +83,7 @@ impl Scheme {
             2 => Scheme::MinMax,
             3 => Scheme::Learned,
             4 => Scheme::Lattice,
+            5 => Scheme::BlockQuant,
             other => bail!("unknown scheme tag {other}"),
         })
     }
@@ -95,8 +102,8 @@ pub struct EncodedTensor {
     pub n: usize,
     /// Per-bucket scaling metadata (empty for FP32/FP16 passthrough).
     pub meta: Vec<BucketMeta>,
-    /// Learned level table in normalized [0,1] space (empty unless
-    /// scheme == Learned).
+    /// Learned level table in normalized [0,1] space (Learned), or
+    /// per-block scales (BlockQuant); empty otherwise.
     pub levels: Vec<f32>,
     /// Packed codes (MinMax/Learned), i16 LE lattice coordinates
     /// (Lattice), or raw LE float bytes (Fp32/Fp16).
@@ -188,6 +195,21 @@ impl EncodedTensor {
                     }
                 }
             }
+            Scheme::BlockQuant => CODES_SCRATCH.with(|cell| {
+                let mut codes = cell.borrow_mut();
+                codes.clear();
+                codes.resize(self.n, 0);
+                unpack_bits(&self.payload, self.bits, &mut codes);
+                let half = ((1u32 << (self.bits - 1)) - 1) as f32;
+                out.reserve(self.n);
+                for (bi, chunk) in codes.chunks(self.bucket).enumerate() {
+                    // levels[bi] is the block's scale: value = (c − half)·s
+                    let s = self.levels[bi];
+                    for &c in chunk {
+                        out.push((c as f32 - half) * s);
+                    }
+                }
+            }),
         }
     }
 
@@ -250,6 +272,10 @@ impl EncodedTensor {
                 (1..=8).contains(&bits),
                 "{scheme:?} message with bits={bits} (want 1..=8)"
             ),
+            Scheme::BlockQuant => anyhow::ensure!(
+                (2..=8).contains(&bits),
+                "{scheme:?} message with bits={bits} (want 2..=8)"
+            ),
             Scheme::Fp32 => anyhow::ensure!(bits == 32, "Fp32 message with bits={bits}"),
             Scheme::Fp16 | Scheme::Lattice => {
                 anyhow::ensure!(bits == 16, "{scheme:?} message with bits={bits}")
@@ -267,16 +293,28 @@ impl EncodedTensor {
         );
         let n_meta = match scheme {
             Scheme::Fp32 | Scheme::Fp16 => 0,
+            // BlockQuant carries its per-block scales in the levels
+            // section instead of (lo, scale) meta pairs.
+            Scheme::BlockQuant => {
+                anyhow::ensure!(bucket > 0, "{scheme:?} message with bucket=0");
+                0
+            }
             _ => {
                 anyhow::ensure!(bucket > 0, "{scheme:?} message with bucket=0");
                 n.div_ceil(bucket)
             }
         };
-        let n_levels = if scheme == Scheme::Learned { 1usize << bits } else { 0 };
+        let n_levels = match scheme {
+            Scheme::Learned => 1usize << bits,
+            Scheme::BlockQuant => n.div_ceil(bucket),
+            _ => 0,
+        };
         let payload_len = match scheme {
             Scheme::Fp32 => n * 4,
             Scheme::Fp16 | Scheme::Lattice => n * 2,
-            Scheme::MinMax | Scheme::Learned => (n * bits as usize).div_ceil(8),
+            Scheme::MinMax | Scheme::Learned | Scheme::BlockQuant => {
+                (n * bits as usize).div_ceil(8)
+            }
         };
         let expect = HEADER_BYTES + n_meta * 8 + n_levels * 4 + payload_len;
         anyhow::ensure!(
@@ -436,6 +474,21 @@ impl<'a> EncodedView<'a> {
                     }
                 }
             }
+            Scheme::BlockQuant => CODES_SCRATCH.with(|cell| {
+                let mut codes = cell.borrow_mut();
+                codes.clear();
+                codes.resize(self.n, 0);
+                unpack_bits(self.payload, self.bits, &mut codes);
+                let half = ((1u32 << (self.bits - 1)) - 1) as f32;
+                out.reserve(self.n);
+                for (bi, chunk) in codes.chunks(self.bucket).enumerate() {
+                    // level_at(bi) is the block's scale: (c − half)·s
+                    let s = self.level_at(bi);
+                    for &c in chunk {
+                        out.push((c as f32 - half) * s);
+                    }
+                }
+            }),
         }
     }
 }
@@ -828,6 +881,8 @@ mod tests {
             Box::new(MinMaxCodec::new(3, 256, true)),
             Box::new(LearnedCodec::new(levels.clone(), 128)),
             Box::new(LatticeCodec::new(0.05, 256)),
+            Box::new(crate::quant::BlockQuantCodec::new(8, 128, false)),
+            Box::new(crate::quant::BlockQuantCodec::new(4, 64, true)),
         ];
         for c in &codecs {
             let e = c.encode(&v, &mut rng);
@@ -874,6 +929,7 @@ mod tests {
             Box::new(MinMaxCodec::new(5, 128, true)),
             Box::new(LearnedCodec::new(LearnedLevels::uniform(4), 64)),
             Box::new(LatticeCodec::new(0.1, 128)),
+            Box::new(crate::quant::BlockQuantCodec::new(4, 128, true)),
         ];
         // a deliberately dirty, over-sized buffer: reuse must clear it
         let mut buf = vec![0xAAu8; 100_000];
@@ -899,6 +955,8 @@ mod tests {
             Box::new(MinMaxCodec::new(8, 100, false)),
             Box::new(LearnedCodec::new(LearnedLevels::uniform(5), 128)),
             Box::new(LatticeCodec::new(0.05, 256)),
+            Box::new(crate::quant::BlockQuantCodec::new(8, 64, false)),
+            Box::new(crate::quant::BlockQuantCodec::new(4, 97, true)),
         ];
         for c in &codecs {
             let e = c.encode(&v, &mut rng);

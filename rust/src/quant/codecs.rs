@@ -29,6 +29,45 @@ use super::learned::LearnedLevels;
 use super::minmax::{minmax4, BucketMeta, MinMaxQuantizer};
 use crate::util::Pcg64;
 
+/// A typed encode failure. Today the only failure mode is a non-finite
+/// input: every grid/lattice quantizer turns NaN into code 0 through
+/// Rust's saturating float→int cast (so a NaN gradient would silently
+/// decode to the bucket's `lo` — the bug this type exists to surface),
+/// and ±Inf poisons the bucket's scale. The lossless passthrough codecs
+/// (FP32/FP16) represent non-finite values faithfully and never fail.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EncodeError {
+    /// Bucket `bucket` of the input contained the non-finite `value`.
+    NonFinite {
+        /// `Codec::name()` of the failing codec.
+        codec: &'static str,
+        /// Index of the offending bucket/block.
+        bucket: usize,
+        /// The first non-finite value encountered.
+        value: f32,
+    },
+}
+
+impl EncodeError {
+    pub(crate) fn non_finite(codec: &'static str, bucket: usize, value: f32) -> Self {
+        EncodeError::NonFinite { codec, bucket, value }
+    }
+}
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::NonFinite { codec, bucket, value } => write!(
+                f,
+                "{codec}: non-finite value {value} in bucket {bucket} — refusing to \
+                 quantize (a NaN would silently encode to code 0)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
 /// A wire codec: encode/decode f32 tensors with exact byte accounting.
 ///
 /// `Sync` is a supertrait because transports may share one codec across
@@ -43,7 +82,17 @@ pub trait Codec: Sync {
     /// stochastic rounding / random shifts; deterministic codecs leave
     /// it untouched (rng stream discipline is part of the contract —
     /// lockstep simulation depends on it).
-    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64);
+    ///
+    /// Errors with [`EncodeError::NonFinite`] if the input contains a
+    /// NaN or ±Inf that the scheme cannot represent; on `Err` the
+    /// contents of `out` are unspecified. Lossless passthrough codecs
+    /// never fail.
+    fn encode_into(
+        &self,
+        values: &[f32],
+        out: &mut EncodedTensor,
+        rng: &mut Pcg64,
+    ) -> Result<(), EncodeError>;
 
     /// Exact bytes a message of `n` elements occupies on the wire;
     /// always equals `self.encode(..).byte_size()` for len-n input.
@@ -56,9 +105,13 @@ pub trait Codec: Sync {
     }
 
     /// Allocating convenience wrapper around [`Self::encode_into`].
+    /// Panics on encode failure — callers that can recover (the
+    /// collective fabrics) use `encode_into` and surface the error as a
+    /// typed ring fault instead.
     fn encode(&self, values: &[f32], rng: &mut Pcg64) -> EncodedTensor {
         let mut out = EncodedTensor::default();
-        self.encode_into(values, &mut out, rng);
+        self.encode_into(values, &mut out, rng)
+            .unwrap_or_else(|e| panic!("{e}"));
         out
     }
 }
@@ -89,8 +142,14 @@ impl Codec for Fp32Codec {
         "fp32"
     }
 
-    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, _rng: &mut Pcg64) {
+    fn encode_into(
+        &self,
+        values: &[f32],
+        out: &mut EncodedTensor,
+        _rng: &mut Pcg64,
+    ) -> Result<(), EncodeError> {
         Fp32Codec::encode_into(self, values, out);
+        Ok(())
     }
 
     fn wire_bytes(&self, n: usize) -> usize {
@@ -108,7 +167,12 @@ impl Codec for Fp16Codec {
         "fp16"
     }
 
-    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, _rng: &mut Pcg64) {
+    fn encode_into(
+        &self,
+        values: &[f32],
+        out: &mut EncodedTensor,
+        _rng: &mut Pcg64,
+    ) -> Result<(), EncodeError> {
         out.scheme = Scheme::Fp16;
         out.bits = 16;
         out.bucket = 0;
@@ -120,6 +184,7 @@ impl Codec for Fp16Codec {
         for &v in values {
             out.payload.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
         }
+        Ok(())
     }
 
     fn wire_bytes(&self, n: usize) -> usize {
@@ -152,7 +217,12 @@ impl Codec for MinMaxCodec {
         "minmax"
     }
 
-    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64) {
+    fn encode_into(
+        &self,
+        values: &[f32],
+        out: &mut EncodedTensor,
+        rng: &mut Pcg64,
+    ) -> Result<(), EncodeError> {
         out.scheme = Scheme::MinMax;
         out.bits = self.q.bits;
         out.bucket = self.q.bucket;
@@ -160,8 +230,9 @@ impl Codec for MinMaxCodec {
         out.levels.clear();
         // quantize straight into the payload buffer (one u8 per code),
         // then bit-pack in place — no scratch allocation.
-        self.q.encode(values, &mut out.payload, &mut out.meta, rng);
+        self.q.encode(values, &mut out.payload, &mut out.meta, rng)?;
         pack_bits_in_place(&mut out.payload, self.q.bits);
+        Ok(())
     }
 
     fn wire_bytes(&self, n: usize) -> usize {
@@ -196,7 +267,12 @@ impl Codec for LearnedCodec {
         "learned"
     }
 
-    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, _rng: &mut Pcg64) {
+    fn encode_into(
+        &self,
+        values: &[f32],
+        out: &mut EncodedTensor,
+        _rng: &mut Pcg64,
+    ) -> Result<(), EncodeError> {
         let bits = self.levels.bits;
         out.scheme = Scheme::Learned;
         out.bits = bits;
@@ -209,7 +285,12 @@ impl Codec for LearnedCodec {
         out.payload.clear();
         out.payload.resize(values.len(), 0);
         let mut off = 0usize;
-        for chunk in values.chunks(self.bucket) {
+        for (bi, chunk) in values.chunks(self.bucket).enumerate() {
+            // f32::min/max ignore NaN operands, so minmax4 yields finite
+            // bucket stats even over NaN input — scan explicitly.
+            if let Some(&bad) = chunk.iter().find(|v| !v.is_finite()) {
+                return Err(EncodeError::non_finite(self.name(), bi, bad));
+            }
             let (lo, hi) = minmax4(chunk);
             let range = hi - lo;
             out.meta.push(BucketMeta { lo, scale: range });
@@ -220,6 +301,7 @@ impl Codec for LearnedCodec {
             off += chunk.len();
         }
         pack_bits_in_place(&mut out.payload, bits);
+        Ok(())
     }
 
     fn wire_bytes(&self, n: usize) -> usize {
@@ -253,7 +335,12 @@ impl Codec for LatticeCodec {
         "lattice"
     }
 
-    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64) {
+    fn encode_into(
+        &self,
+        values: &[f32],
+        out: &mut EncodedTensor,
+        rng: &mut Pcg64,
+    ) -> Result<(), EncodeError> {
         let d = self.delta;
         out.scheme = Scheme::Lattice;
         out.bits = 16;
@@ -264,8 +351,15 @@ impl Codec for LatticeCodec {
         out.levels.clear();
         out.payload.clear();
         out.payload.reserve(values.len() * 2);
-        for chunk in values.chunks(self.bucket) {
+        for (bi, chunk) in values.chunks(self.bucket).enumerate() {
+            // NaN would saturate to lattice coordinate 0 (decoding to
+            // the bucket shift r) — reject before drawing codes. The
+            // shift is still drawn first so the rng stream position
+            // stays a pure function of how many buckets were consumed.
             let r = (rng.next_f32() - 0.5) * d;
+            if let Some(&bad) = chunk.iter().find(|v| !v.is_finite()) {
+                return Err(EncodeError::non_finite(self.name(), bi, bad));
+            }
             out.meta.push(BucketMeta { lo: r, scale: d });
             for &v in chunk {
                 let k = (((v - r) / d).round() as i32)
@@ -273,6 +367,7 @@ impl Codec for LatticeCodec {
                 out.payload.extend_from_slice(&k.to_le_bytes());
             }
         }
+        Ok(())
     }
 
     fn wire_bytes(&self, n: usize) -> usize {
@@ -289,6 +384,7 @@ pub enum AnyCodec {
     MinMax(MinMaxCodec),
     Learned(LearnedCodec),
     Lattice(LatticeCodec),
+    Block(super::blockquant::BlockQuantCodec),
 }
 
 impl Codec for AnyCodec {
@@ -299,16 +395,23 @@ impl Codec for AnyCodec {
             AnyCodec::MinMax(c) => c.name(),
             AnyCodec::Learned(c) => c.name(),
             AnyCodec::Lattice(c) => c.name(),
+            AnyCodec::Block(c) => c.name(),
         }
     }
 
-    fn encode_into(&self, values: &[f32], out: &mut EncodedTensor, rng: &mut Pcg64) {
+    fn encode_into(
+        &self,
+        values: &[f32],
+        out: &mut EncodedTensor,
+        rng: &mut Pcg64,
+    ) -> Result<(), EncodeError> {
         match self {
             AnyCodec::Fp32(c) => Codec::encode_into(c, values, out, rng),
             AnyCodec::Fp16(c) => c.encode_into(values, out, rng),
             AnyCodec::MinMax(c) => c.encode_into(values, out, rng),
             AnyCodec::Learned(c) => c.encode_into(values, out, rng),
             AnyCodec::Lattice(c) => c.encode_into(values, out, rng),
+            AnyCodec::Block(c) => c.encode_into(values, out, rng),
         }
     }
 
@@ -319,6 +422,7 @@ impl Codec for AnyCodec {
             AnyCodec::MinMax(c) => c.wire_bytes(n),
             AnyCodec::Learned(c) => c.wire_bytes(n),
             AnyCodec::Lattice(c) => c.wire_bytes(n),
+            AnyCodec::Block(c) => c.wire_bytes(n),
         }
     }
 }
@@ -338,6 +442,7 @@ mod tests {
     /// Every codec variant the repo can put on the wire, boxed for a
     /// uniform sweep.
     fn all_codecs() -> Vec<Box<dyn Codec>> {
+        use super::super::blockquant::BlockQuantCodec;
         let mut fitted = LearnedLevels::uniform(4);
         fitted.fit(&randv(4096, 9).iter().map(|x| x.abs().min(1.0)).collect::<Vec<_>>(), 0.01, 3);
         vec![
@@ -352,16 +457,26 @@ mod tests {
             Box::new(LearnedCodec::new(fitted, 256)),
             Box::new(LatticeCodec::new(0.05, 1024)),
             Box::new(LatticeCodec::new(0.5, 64)),
+            Box::new(BlockQuantCodec::new(8, 128, false)),
+            Box::new(BlockQuantCodec::new(8, 64, true)),
+            Box::new(BlockQuantCodec::new(4, 128, true)),
+            Box::new(BlockQuantCodec::new(4, 97, false)),
+            Box::new(BlockQuantCodec::new(2, 64, false)),
         ]
     }
 
     #[test]
     fn wire_bytes_is_byte_size_for_every_codec() {
         // The shared contract: the analytic size and the real message
-        // agree byte-for-byte, for all codecs and ragged sizes.
+        // agree byte-for-byte, for all codecs across empty, ragged,
+        // prime, and block-aligned sizes (a drift here silently skews
+        // the sim/network.rs analytic clocks vs. the TrafficLedger).
         let mut rng = Pcg64::seeded(1);
         for codec in all_codecs() {
-            for n in [1usize, 5, 100, 1023, 1024, 1025, 3000] {
+            for n in [
+                0usize, 1, 5, 31, 63, 64, 65, 97, 100, 127, 128, 129, 251, 1009,
+                1023, 1024, 1025, 3000,
+            ] {
                 let v = randv(n, 7 + n as u64);
                 let e = codec.encode(&v, &mut rng);
                 assert_eq!(
@@ -371,6 +486,8 @@ mod tests {
                     codec.name()
                 );
                 assert_eq!(e.n, n, "codec {}", codec.name());
+                // and the self-describing serializer agrees too
+                assert_eq!(e.to_bytes().len(), codec.wire_bytes(n), "codec {} n={n}", codec.name());
             }
         }
     }
@@ -384,7 +501,7 @@ mod tests {
                 let v = randv(n, seed);
                 let mut rng_a = Pcg64::seeded(99);
                 let mut rng_b = Pcg64::seeded(99);
-                codec.encode_into(&v, &mut scratch, &mut rng_a);
+                codec.encode_into(&v, &mut scratch, &mut rng_a).unwrap();
                 let fresh = codec.encode(&v, &mut rng_b);
                 assert_eq!(scratch, fresh, "codec {} n={n}", codec.name());
             }
@@ -457,6 +574,59 @@ mod tests {
         l.apply(&mut w, 1024);
         for (a, b) in w.iter().zip(&out) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lossy_codecs_reject_non_finite_lossless_pass_them_through() {
+        // The quantizing codecs must surface NaN/±Inf as a typed error
+        // (not silently encode code 0); the FP32/FP16 passthroughs
+        // carry non-finite values faithfully.
+        use super::super::blockquant::BlockQuantCodec;
+        let lossy: Vec<Box<dyn Codec>> = vec![
+            Box::new(MinMaxCodec::new(4, 64, false)),
+            Box::new(MinMaxCodec::new(4, 64, true)),
+            Box::new(LearnedCodec::new(LearnedLevels::uniform(4), 64)),
+            Box::new(LatticeCodec::new(0.1, 64)),
+            Box::new(BlockQuantCodec::new(8, 64, false)),
+            Box::new(BlockQuantCodec::new(4, 64, true)),
+        ];
+        for codec in &lossy {
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                // put the poison mid-tensor, in the second bucket, so
+                // the scan (not a lo/hi finiteness check) must find it
+                let mut v = randv(200, 3);
+                v[100] = bad;
+                let mut out = EncodedTensor::default();
+                let mut rng = Pcg64::seeded(5);
+                let err = codec.encode_into(&v, &mut out, &mut rng);
+                match err {
+                    Err(EncodeError::NonFinite { codec: name, bucket, value }) => {
+                        assert_eq!(name, codec.name());
+                        assert_eq!(bucket, 1, "codec {}", codec.name());
+                        assert!(
+                            value.is_nan() == bad.is_nan() && (value.is_nan() || value == bad),
+                            "codec {}: reported {value}, poisoned with {bad}",
+                            codec.name()
+                        );
+                    }
+                    Ok(()) => panic!("codec {} accepted {bad}", codec.name()),
+                }
+            }
+        }
+        for codec in [
+            Box::new(Fp32Codec) as Box<dyn Codec>,
+            Box::new(Fp16Codec) as Box<dyn Codec>,
+        ] {
+            let mut v = randv(32, 4);
+            v[7] = f32::NAN;
+            v[8] = f32::INFINITY;
+            let mut rng = Pcg64::seeded(6);
+            let e = codec.encode(&v, &mut rng);
+            let mut back = Vec::new();
+            e.decode(&mut back);
+            assert!(back[7].is_nan(), "codec {}", codec.name());
+            assert_eq!(back[8], f32::INFINITY, "codec {}", codec.name());
         }
     }
 

@@ -7,6 +7,7 @@
 //! kernel `python/compile/kernels/quantize.py` and its jnp oracle
 //! bit-for-bit given the same noise.
 
+use super::codecs::EncodeError;
 use crate::util::Pcg64;
 
 /// Min/max of a slice with 4 parallel accumulators (breaks the serial
@@ -73,13 +74,21 @@ impl MinMaxQuantizer {
     /// Hot path: indexed writes into a pre-sized buffer, integer
     /// rounding (`(x+r) as i32` truncation == floor for x ≥ -r), and a
     /// 4-way min/max pass (see EXPERIMENTS.md §Perf).
+    ///
+    /// Errors on non-finite input: Rust's saturating float→int cast
+    /// maps NaN to 0, so a NaN gradient would otherwise silently encode
+    /// as code 0 and decode to the bucket's `lo`. Note the scan must be
+    /// explicit — `f32::min`/`f32::max` *ignore* NaN operands, so
+    /// `minmax4` returns finite bucket stats even over NaN input and a
+    /// lo/hi finiteness check would only catch ±Inf. On `Err` the
+    /// contents of `codes`/`meta` are unspecified.
     pub fn encode(
         &self,
         values: &[f32],
         codes: &mut Vec<u8>,
         meta: &mut Vec<BucketMeta>,
         rng: &mut Pcg64,
-    ) {
+    ) -> Result<(), EncodeError> {
         let levels = self.levels() as i32;
         let levels_f = levels as f32;
         codes.clear();
@@ -87,7 +96,10 @@ impl MinMaxQuantizer {
         meta.clear();
         meta.reserve(self.n_buckets(values.len()));
         let mut off = 0usize;
-        for chunk in values.chunks(self.bucket) {
+        for (bi, chunk) in values.chunks(self.bucket).enumerate() {
+            if let Some(&bad) = chunk.iter().find(|v| !v.is_finite()) {
+                return Err(EncodeError::non_finite("minmax", bi, bad));
+            }
             let (lo, hi) = minmax4(chunk);
             let scale = (hi - lo) / levels_f;
             let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
@@ -113,26 +125,33 @@ impl MinMaxQuantizer {
             }
             off += chunk.len();
         }
+        Ok(())
     }
 
     /// Encode with an explicit per-element noise array instead of a
     /// PRNG — used to cross-validate against the Pallas kernel and the
-    /// jnp oracle, which take the same noise tensor.
+    /// jnp oracle, which take the same noise tensor. Same non-finite
+    /// contract as [`Self::encode`].
     pub fn encode_with_noise(
         &self,
         values: &[f32],
         noise: &[f32],
         codes: &mut Vec<u8>,
         meta: &mut Vec<BucketMeta>,
-    ) {
+    ) -> Result<(), EncodeError> {
         assert_eq!(values.len(), noise.len());
         let levels = self.levels() as f32;
         codes.clear();
         meta.clear();
-        for (chunk, nchunk) in values.chunks(self.bucket).zip(noise.chunks(self.bucket)) {
+        for (bi, (chunk, nchunk)) in
+            values.chunks(self.bucket).zip(noise.chunks(self.bucket)).enumerate()
+        {
             let mut lo = f32::INFINITY;
             let mut hi = f32::NEG_INFINITY;
             for &v in chunk {
+                if !v.is_finite() {
+                    return Err(EncodeError::non_finite("minmax", bi, v));
+                }
                 lo = lo.min(v);
                 hi = hi.max(v);
             }
@@ -145,6 +164,7 @@ impl MinMaxQuantizer {
                 codes.push(c.clamp(0.0, levels) as u8);
             }
         }
+        Ok(())
     }
 
     /// Dequantize codes back to f32 values.
@@ -213,7 +233,7 @@ mod tests {
         let q = MinMaxQuantizer::new(8, 64, false);
         let v = randv(256, 1);
         let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
-        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(2));
+        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(2)).unwrap();
         q.decode(&codes, &meta, &mut out);
         for (chunk, ochunk) in v.chunks(64).zip(out.chunks(64)) {
             let (lo, hi) = chunk
@@ -236,7 +256,7 @@ mod tests {
         let q = MinMaxQuantizer::new(4, 128, false);
         let v = randv(1024, 3);
         let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
-        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(4));
+        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(4)).unwrap();
         q.decode(&codes, &meta, &mut out);
         for (bi, (chunk, ochunk)) in v.chunks(128).zip(out.chunks(128)).enumerate() {
             let scale = meta[bi].scale;
@@ -260,7 +280,7 @@ mod tests {
         let mut rng = Pcg64::seeded(6);
         let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
         for _ in 0..reps {
-            q.encode(&v, &mut codes, &mut meta, &mut rng);
+            q.encode(&v, &mut codes, &mut meta, &mut rng).unwrap();
             q.decode(&codes, &meta, &mut out);
             for (a, &o) in acc.iter_mut().zip(&out) {
                 *a += o as f64;
@@ -289,7 +309,7 @@ mod tests {
         let mut err2 = 0.0f64;
         let reps = 500;
         for _ in 0..reps {
-            q.encode(&v, &mut codes, &mut meta, &mut rng);
+            q.encode(&v, &mut codes, &mut meta, &mut rng).unwrap();
             q.decode(&codes, &meta, &mut out);
             err2 += crate::util::stats::l2_dist_sq(&out, &v);
         }
@@ -327,7 +347,7 @@ mod tests {
         let q = MinMaxQuantizer::new(8, 1024, false);
         let v = randv(1500, 12); // 1 full + 1 short bucket
         let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
-        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(13));
+        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(13)).unwrap();
         assert_eq!(meta.len(), 2);
         assert_eq!(codes.len(), 1500);
         q.decode(&codes, &meta, &mut out);
@@ -355,5 +375,65 @@ mod tests {
             "bucketed {ea} not ≪ global {eb} on small-magnitude half"
         );
         assert!(l2_norm(&a) > 0.0);
+    }
+
+    /// Regression for the silent-corruption bug: the saturating
+    /// float→int cast used to map NaN to code 0, so a NaN gradient
+    /// decoded to the bucket's `lo` with no error. Both rounding modes
+    /// must now reject NaN and ±Inf with a typed error naming the
+    /// offending bucket.
+    #[test]
+    fn non_finite_input_is_a_typed_error_not_code_zero() {
+        for stochastic in [false, true] {
+            let q = MinMaxQuantizer::new(4, 64, stochastic);
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let mut v = randv(200, 17);
+                v[70] = bad; // interior of bucket 1, not an endpoint
+                let (mut codes, mut meta) = (vec![], vec![]);
+                let got = q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(18));
+                match got {
+                    Err(EncodeError::NonFinite { codec, bucket, value }) => {
+                        assert_eq!(codec, "minmax");
+                        assert_eq!(bucket, 1, "stochastic={stochastic} bad={bad}");
+                        assert!(value.is_nan() == bad.is_nan());
+                        assert!(value.is_nan() || value == bad);
+                    }
+                    Ok(()) => panic!("stochastic={stochastic}: accepted {bad}"),
+                }
+            }
+        }
+    }
+
+    /// Same contract on the explicit-noise cross-validation path, whose
+    /// plain `min`/`max` fold also ignores NaN operands.
+    #[test]
+    fn encode_with_noise_rejects_non_finite() {
+        for stochastic in [false, true] {
+            let q = MinMaxQuantizer::new(8, 32, stochastic);
+            let mut v = randv(64, 19);
+            v[5] = f32::NAN;
+            let noise = vec![0.5f32; 64];
+            let (mut codes, mut meta) = (vec![], vec![]);
+            let got = q.encode_with_noise(&v, &noise, &mut codes, &mut meta);
+            assert!(
+                matches!(got, Err(EncodeError::NonFinite { bucket: 0, .. })),
+                "stochastic={stochastic}: {got:?}"
+            );
+        }
+    }
+
+    /// The fix must not perturb the happy path: finite inputs still
+    /// encode, and extreme-but-finite values don't trip the check.
+    #[test]
+    fn finite_extremes_still_encode() {
+        let q = MinMaxQuantizer::new(8, 64, false);
+        let mut v = randv(128, 20);
+        v[0] = f32::MAX / 2.0;
+        v[1] = -f32::MAX / 2.0;
+        let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
+        q.encode(&v, &mut codes, &mut meta, &mut Pcg64::seeded(21)).unwrap();
+        q.decode(&codes, &meta, &mut out);
+        assert_eq!(out.len(), v.len());
+        assert!(out.iter().all(|x| x.is_finite()));
     }
 }

@@ -13,8 +13,13 @@
 //! 2. **Codecs** — [`codecs`] implements [`Codec`] for every scheme:
 //!    [`Fp32Codec`], [`Fp16Codec`] (the FSDP baseline's gradient
 //!    format), [`MinMaxCodec`] (bucketed min–max uniform grid, §5.1),
-//!    [`LearnedCodec`] (learned levels, Algorithm 2 / §5.2) and
-//!    [`LatticeCodec`] (random-shift lattice `Q^w`, Definition 1).
+//!    [`LearnedCodec`] (learned levels, Algorithm 2 / §5.2),
+//!    [`LatticeCodec`] (random-shift lattice `Q^w`, Definition 1) and
+//!    [`BlockQuantCodec`] (symmetric 64–128-element blocks with
+//!    per-block scales, the ZeRO++/SDP4Bit format the hierarchical
+//!    two-level collectives ship). Lossy codecs reject non-finite
+//!    input with a typed [`EncodeError`] instead of silently encoding
+//!    NaN as code 0.
 //!    `encode_into`/`decode_into` reuse caller buffers so the
 //!    collective hot path allocates nothing per message, and
 //!    `wire_bytes(n)` prices a message without encoding it — the two
@@ -29,6 +34,7 @@
 //! (the theory testbed's `Q^w`), [`learned`] (Algorithm 2 level
 //! fitting), and [`qsgd`] (sparse Elias-coded gradients, §D.3).
 
+pub mod blockquant;
 pub mod codec;
 pub mod codecs;
 pub mod lattice;
@@ -37,8 +43,11 @@ pub mod minmax;
 pub mod policy;
 pub mod qsgd;
 
+pub use blockquant::{BlockQuantCodec, DEFAULT_BLOCK};
 pub use codec::{EncodedTensor, EncodedView, Scheme};
-pub use codecs::{AnyCodec, Codec, Fp16Codec, Fp32Codec, LatticeCodec, LearnedCodec, MinMaxCodec};
+pub use codecs::{
+    AnyCodec, Codec, EncodeError, Fp16Codec, Fp32Codec, LatticeCodec, LearnedCodec, MinMaxCodec,
+};
 pub use lattice::LatticeQuantizer;
 pub use learned::LearnedLevels;
 pub use minmax::MinMaxQuantizer;

@@ -9,6 +9,7 @@
 //! the returned codec — there is exactly one resolution path for
 //! weights and gradients instead of a per-role method quartet.
 
+use super::blockquant::BlockQuantCodec;
 use super::codecs::{AnyCodec, Codec, Fp16Codec, Fp32Codec, LearnedCodec, MinMaxCodec};
 use super::learned::LearnedLevels;
 use crate::model::spec::ParamKind;
@@ -41,6 +42,12 @@ pub struct QuantPolicy {
     /// the bit-width matches (§5.2: only worthwhile for ≤ 6 bits).
     pub learned_weights: Option<LearnedLevels>,
     pub learned_grads: Option<LearnedLevels>,
+    /// Block-wise symmetric scaling (ZeRO++/SDP4Bit): when set,
+    /// quantized tensors use [`BlockQuantCodec`] with this block length
+    /// instead of the bucketed min–max grid. Takes precedence over
+    /// learned levels (spec suffix `+block`). The hierarchical two-level
+    /// collectives assume this format — per-block scales, 0 exact.
+    pub block: Option<usize>,
     /// Ship uncompressed gradients in exact FP32 instead of the FSDP
     /// baseline's FP16 stream (`grad_bits == None` only). This is the
     /// reference configuration the cross-fabric differential tests use:
@@ -59,6 +66,7 @@ impl QuantPolicy {
             stochastic_grads: false,
             learned_weights: None,
             learned_grads: None,
+            block: None,
             exact_grads: false,
         }
     }
@@ -85,8 +93,15 @@ impl QuantPolicy {
             stochastic_grads: true,
             learned_weights: None,
             learned_grads: None,
+            block: None,
             exact_grads: false,
         }
+    }
+
+    /// Switch the quantized codec to block-wise symmetric scaling.
+    pub fn with_block(mut self, block: usize) -> Self {
+        self.block = Some(block);
+        self
     }
 
     pub fn is_baseline(&self) -> bool {
@@ -100,9 +115,10 @@ impl QuantPolicy {
 
     /// Resolve the codec that carries a tensor of the given role/kind.
     ///
-    /// * quantized (`Matrix` under a configured bit-width): learned
-    ///   levels when a matching-width table is set, otherwise the
-    ///   bucketed min–max grid (weights round-to-nearest, gradients per
+    /// * quantized (`Matrix` under a configured bit-width): block-wise
+    ///   symmetric scaling when `block` is set, else learned levels
+    ///   when a matching-width table is set, otherwise the bucketed
+    ///   min–max grid (weights round-to-nearest, gradients per
     ///   `stochastic_grads`);
     /// * baseline gradient stream (`grad_bits == None`): FP16, what
     ///   FSDP actually ships (§6.1) and what the analytic sizing has
@@ -117,6 +133,9 @@ impl QuantPolicy {
         };
         match (bits, self.quantizes(kind)) {
             (Some(b), true) => {
+                if let Some(blk) = self.block {
+                    return AnyCodec::Block(BlockQuantCodec::new(b, blk, stochastic));
+                }
                 if let Some(l) = learned {
                     if l.bits == b {
                         return AnyCodec::Learned(LearnedCodec::new(l.clone(), self.bucket));
@@ -255,6 +274,35 @@ mod tests {
         // and the analytic size matches the real encoding there too
         let e = b.encode(TensorRole::Grad, &v, ParamKind::Matrix, &mut Pcg64::seeded(5));
         assert_eq!(e.byte_size(), b.wire_bytes(TensorRole::Grad, v.len(), ParamKind::Matrix));
+    }
+
+    #[test]
+    fn block_suffix_switches_codec_and_wins_over_learned() {
+        use crate::quant::codecs::AnyCodec;
+        let mut p = QuantPolicy::wg(8, 4).with_block(128);
+        p.learned_weights = Some(LearnedLevels::uniform(8));
+        match p.codec(TensorRole::Weight, ParamKind::Matrix) {
+            AnyCodec::Block(c) => {
+                assert_eq!(c.bits, 8);
+                assert_eq!(c.block, 128);
+                assert!(!c.stochastic, "weights round to nearest");
+            }
+            other => panic!("weight codec {:?}", other.name()),
+        }
+        match p.codec(TensorRole::Grad, ParamKind::Matrix) {
+            AnyCodec::Block(c) => {
+                assert_eq!(c.bits, 4);
+                assert!(c.stochastic, "grads follow stochastic_grads");
+            }
+            other => panic!("grad codec {:?}", other.name()),
+        }
+        // §5.1 filter still applies under the block format
+        assert_eq!(p.codec(TensorRole::Weight, ParamKind::Norm).name(), "fp32");
+        // and the analytic size still matches the real encoding
+        let v = randv(1000);
+        let e = p.encode(TensorRole::Grad, &v, ParamKind::Matrix, &mut Pcg64::seeded(8));
+        assert_eq!(e.scheme, Scheme::BlockQuant);
+        assert_eq!(e.byte_size(), p.wire_bytes(TensorRole::Grad, v.len(), ParamKind::Matrix));
     }
 
     #[test]

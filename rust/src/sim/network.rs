@@ -105,6 +105,38 @@ impl NetworkModel {
         self.allgather_time(topo, total_bytes)
     }
 
+    /// Time for a two-level collective that moves `intra_bytes` of
+    /// full-model payload on the NVLink hop and `inter_bytes` on the
+    /// NIC hop — the pricing for the hierarchical quantized
+    /// reduce-scatter (8-bit intra / 4-bit inter) and for hpZ-style
+    /// intra-only weight re-gathers (`inter_bytes = 0`). Each node's
+    /// NVLink carries `(g-1)/g` of its hop's payload concurrently with
+    /// every other node; each NIC carries `(n-1)/n` of the inter hop.
+    /// Degenerate levels (one GPU per node, one node) cost nothing on
+    /// their hop.
+    pub fn two_level_time(
+        &self,
+        topo: &Topology,
+        intra_bytes: usize,
+        inter_bytes: usize,
+    ) -> f64 {
+        let g = topo.gpus_per_node as f64;
+        let n = topo.nodes as f64;
+        let lat = self.latency_us * 1e-6;
+        let intra = if topo.gpus_per_node > 1 && intra_bytes > 0 {
+            lat * (g - 1.0)
+                + intra_bytes as f64 * (g - 1.0) / g / self.intra_bytes_per_s()
+        } else {
+            0.0
+        };
+        let inter = if topo.nodes > 1 && inter_bytes > 0 {
+            lat * (n - 1.0) + inter_bytes as f64 * (n - 1.0) / n / self.inter_bytes_per_s()
+        } else {
+            0.0
+        };
+        intra + inter
+    }
+
     /// Wall-clock of an accounted traffic ledger: serialized transfer of
     /// the inter bytes through one NIC plus intra bytes over NVLink.
     /// (An upper bound — per-message latency is charged in full.)
@@ -274,6 +306,26 @@ mod tests {
         let t2 = m.allgather_time(&topo, 2 << 20);
         let lat = m.latency_us * 1e-6 * ((8 - 1) + (4 - 1)) as f64;
         assert!(((t2 - lat) / (t1 - lat) - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn two_level_time_degenerate_levels_are_free() {
+        let m = NetworkModel::paper(10.0);
+        // one node: the inter hop costs nothing regardless of bytes
+        let t = m.two_level_time(&Topology::new(1, 8), 1 << 20, 1 << 30);
+        assert_eq!(t, m.two_level_time(&Topology::new(1, 8), 1 << 20, 0));
+        // one GPU per node: the intra hop costs nothing
+        let t = m.two_level_time(&Topology::new(4, 1), 1 << 30, 1 << 20);
+        assert_eq!(t, m.two_level_time(&Topology::new(4, 1), 0, 1 << 20));
+        // and shrinking the inter payload shrinks the clock
+        let topo = Topology::paper();
+        let t8 = m.two_level_time(&topo, 1 << 20, 8 << 20);
+        let t4 = m.two_level_time(&topo, 1 << 20, 4 << 20);
+        assert!(t4 < t8);
+        // inter bytes hurt more than intra bytes (NIC ≪ NVLink)
+        assert!(
+            m.two_level_time(&topo, 0, 8 << 20) > m.two_level_time(&topo, 8 << 20, 0)
+        );
     }
 
     #[test]

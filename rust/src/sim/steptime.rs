@@ -8,9 +8,10 @@
 //! sizes come from the byte-exact quantization codec; the baseline
 //! transmits FP32 weights and FP16 gradients (§6.1).
 
+use crate::collectives::TwoLevelCodecs;
 use crate::fsdp::pack_groups;
 use crate::model::spec::{GptDims, ParamSpec};
-use crate::quant::{QuantPolicy, TensorRole};
+use crate::quant::{Codec, QuantPolicy, TensorRole};
 
 use super::compute::ComputeModel;
 use super::network::NetworkModel;
@@ -143,6 +144,49 @@ impl StepTimeModel {
             weight_comm_s: self.weight_gathers() as f64
                 * self.net.allgather_time(&self.topo, wb),
             grad_comm_s: self.net.reduce_scatter_time(&self.topo, gb),
+        }
+    }
+
+    /// Per-hop full-model gradient wire bytes of the two-level
+    /// reduce-scatter: `(intra_hop, inter_hop)`. Quantized tensors
+    /// ride the 8-bit block codec inside a node and the 4-bit one
+    /// across nodes; §5.1-filtered tensors carry their ordinary policy
+    /// gradient codec on both hops.
+    pub fn hier_grad_bytes(
+        &self,
+        policy: &QuantPolicy,
+        codecs: &TwoLevelCodecs,
+    ) -> (usize, usize) {
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for p in self.dims.param_spec() {
+            let n = p.numel();
+            if policy.quantizes(p.kind) {
+                intra += codecs.intra.wire_bytes(n);
+                inter += codecs.inter.wire_bytes(n);
+            } else {
+                let b = policy.wire_bytes(TensorRole::Grad, n, p.kind);
+                intra += b;
+                inter += b;
+            }
+        }
+        (intra, inter)
+    }
+
+    /// Step-time breakdown under the hierarchical recipe (`--hier`
+    /// + `--hpz`): the step's first weight AllGather is the ordinary
+    /// hierarchical one, the remaining `n_accum` re-gathers are served
+    /// from the hpZ secondary intra-node partition (NVLink only), and
+    /// the gradient exchange is the two-level reduce-scatter — 8-bit
+    /// payload on the intra hop, 4-bit on the NIC hop.
+    pub fn step_hier(&self, policy: &QuantPolicy, codecs: &TwoLevelCodecs) -> StepBreakdown {
+        let wb = self.weight_bytes(policy);
+        let (g_intra, g_inter) = self.hier_grad_bytes(policy, codecs);
+        StepBreakdown {
+            compute_s: self.compute.step_time(&self.dims, &self.topo),
+            weight_comm_s: self.net.allgather_time(&self.topo, wb)
+                + self.n_accum as f64 * self.net.two_level_time(&self.topo, wb, 0),
+            grad_comm_s: self.net.two_level_time(&self.topo, g_intra, g_inter),
         }
     }
 
@@ -364,6 +408,34 @@ mod tests {
         let m = StepTimeModel::paper("gpt125m", 10.0).unwrap();
         let o = m.step_overlapped_with_budget(&QuantPolicy::baseline(), usize::MAX);
         assert!((o.overlapped_s - o.compute_s.max(o.comm_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hier_step_beats_flat_qsdp_at_low_bandwidth() {
+        // The hierarchical recipe's claim: at NIC-starved bandwidth the
+        // 4-bit cross-node hop + hpZ intra-only re-gathers cut the
+        // step time below flat w8g8, because only the (smaller) inter
+        // payload still touches the NIC.
+        let m = StepTimeModel::paper("gpt1.3b", 10.0).unwrap();
+        let q = QuantPolicy::qsdp_default();
+        let codecs = TwoLevelCodecs::default();
+        let flat = m.step(&q);
+        let hier = m.step_hier(&q, &codecs);
+        assert!(
+            hier.total() < flat.total(),
+            "hier {} not below flat {}",
+            hier.total(),
+            flat.total()
+        );
+        // weight comm: n_accum of the n_accum+1 gathers went NVLink-only
+        assert!(hier.weight_comm_s < flat.weight_comm_s);
+        // the inter gradient payload is about half the 8-bit one
+        let (g_intra, g_inter) = m.hier_grad_bytes(&q, &codecs);
+        assert!(g_intra > g_inter, "8-bit intra hop must outweigh 4-bit inter hop");
+        let r = g_intra as f64 / g_inter as f64;
+        assert!((1.7..2.1).contains(&r), "intra/inter byte ratio {r}");
+        // compute is untouched by the communication recipe
+        assert_eq!(hier.compute_s, flat.compute_s);
     }
 
     #[test]

@@ -20,8 +20,16 @@ use std::collections::HashMap;
 /// unless it is an explicit boolean literal. Extend this list when
 /// adding a boolean flag — and only then, so a future value-typed flag
 /// can never be silently misparsed by appearing here.
-pub const BOOL_FLAGS: &[&str] =
-    &["fabric-persistent", "fine", "full", "overlap", "skip-if-no-loopback", "snapshot-only"];
+pub const BOOL_FLAGS: &[&str] = &[
+    "fabric-persistent",
+    "fine",
+    "full",
+    "hier",
+    "hpz",
+    "overlap",
+    "skip-if-no-loopback",
+    "snapshot-only",
+];
 
 fn is_bool_literal(s: &str) -> bool {
     matches!(s, "true" | "false" | "1" | "0" | "yes" | "no")

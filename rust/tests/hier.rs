@@ -1,0 +1,272 @@
+//! Integration tests for the hierarchical two-level quantized
+//! collectives (8-bit intra-node hop, 4-bit cross-node hop, error
+//! feedback) — the differential discipline of `fabric_differential.rs`
+//! extended with EF-aware bounds:
+//!
+//! * the cross-node `TrafficLedger` bytes must drop vs the flat 8-bit
+//!   quantized ReduceScatter by roughly the 8→4 bit ratio,
+//! * the two-level result must match the flat quantized path within a
+//!   codec-resolution × hop-count bound (both sit that close to the
+//!   exact FP32 sum),
+//! * error feedback must *reduce* the long-run bias relative to the
+//!   same pipeline with its residuals discarded,
+//! * the degenerate world-1 corner stays bit-exact with zero wire
+//!   bytes — the transport is invisible.
+
+use qsdp::collectives::{
+    two_level_bytes, two_level_reduce_scatter, Collective, LockstepFabric, TensorEf,
+    TrafficLedger, TwoLevelCodecs,
+};
+use qsdp::quant::MinMaxCodec;
+use qsdp::sim::Topology;
+use qsdp::util::Pcg64;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn sum_of(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let mut s = inputs[0].clone();
+    for x in &inputs[1..] {
+        for (a, &b) in s.iter_mut().zip(x) {
+            *a += b;
+        }
+    }
+    s
+}
+
+#[test]
+fn hier_cross_node_bytes_drop_vs_flat_8bit() {
+    // Acceptance pin: on the same topology and tensor, the two-level
+    // scheme's NIC bytes are the flat 8-bit scheme's divided by about
+    // the bit ratio — the per-block scales and the shared headers eat a
+    // little of the nominal 2x, so the band is (1.7, 2.1). The lockstep
+    // fabric is the right flat reference: its phase-2 accounting is
+    // structurally identical (one message per remote node per
+    // destination shard), so the ratio isolates the codec.
+    for topo in [Topology::new(2, 2), Topology::new(4, 2)] {
+        let n = 8192;
+        let inputs: Vec<Vec<f32>> =
+            (0..topo.world()).map(|r| rand_vec(n, 10 + r as u64)).collect();
+
+        let flat = LockstepFabric::new(topo);
+        let codec8 = MinMaxCodec::new(8, 1024, true);
+        let mut flat_ledger = TrafficLedger::new();
+        flat.reduce_scatter(&inputs, &codec8, &mut Pcg64::seeded(1), &mut flat_ledger);
+
+        let codecs = TwoLevelCodecs::default();
+        let mut ef = TensorEf::zeros(&topo, n);
+        let mut hier_ledger = TrafficLedger::new();
+        two_level_reduce_scatter(
+            &topo,
+            &inputs,
+            &codecs,
+            &mut ef,
+            &mut Pcg64::seeded(2),
+            &mut hier_ledger,
+        );
+
+        assert!(
+            hier_ledger.inter_bytes < flat_ledger.inter_bytes,
+            "{topo:?}: two-level NIC bytes {} not below flat {}",
+            hier_ledger.inter_bytes,
+            flat_ledger.inter_bytes
+        );
+        let ratio = flat_ledger.inter_bytes as f64 / hier_ledger.inter_bytes as f64;
+        assert!(
+            (1.7..2.1).contains(&ratio),
+            "{topo:?}: inter byte ratio {ratio} outside the 8->4 bit band"
+        );
+        // and the two-level ledger is exactly the closed form
+        let (intra, inter) = two_level_bytes(&topo, &codecs, n);
+        assert_eq!(hier_ledger.intra_bytes, intra, "{topo:?}");
+        assert_eq!(hier_ledger.inter_bytes, inter, "{topo:?}");
+    }
+}
+
+#[test]
+fn hier_matches_flat_quantized_path_within_codec_bound() {
+    // EF-aware differential bound: with zeroed EF and deterministic
+    // codecs, the two-level output and the flat 8-bit lockstep output
+    // must agree within the sum of both paths' worst-case resolutions —
+    // each sits within its own hop bound of the exact FP32 sum, so
+    // their distance telescopes. Per element:
+    //   two-level: g·step8(absmax_in) + (nodes-1)·step4(g·absmax_in)
+    //   flat:      nodes·step8(range of the node partial)
+    let topo = Topology::new(2, 2);
+    let g = topo.gpus_per_node as f32;
+    let n = 2048;
+    let inputs: Vec<Vec<f32>> =
+        (0..topo.world()).map(|r| rand_vec(n, 40 + r as u64)).collect();
+    let exact = sum_of(&inputs);
+    let absmax_in = inputs
+        .iter()
+        .flat_map(|v| v.iter())
+        .fold(0.0f32, |a, &x| a.max(x.abs()));
+
+    let codecs = TwoLevelCodecs::deterministic();
+    let mut ef = TensorEf::zeros(&topo, n);
+    let mut ledger = TrafficLedger::new();
+    let hier = two_level_reduce_scatter(
+        &topo,
+        &inputs,
+        &codecs,
+        &mut ef,
+        &mut Pcg64::seeded(3),
+        &mut ledger,
+    );
+
+    let flat = LockstepFabric::new(topo);
+    let codec8 = MinMaxCodec::new(8, 1024, false);
+    let mut flat_ledger = TrafficLedger::new();
+    let flat_out =
+        flat.reduce_scatter(&inputs, &codec8, &mut Pcg64::seeded(4), &mut flat_ledger);
+
+    let absmax_partial = g * absmax_in;
+    let hier_bound = g * topo.nodes as f32 * codecs.intra.max_step(absmax_in)
+        + (topo.nodes as f32 - 1.0) * codecs.inter.max_step(absmax_partial);
+    // flat lockstep: one 8-bit RTN encode per node partial; bucketed
+    // min-max resolution is (hi-lo)/255 ≤ 2·absmax_partial/255
+    let flat_bound = topo.nodes as f32 * absmax_partial / 255.0;
+    let bound = hier_bound + flat_bound;
+    for (d, (h, f)) in hier.iter().zip(&flat_out).enumerate() {
+        assert_eq!(h.len(), f.len(), "dst {d} shard length");
+        for (i, (&a, &b)) in h.iter().zip(f.iter()).enumerate() {
+            assert!(
+                (a - b).abs() <= bound * 1.001,
+                "dst {d} elem {i}: two-level {a} vs flat {b} exceeds {bound}"
+            );
+        }
+        // and both are that close to the exact sum
+        let range = topo.shard_range(n, d);
+        for ((&a, &b), &e) in h.iter().zip(f.iter()).zip(&exact[range]) {
+            assert!((a - e).abs() <= hier_bound * 1.001, "dst {d}: two-level vs exact");
+            assert!((b - e).abs() <= flat_bound * 1.001, "dst {d}: flat vs exact");
+        }
+    }
+}
+
+#[test]
+fn hier_error_feedback_beats_no_feedback_over_steps() {
+    // The point of carrying the residual: with deterministic codecs the
+    // no-EF pipeline repeats the identical bias every step, while EF
+    // re-injects it so the running mean converges to the exact sum. The
+    // EF mean error must come out strictly below the no-EF mean error.
+    let topo = Topology::new(2, 2);
+    let codecs = TwoLevelCodecs::deterministic();
+    let n = 512;
+    let inputs: Vec<Vec<f32>> =
+        (0..topo.world()).map(|r| rand_vec(n, 60 + r as u64)).collect();
+    let exact = sum_of(&inputs);
+    let steps = 32;
+
+    let run = |keep_ef: bool| -> f64 {
+        let mut ef = TensorEf::zeros(&topo, n);
+        let mut rng = Pcg64::seeded(5);
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..steps {
+            let mut ledger = TrafficLedger::new();
+            let out =
+                two_level_reduce_scatter(&topo, &inputs, &codecs, &mut ef, &mut rng, &mut ledger);
+            if !keep_ef {
+                ef.reset();
+            }
+            for (d, shard) in out.iter().enumerate() {
+                let range = topo.shard_range(n, d);
+                for (m, &v) in mean[range].iter_mut().zip(shard) {
+                    *m += v as f64 / steps as f64;
+                }
+            }
+        }
+        mean.iter()
+            .zip(&exact)
+            .map(|(&m, &e)| (m - e as f64).abs())
+            .fold(0.0f64, f64::max)
+    };
+
+    let with_ef = run(true);
+    let without_ef = run(false);
+    assert!(
+        with_ef < without_ef,
+        "EF mean error {with_ef} not below no-EF {without_ef}"
+    );
+    // the no-EF bias is a real, resolution-scale quantity — the
+    // comparison is not trivially 0 < 0
+    assert!(without_ef > 1e-4, "no-EF bias unexpectedly tiny: {without_ef}");
+}
+
+#[test]
+fn hier_world1_is_bit_exact_with_zero_bytes() {
+    // Degenerate corner: one rank, one node — both hops vanish, the
+    // input must come back bit-identical and the wire must stay silent,
+    // exactly like every registered flat fabric at world 1.
+    let topo = Topology::new(1, 1);
+    let n = 777;
+    let inputs = vec![rand_vec(n, 80)];
+    let mut ef = TensorEf::zeros(&topo, n);
+    let mut ledger = TrafficLedger::new();
+    let out = two_level_reduce_scatter(
+        &topo,
+        &inputs,
+        &TwoLevelCodecs::default(),
+        &mut ef,
+        &mut Pcg64::seeded(6),
+        &mut ledger,
+    );
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0], inputs[0], "world-1 two-level RS must be the identity");
+    assert_eq!(ledger.intra_bytes, 0);
+    assert_eq!(ledger.inter_bytes, 0);
+    assert!(ef.is_zero(), "no quantization happened, no residual may appear");
+}
+
+#[test]
+fn hier_ef_state_survives_and_resets_like_trainer_rollback() {
+    // Integration-level restatement of the trainer contract: residuals
+    // persist across calls (they are the carried state), and a reset —
+    // what `load_checkpoint` / elastic recovery performs — returns the
+    // pipeline to the fresh-state trajectory bit-for-bit under
+    // deterministic codecs.
+    let topo = Topology::new(2, 2);
+    let codecs = TwoLevelCodecs::deterministic();
+    let n = 256;
+    let inputs: Vec<Vec<f32>> =
+        (0..topo.world()).map(|r| rand_vec(n, 90 + r as u64)).collect();
+    let mut ef = TensorEf::zeros(&topo, n);
+    let mut ledger = TrafficLedger::new();
+    let first = two_level_reduce_scatter(
+        &topo,
+        &inputs,
+        &codecs,
+        &mut ef,
+        &mut Pcg64::seeded(7),
+        &mut ledger,
+    );
+    assert!(!ef.is_zero(), "residual must persist after the call");
+    let second = two_level_reduce_scatter(
+        &topo,
+        &inputs,
+        &codecs,
+        &mut ef,
+        &mut Pcg64::seeded(7),
+        &mut ledger,
+    );
+    // EF carried: the second step re-injects the residual, so on a
+    // constant gradient it must differ from the first (the correction
+    // is visible in the output).
+    assert_ne!(first, second, "carried EF must alter the constant-gradient output");
+    // rollback: reset returns to the fresh trajectory exactly
+    ef.reset();
+    let replay = two_level_reduce_scatter(
+        &topo,
+        &inputs,
+        &codecs,
+        &mut ef,
+        &mut Pcg64::seeded(7),
+        &mut ledger,
+    );
+    assert_eq!(first, replay, "reset EF must reproduce the fresh-state output");
+}

@@ -72,7 +72,7 @@ fn prop_minmax_error_bound() {
         let v = rand_vec(rng, n, 2.0);
         let q = MinMaxQuantizer::new(bits, bucket, false);
         let (mut codes, mut meta, mut out) = (vec![], vec![], vec![]);
-        q.encode(&v, &mut codes, &mut meta, rng);
+        q.encode(&v, &mut codes, &mut meta, rng).unwrap();
         q.decode(&codes, &meta, &mut out);
         for (bi, (c, o)) in v.chunks(bucket).zip(out.chunks(bucket)).enumerate() {
             let half = meta[bi].scale / 2.0 + 1e-6;

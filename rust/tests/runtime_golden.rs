@@ -49,7 +49,7 @@ fn minmax_codes_match_jnp_oracle() {
     let want_codes = read_i32(&codes);
     let q = MinMaxQuantizer::new(4, 1024, true);
     let (mut got_codes, mut meta, mut got_dq) = (vec![], vec![], vec![]);
-    q.encode_with_noise(&values, &noise, &mut got_codes, &mut meta);
+    q.encode_with_noise(&values, &noise, &mut got_codes, &mut meta).unwrap();
     q.decode(&got_codes, &meta, &mut got_dq);
     let mut flips = 0usize;
     for (i, (&g, &w)) in got_codes.iter().zip(&want_codes).enumerate() {
