@@ -119,6 +119,7 @@ fn snapshot_grid() -> Vec<BenchRow> {
         std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
         0,
         0,
+        std::time::Duration::from_secs(60),
     ) {
         Ok(f) => Some(f),
         Err(e) => {

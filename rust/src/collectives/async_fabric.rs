@@ -136,7 +136,8 @@ use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
 use crate::util::Pcg64;
 use std::cell::Cell;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::time::Duration;
 
 /// Release-build gather cross-check sampling period (1-in-N calls).
 pub const DEFAULT_CHECK_EVERY: u64 = 64;
@@ -145,12 +146,36 @@ pub const DEFAULT_CHECK_EVERY: u64 = 64;
 /// rank alternates send/recv), the second hides scheduling jitter.
 const RING_DEPTH: usize = 2;
 
+/// Default receive deadline per channel hop. Matches the socket
+/// backend's stall backstop: in-process frames arrive in microseconds,
+/// so only a wedged peer (or an injected dropped frame) gets here —
+/// and fails typed instead of blocking forever.
+const CHANNEL_STALL: Duration = Duration::from_secs(60);
+
 /// One rank's end of the in-process ring: a sender to its successor's
 /// inbox and the receiving end of its own inbox. The channel moves the
 /// `Vec<u8>` by pointer, so an exchange costs no payload copy at all.
 struct ChannelLink {
     tx: SyncSender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
+    /// Receive deadline: a predecessor that neither sends nor
+    /// disconnects for this long fails the hop `Stalled`.
+    stall: Duration,
+}
+
+impl ChannelLink {
+    fn recv_frame(&mut self) -> Result<Vec<u8>, RingError> {
+        match self.rx.recv_timeout(self.stall) {
+            Ok(frame) => Ok(frame),
+            Err(RecvTimeoutError::Timeout) => Err(RingError::stalled(format!(
+                "no frame from the ring predecessor for {:.1}s",
+                self.stall.as_secs_f64()
+            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(RingError::predecessor("ring predecessor dropped its channel end"))
+            }
+        }
+    }
 }
 
 impl RingTransport for ChannelLink {
@@ -159,10 +184,12 @@ impl RingTransport for ChannelLink {
         self.tx
             .send(outgoing)
             .map_err(|_| RingError::successor("ring successor dropped its inbox"))?;
-        *buf = self
-            .rx
-            .recv()
-            .map_err(|_| RingError::predecessor("ring predecessor dropped its channel end"))?;
+        *buf = self.recv_frame()?;
+        Ok(())
+    }
+
+    fn recv_only(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+        *buf = self.recv_frame()?;
         Ok(())
     }
 }
@@ -172,11 +199,11 @@ impl RingTransport for ChannelLink {
 /// one producer, so if a rank thread dies its successor sees a
 /// disconnect instead of blocking forever, and the failure cascades
 /// around the ring.
-fn channel_links(p: usize) -> Vec<ChannelLink> {
+fn channel_links(p: usize, stall: Duration) -> Vec<ChannelLink> {
     let (txs, rxs): (Vec<_>, Vec<_>) = (0..p).map(|_| sync_channel::<Vec<u8>>(RING_DEPTH)).unzip();
     let next_txs: Vec<SyncSender<Vec<u8>>> = (0..p).map(|r| txs[(r + 1) % p].clone()).collect();
     drop(txs);
-    rxs.into_iter().zip(next_txs).map(|(rx, tx)| ChannelLink { tx, rx }).collect()
+    rxs.into_iter().zip(next_txs).map(|(rx, tx)| ChannelLink { tx, rx, stall }).collect()
 }
 
 /// Spawn a persistent [`FabricRuntime`] over in-process channel links —
@@ -184,10 +211,25 @@ fn channel_links(p: usize) -> Vec<ChannelLink> {
 /// crate-wide so the elastic fabric can host its replicated inner ring
 /// on the same runtime. Requires `topo.world() > 1`.
 pub(crate) fn spawn_channel_runtime(topo: Topology) -> FabricRuntime {
-    let links = channel_links(topo.world())
+    spawn_channel_runtime_with(topo, CHANNEL_STALL, None)
+}
+
+/// [`spawn_channel_runtime`] with an explicit per-hop receive deadline
+/// and an optional fault plan: ranks the plan targets get their link
+/// wrapped in the injector; everyone else keeps a bare channel link.
+pub(crate) fn spawn_channel_runtime_with(
+    topo: Topology,
+    stall: Duration,
+    plan: Option<&crate::faults::FaultPlan>,
+) -> FabricRuntime {
+    let links: Vec<Box<dyn RingTransport>> = channel_links(topo.world(), stall)
         .into_iter()
         .map(|l| Box::new(l) as Box<dyn RingTransport>)
         .collect();
+    let links = match plan {
+        Some(plan) => crate::faults::arm_links(links, plan),
+        None => links,
+    };
     FabricRuntime::spawn(topo, links)
 }
 
@@ -214,7 +256,7 @@ where
     T: Send,
     F: Fn(usize, &mut ChannelLink) -> (T, TrafficLedger) + Sync,
 {
-    let links = channel_links(p);
+    let links = channel_links(p, CHANNEL_STALL);
     std::thread::scope(|s| {
         let handles: Vec<_> = links
             .into_iter()
@@ -273,6 +315,23 @@ impl AsyncFabric {
     pub fn with_options(topo: Topology, persistent: bool, check_every: u64) -> Self {
         let runtime = (persistent && topo.world() > 1).then(|| spawn_channel_runtime(topo));
         AsyncFabric { topo, check_every, calls: Cell::new(0), persistent, runtime }
+    }
+
+    /// A persistent fabric with a [`crate::faults::FaultPlan`] armed on
+    /// its ring links and an explicit per-hop receive deadline (so a
+    /// planned dropped frame stalls out in `stall` instead of the
+    /// generous default). Only the chaos harness and the failure tests
+    /// construct fabrics this way; the normal constructors carry no
+    /// injection hook at all.
+    pub fn with_fault_plan(
+        topo: Topology,
+        check_every: u64,
+        stall: Duration,
+        plan: &crate::faults::FaultPlan,
+    ) -> Self {
+        assert!(topo.world() > 1, "fault injection needs a ring (world > 1)");
+        let runtime = Some(spawn_channel_runtime_with(topo, stall, Some(plan)));
+        AsyncFabric { topo, check_every, calls: Cell::new(0), persistent: true, runtime }
     }
 
     /// Execution mode label (for logs and benches).

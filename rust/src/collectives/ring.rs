@@ -49,6 +49,14 @@ pub(crate) trait RingTransport: Send {
     /// On success `buf` holds exactly the received frame; its old
     /// capacity is recycled by the transport for a later call.
     fn exchange(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError>;
+
+    /// Receive the predecessor's frame into `buf` *without sending
+    /// anything* — the receive half of [`RingTransport::exchange`],
+    /// with the same replace-contents contract. Only the fault
+    /// injector uses this (a dropped frame skips the send but must
+    /// still drain the incoming side so the dropper keeps pace until
+    /// the cascade reaches it); healthy rings never call it.
+    fn recv_only(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError>;
 }
 
 /// What went wrong on a ring hop.

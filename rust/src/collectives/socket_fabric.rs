@@ -312,6 +312,36 @@ impl RingTransport for SocketLink {
         std::mem::swap(buf, &mut self.in_buf);
         Ok(())
     }
+
+    /// Receive-only half of the exchange, for the fault injector's
+    /// dropped-frame semantics: pump the incoming stream under the same
+    /// stall backstop, send nothing.
+    fn recv_only(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+        let mut st = InProgress::new();
+        let mut last_progress = Instant::now();
+        let mut idle_spins = 0u32;
+        while !st.done() {
+            if pump_read(&mut self.inp, &mut st, &mut self.in_buf)? {
+                last_progress = Instant::now();
+                idle_spins = 0;
+            } else {
+                if last_progress.elapsed() > self.stall {
+                    return Err(RingError::stalled(format!(
+                        "no incoming progress for {:.1}s (receive-only)",
+                        self.stall.as_secs_f64()
+                    )));
+                }
+                idle_spins += 1;
+                if idle_spins < 64 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+        }
+        std::mem::swap(buf, &mut self.in_buf);
+        Ok(())
+    }
 }
 
 /// Accept one connection, polling against a deadline so a sandbox that
@@ -341,7 +371,7 @@ fn accept_with_deadline(listener: &TcpListener, limit: Duration) -> Result<TcpSt
 /// listens on `base_port + r` (for firewalled setups that need pinned
 /// ports). Connections are made once, here; the links live until the
 /// fabric drops.
-fn ring_links(addr: IpAddr, base_port: u16, p: usize) -> Result<Vec<SocketLink>> {
+fn ring_links(addr: IpAddr, base_port: u16, p: usize, stall: Duration) -> Result<Vec<SocketLink>> {
     let mut listeners = Vec::with_capacity(p);
     for r in 0..p {
         let port = if base_port == 0 {
@@ -393,7 +423,7 @@ fn ring_links(addr: IpAddr, base_port: u16, p: usize) -> Result<Vec<SocketLink>>
             s.set_nodelay(true).context("socket fabric: set_nodelay")?;
             s.set_nonblocking(true).context("socket fabric: set_nonblocking")?;
         }
-        links.push(SocketLink::new(out, inp));
+        links.push(SocketLink::with_stall(out, inp, stall));
     }
     Ok(links)
 }
@@ -424,24 +454,59 @@ impl SocketFabric {
     /// cross-check sampling. Fails if the environment forbids loopback
     /// sockets — see [`loopback_available`] for a cheap probe.
     pub fn new(topo: Topology) -> Result<Self> {
-        Self::with_options(topo, IpAddr::V4(Ipv4Addr::LOCALHOST), 0, DEFAULT_CHECK_EVERY)
+        let local = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        Self::with_options(topo, local, 0, DEFAULT_CHECK_EVERY, STALL_LIMIT)
     }
 
     /// Full control: bind address, base port (rank `r` listens on
-    /// `base_port + r`; 0 = ephemeral), and the release-build gather
+    /// `base_port + r`; 0 = ephemeral), the release-build gather
     /// cross-check sampling period (every Nth call; 0 = never — debug
-    /// builds always check).
+    /// builds always check), and the per-hop stall deadline (no
+    /// progress in either direction for this long fails the hop;
+    /// `--fabric-stall-ms` plumbs it from the CLI).
     pub fn with_options(
         topo: Topology,
         addr: IpAddr,
         base_port: u16,
         check_every: u64,
+        stall: Duration,
+    ) -> Result<Self> {
+        Self::build(topo, addr, base_port, check_every, stall, None)
+    }
+
+    /// A fabric with a [`crate::faults::FaultPlan`] armed on its TCP
+    /// ring links — chaos-harness and failure-test use only; the
+    /// normal constructors carry no injection hook.
+    pub fn with_fault_plan(
+        topo: Topology,
+        addr: IpAddr,
+        base_port: u16,
+        check_every: u64,
+        stall: Duration,
+        plan: &crate::faults::FaultPlan,
+    ) -> Result<Self> {
+        assert!(topo.world() > 1, "fault injection needs a ring (world > 1)");
+        Self::build(topo, addr, base_port, check_every, stall, Some(plan))
+    }
+
+    fn build(
+        topo: Topology,
+        addr: IpAddr,
+        base_port: u16,
+        check_every: u64,
+        stall: Duration,
+        plan: Option<&crate::faults::FaultPlan>,
     ) -> Result<Self> {
         let runtime = if topo.world() > 1 {
-            let links = ring_links(addr, base_port, topo.world())?
-                .into_iter()
-                .map(|l| Box::new(l) as Box<dyn RingTransport>)
-                .collect();
+            let links: Vec<Box<dyn RingTransport>> =
+                ring_links(addr, base_port, topo.world(), stall)?
+                    .into_iter()
+                    .map(|l| Box::new(l) as Box<dyn RingTransport>)
+                    .collect();
+            let links = match plan {
+                Some(plan) => crate::faults::arm_links(links, plan),
+                None => links,
+            };
             Some(FabricRuntime::spawn(topo, links))
         } else {
             // World 1 never touches a wire: the collectives
@@ -822,6 +887,7 @@ mod tests {
             IpAddr::V4(Ipv4Addr::LOCALHOST),
             port,
             DEFAULT_CHECK_EVERY,
+            STALL_LIMIT,
         )
         .expect_err("binding an occupied configured port must fail");
         let msg = format!("{err:#}");

@@ -136,6 +136,7 @@ impl FabricKind {
                 opts.socket_addr,
                 opts.socket_base_port,
                 opts.check_every,
+                std::time::Duration::from_millis(opts.stall_ms),
             )?),
             FabricKind::Elastic => {
                 let peer = opts.elastic.ok_or_else(|| {
@@ -184,6 +185,11 @@ pub struct FabricOptions {
     /// `socket_base_port + r`; 0 = kernel-assigned ephemeral ports
     /// (`--fabric-port`, default 0).
     pub socket_base_port: u16,
+    /// Socket-backend stall deadline in milliseconds: a ring hop with
+    /// no read/write progress for this long fails with a typed
+    /// `Stalled` error instead of hanging (`--fabric-stall-ms`,
+    /// default 60000; must be positive).
+    pub stall_ms: u64,
     /// The elastic backend's per-rank identity and rendezvous
     /// endpoint; `None` (the default) for every in-process backend.
     /// Set programmatically by the elastic worker driver (the flags
@@ -199,6 +205,7 @@ impl Default for FabricOptions {
             check_every: crate::collectives::async_fabric::DEFAULT_CHECK_EVERY,
             socket_addr: IpAddr::V4(Ipv4Addr::LOCALHOST),
             socket_base_port: 0,
+            stall_ms: 60_000,
             elastic: None,
         }
     }
@@ -316,6 +323,14 @@ impl RunConfig {
                 socket_base_port: u16::try_from(args.u64_or("fabric-port", 0)).map_err(|_| {
                     anyhow::anyhow!("--fabric-port expects a port number below 65536")
                 })?,
+                stall_ms: {
+                    let ms = args.u64_or("fabric-stall-ms", 60_000);
+                    if ms == 0 {
+                        bail!("--fabric-stall-ms must be positive (a 0 deadline would \
+                               fail every ring hop immediately)");
+                    }
+                    ms
+                },
                 elastic: None,
             },
         })
@@ -572,6 +587,25 @@ mod tests {
         let fabric = c.fabric.build_with(c.topo, c.fabric_opts);
         assert_eq!(fabric.name(), "async");
         assert_eq!(fabric.topo(), c.topo);
+    }
+
+    #[test]
+    fn fabric_stall_ms_flag_parses_and_rejects_zero() {
+        let a = Args::parse("train".split_whitespace().map(|s| s.to_string()));
+        let c = RunConfig::from_args(&a).unwrap();
+        assert_eq!(c.fabric_opts.stall_ms, 60_000, "default matches the old hard-coded limit");
+        let a = Args::parse(
+            "train --fabric socket --fabric-stall-ms 2500"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let c = RunConfig::from_args(&a).unwrap();
+        assert_eq!(c.fabric_opts.stall_ms, 2500);
+        let a = Args::parse(
+            "train --fabric-stall-ms 0".split_whitespace().map(|s| s.to_string()),
+        );
+        let err = RunConfig::from_args(&a).expect_err("a zero stall deadline is rejected");
+        assert!(format!("{err:#}").contains("fabric-stall-ms"), "error names the flag: {err:#}");
     }
 
     #[test]

@@ -6,15 +6,50 @@
 //! ```text
 //! magic "QSDPCKPT" | version u32 | step u64 | n_tensors u32
 //! per tensor: name_len u32 | name utf8 | numel u64 | f32 data
-//! then the same tensor list twice more for Adam m and v states.
+//! then the same tensor list twice more for Adam m and v states,
+//! then a crc32 u32 footer over every preceding byte.
 //! ```
+//!
+//! The footer (format version 2) lets a recovering rank tell a torn
+//! or bit-flipped file from a good one *before* trusting its
+//! contents: [`Checkpoint::load`] verifies it, and
+//! [`load_newest_valid`] walks back to the newest file that passes.
 
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{Cursor, Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"QSDPCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+const FOOTER_BYTES: usize = 4;
+
+/// CRC32 (IEEE, polynomial 0xEDB88320) lookup table, built at compile
+/// time — no external checksum crates in the offline build.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC32 of `bytes` — the checksum stored in the 4-byte
+/// little-endian footer of every checkpoint file.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
 
 /// A checkpoint: step counter + named tensors + Adam moments.
 #[derive(Clone, Debug, PartialEq)]
@@ -66,11 +101,10 @@ fn read_tensors<R: Read>(r: &mut R, n: usize) -> Result<(Vec<String>, Vec<Vec<f3
 }
 
 impl Checkpoint {
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut w = BufWriter::new(std::fs::File::create(path)?);
+    /// The full on-disk byte image: header, three tensor sections,
+    /// and the CRC32 footer over everything before it.
+    fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut w: Vec<u8> = Vec::new();
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
         w.write_all(&self.step.to_le_bytes())?;
@@ -78,14 +112,51 @@ impl Checkpoint {
         write_tensors(&mut w, &self.names, &self.params)?;
         write_tensors(&mut w, &self.names, &self.adam_m)?;
         write_tensors(&mut w, &self.names, &self.adam_v)?;
-        w.flush()?;
+        let crc = crc32(&w);
+        w.extend_from_slice(&crc.to_le_bytes());
+        Ok(w)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_bytes()?)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Deliberately torn write for the chaos harness: only the first
+    /// `keep` bytes of the real image reach disk, exactly as a crash
+    /// mid-write (without the atomic rename) would leave the file.
+    /// [`Checkpoint::load`] must reject the result by checksum; at
+    /// least one byte is always cut so the file is never valid.
+    pub fn save_torn(&self, path: &Path, keep: usize) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let bytes = self.to_bytes()?;
+        let keep = keep.min(bytes.len() - 1);
+        std::fs::write(path, &bytes[..keep])
+            .with_context(|| format!("writing torn {}", path.display()))?;
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut r = BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-        );
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        if bytes.len() < MAGIC.len() + FOOTER_BYTES {
+            bail!("truncated checkpoint ({} bytes)", bytes.len());
+        }
+        let (body, footer) = bytes.split_at(bytes.len() - FOOTER_BYTES);
+        let stored = u32::from_le_bytes([footer[0], footer[1], footer[2], footer[3]]);
+        let computed = crc32(body);
+        if stored != computed {
+            bail!(
+                "checkpoint checksum mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            );
+        }
+        let mut r = Cursor::new(body);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -107,6 +178,9 @@ impl Checkpoint {
         let (names_v, adam_v) = read_tensors(&mut r, n)?;
         if names != names_m || names != names_v {
             bail!("checkpoint tensor lists disagree between sections");
+        }
+        if (r.position() as usize) != body.len() {
+            bail!("checkpoint has {} trailing bytes", body.len() - r.position() as usize);
         }
         Ok(Checkpoint { step, names, params, adam_m, adam_v })
     }
@@ -150,10 +224,37 @@ pub fn list_steps(dir: &Path) -> Vec<u64> {
     steps
 }
 
-/// The newest checkpoint step in `dir`, if any — what a restarted rank
-/// offers the rendezvous as its `ckpt_step`.
+/// The newest checkpoint step in `dir`, if any, valid or not. Prefer
+/// [`latest_valid_step`] anywhere the answer feeds recovery.
 pub fn latest_step(dir: &Path) -> Option<u64> {
     list_steps(dir).pop()
+}
+
+/// The newest checkpoint in `dir` that passes checksum and structural
+/// verification. Corrupt or truncated files are logged, deleted, and
+/// skipped, so a torn newest write falls back to the previous good
+/// step instead of poisoning recovery.
+pub fn load_newest_valid(dir: &Path) -> Option<(u64, Checkpoint)> {
+    for t in list_steps(dir).into_iter().rev() {
+        let path = step_path(dir, t);
+        match Checkpoint::load(&path) {
+            Ok(ck) => return Some((t, ck)),
+            Err(e) => {
+                eprintln!(
+                    "checkpoint {} invalid ({e:#}); pruning it and falling back",
+                    path.display()
+                );
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+    None
+}
+
+/// The newest checksum-valid checkpoint step in `dir` — what a
+/// restarted rank offers the rendezvous as its `ckpt_step`.
+pub fn latest_valid_step(dir: &Path) -> Option<u64> {
+    load_newest_valid(dir).map(|(t, _)| t)
 }
 
 /// Retention: keep the newest `keep` step checkpoints plus step 0 (the
@@ -231,5 +332,58 @@ mod tests {
         let data = std::fs::read(&p).unwrap();
         std::fs::write(&p, &data[..data.len() / 2]).unwrap();
         assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // The canonical IEEE CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn rejects_single_flipped_byte() {
+        let p = std::env::temp_dir().join("qsdp_ckpt_flip.bin");
+        let c = sample();
+        c.save(&p).unwrap();
+        let mut data = std::fs::read(&p).unwrap();
+        // Flip one payload byte mid-file: magic/version/lengths all
+        // still parse, only the checksum can catch it.
+        let mid = data.len() / 2;
+        data[mid] ^= 0x40;
+        std::fs::write(&p, &data).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "got: {err:#}");
+    }
+
+    #[test]
+    fn newest_valid_falls_back_past_torn_and_flipped_files() {
+        let dir = std::env::temp_dir().join("qsdp_ckpt_valid_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        for t in [0u64, 3, 6] {
+            let mut ck = sample();
+            ck.step = t;
+            ck.save_atomic(&step_path(&dir, t)).unwrap();
+        }
+        // Step 9 is torn mid-write, step 12's newest byte is flipped:
+        // both must be skipped (and deleted) on the way to step 6.
+        let mut ck = sample();
+        ck.step = 9;
+        ck.save_torn(&step_path(&dir, 9), 40).unwrap();
+        ck.step = 12;
+        ck.save(&step_path(&dir, 12)).unwrap();
+        let p12 = step_path(&dir, 12);
+        let mut data = std::fs::read(&p12).unwrap();
+        data[20] ^= 0x01;
+        std::fs::write(&p12, &data).unwrap();
+
+        assert_eq!(latest_step(&dir), Some(12), "raw listing still sees the bad files");
+        let (t, back) = load_newest_valid(&dir).expect("step 6 is intact");
+        assert_eq!(t, 6);
+        assert_eq!(back.step, 6);
+        assert_eq!(list_steps(&dir), vec![0, 3, 6], "bad files pruned during fallback");
+        assert_eq!(latest_valid_step(&dir), Some(6));
+        let missing = std::env::temp_dir().join("qsdp_ckpt_valid_missing");
+        assert!(load_newest_valid(&missing).is_none());
     }
 }

@@ -1,0 +1,595 @@
+//! The chaos driver: seeded fault scenarios over the fabric stack.
+//!
+//! `qsdp chaos --seeds N` runs one scenario per seed. The seed fully
+//! determines the scenario: its low bits pick a category (which layer
+//! gets hurt, and how) and a [`crate::faults::FaultPlan`] drawn from
+//! the seed supplies every parameter — target rank, exchange index,
+//! corrupted byte, kill delay. Because the plan is fixed before
+//! anything runs, the *injected-event trace* reported for a seed is a
+//! pure function of that seed, and so is the verdict class; a failing
+//! seed replays exactly with `qsdp chaos --seed S`.
+//!
+//! Every scenario must end in one of three acceptable ways (the
+//! trichotomy the soak asserts):
+//!
+//! * **completed** — the run finishes bit-exact: its state digest
+//!   equals the fault-free reference (benign faults, e.g. delays).
+//! * **surfaced** — the fault becomes a *typed* error or failed
+//!   cross-check naming the op and rank, with no hang and the fabric
+//!   still droppable (corruption, truncation, dropped frames).
+//! * **recovered** — the stack routes around the fault and ends in a
+//!   verified-good state: checkpoint fallback lands on a
+//!   checksum-valid step, a killed rank's job still prints the
+//!   reference digests after re-rendezvous.
+//!
+//! Anything else — a hang (caught by a watchdog), a wrong digest, a
+//! silently swallowed fault — is a **failed** verdict and fails the
+//! soak. Scenarios needing resources a sandbox may lack (loopback
+//! TCP, the built binary) self-report **skipped**.
+
+use super::{flip_file_byte, tear_file, FaultEvent, FaultPlan, LinkFaultKind};
+use crate::collectives::{
+    loopback_available, AsyncFabric, Collective, SocketFabric, TrafficLedger,
+};
+use crate::coordinator::checkpoint::{
+    latest_valid_step, load_newest_valid, step_path, Checkpoint,
+};
+use crate::quant::EncodedTensor;
+use crate::runtime::elastic::worker::{smoke_init, smoke_step};
+use crate::runtime::elastic::{smoke_reference_digest, state_digest};
+use crate::sim::Topology;
+use crate::util::args::Args;
+use crate::util::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::net::{IpAddr, Ipv4Addr};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Ring size for the in-process scenarios.
+const WORLD: usize = 3;
+/// Smoke-state length for the in-process scenarios (divisible by
+/// [`WORLD`], so every wire frame has the same size and a duplicated
+/// frame decodes cleanly — and wrongly — instead of failing early).
+const N: usize = 300;
+/// Iterations for digest-compared in-process runs.
+const ITERS: u64 = 6;
+
+/// How a scenario ended. `Completed`/`Surfaced`/`Recovered` are the
+/// acceptable trichotomy; `Skipped` means the environment lacks a
+/// required resource; `Failed` fails the soak.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Finished bit-exact to the fault-free reference.
+    Completed,
+    /// The fault surfaced as a typed error naming op and rank.
+    Surfaced,
+    /// The stack recovered to a verified-good state.
+    Recovered,
+    /// Environment lacks loopback TCP or the built binary.
+    Skipped,
+    /// Hang, wrong bits, or a silently swallowed fault.
+    Failed,
+}
+
+impl fmt::Display for Verdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Verdict::Completed => "completed",
+            Verdict::Surfaced => "surfaced",
+            Verdict::Recovered => "recovered",
+            Verdict::Skipped => "skipped",
+            Verdict::Failed => "failed",
+        })
+    }
+}
+
+/// Environment for a chaos run.
+#[derive(Clone, Debug)]
+pub struct ChaosOptions {
+    /// The built `qsdp` binary, for subprocess (kill-rank) scenarios.
+    /// `None` skips them.
+    pub qsdp_exe: Option<PathBuf>,
+    /// Treat skipped scenarios as acceptable (`--skip-if-no-loopback`);
+    /// without it the soak fails loudly if anything could not run.
+    pub skip_if_no_loopback: bool,
+    /// Scratch root for checkpoint directories (one subdir per seed).
+    pub scratch_dir: PathBuf,
+}
+
+impl ChaosOptions {
+    /// Options for in-process scenarios only: no subprocess binary,
+    /// skips allowed. What the unit tests use.
+    pub fn in_process(scratch_dir: PathBuf) -> ChaosOptions {
+        ChaosOptions { qsdp_exe: None, skip_if_no_loopback: true, scratch_dir }
+    }
+}
+
+/// One scenario's outcome. `plan` is the deterministic injected-event
+/// trace ([`FaultPlan::describe`]); `detail` is free-form diagnosis
+/// (error text, digests) and may legitimately vary across runs — the
+/// deterministic part is [`ScenarioReport::signature`].
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub seed: u64,
+    pub category: &'static str,
+    pub plan: String,
+    pub verdict: Verdict,
+    pub detail: String,
+}
+
+impl ScenarioReport {
+    /// The replay contract: everything here is a pure function of the
+    /// seed (and of which optional resources exist), so the same seed
+    /// must produce the same signature on every run.
+    pub fn signature(&self) -> String {
+        format!(
+            "seed={} category={} plan={} verdict={}",
+            self.seed, self.category, self.plan, self.verdict
+        )
+    }
+}
+
+/// The scenario category a seed maps to (its low three bits).
+pub fn category_of(seed: u64) -> &'static str {
+    match seed % 8 {
+        0 => "async-corrupt",
+        1 => "async-truncate",
+        2 => "async-drop",
+        3 => "async-delay",
+        4 => "async-duplicate",
+        5 => "socket-corrupt",
+        6 => "ckpt-corrupt",
+        7 => "kill-rank",
+        _ => unreachable!(),
+    }
+}
+
+/// Run the scenario for `seed` under a watchdog: the body runs on its
+/// own thread and a hang (the one outcome a fault must never cause)
+/// turns into a `Failed` verdict instead of hanging the soak itself.
+pub fn run_scenario(seed: u64, opts: &ChaosOptions) -> ScenarioReport {
+    let category = category_of(seed);
+    // Subprocess scenarios launch a supervised multi-process job with
+    // its own generous rendezvous deadline; everything else is bounded
+    // by transport stalls measured in seconds.
+    let timeout = if seed % 8 == 7 { Duration::from_secs(240) } else { Duration::from_secs(60) };
+    let (tx, rx) = mpsc::channel();
+    let body_opts = opts.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("chaos-seed-{seed}"))
+        .spawn(move || {
+            let _ = tx.send(scenario_body(seed, &body_opts));
+        })
+        .expect("spawning chaos scenario thread");
+    match rx.recv_timeout(timeout) {
+        Ok((plan, verdict, detail)) => {
+            let _ = handle.join();
+            ScenarioReport { seed, category, plan, verdict, detail }
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            let detail = match handle.join() {
+                Err(payload) => format!("scenario panicked: {}", panic_message(&payload)),
+                Ok(()) => "scenario thread exited without reporting".to_string(),
+            };
+            ScenarioReport {
+                seed,
+                category,
+                plan: "<none>".to_string(),
+                verdict: Verdict::Failed,
+                detail,
+            }
+        }
+        // The thread is wedged; leak it (the soak is about to fail
+        // anyway) rather than join a hang we exist to detect.
+        Err(mpsc::RecvTimeoutError::Timeout) => ScenarioReport {
+            seed,
+            category,
+            plan: "<hung before reporting>".to_string(),
+            verdict: Verdict::Failed,
+            detail: format!("scenario did not finish within {timeout:?}"),
+        },
+    }
+}
+
+fn scenario_body(seed: u64, opts: &ChaosOptions) -> (String, Verdict, String) {
+    match seed % 8 {
+        0 => link_surfaces(seed, LinkFaultKind::Corrupt, "corrupt frame"),
+        1 => link_surfaces(seed, LinkFaultKind::Truncate, "corrupt frame"),
+        2 => link_surfaces(seed, LinkFaultKind::Drop, "stalled"),
+        3 => delay_completes(seed),
+        4 => duplicate_trips_cross_check(seed),
+        5 => socket_corrupt_surfaces(seed),
+        6 => checkpoint_recovers(seed, opts),
+        7 => kill_rank_recovers(seed, opts),
+        _ => unreachable!(),
+    }
+}
+
+/// Per-rank fp32 shards of `x` — the gather payload every link
+/// scenario moves.
+fn shards_of(topo: Topology, x: &[f32]) -> Vec<EncodedTensor> {
+    (0..topo.world()).map(|r| EncodedTensor::fp32(&x[topo.shard_range(x.len(), r)])).collect()
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Categories 0–2: a header-corrupting, truncating or frame-dropping
+/// fault on the channel ring must surface as a typed error containing
+/// `needle` and naming the op — never hang, never complete silently.
+fn link_surfaces(seed: u64, kind: LinkFaultKind, needle: &str) -> (String, Verdict, String) {
+    let plan = FaultPlan::seeded_link(seed, WORLD, (WORLD - 1) as u64, kind);
+    let trace = plan.describe();
+    let topo = Topology::new(1, WORLD);
+    // A dropped frame shows up as its successor's receive deadline
+    // expiring, so keep the stall short and the scenario snappy.
+    let fabric = AsyncFabric::with_fault_plan(topo, u64::MAX, Duration::from_millis(300), &plan);
+    let x = smoke_init(N, seed);
+    let shards = shards_of(topo, &x);
+    let mut out = Vec::new();
+    let mut ledger = TrafficLedger::new();
+    let res = fabric.start_all_gather(&shards, &mut out, &mut ledger).wait();
+    drop(fabric); // must not hang — the watchdog turns a hang into Failed
+    match res {
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.contains(needle) && msg.contains("all_gather") {
+                (trace, Verdict::Surfaced, msg)
+            } else {
+                (trace, Verdict::Failed, format!("error lacks {needle:?} or the op name: {msg}"))
+            }
+        }
+        Ok(()) => (trace, Verdict::Failed, "fault did not surface; gather reported ok".into()),
+    }
+}
+
+/// Category 3: a pre-exchange delay is benign — the run must complete
+/// with a state digest bit-equal to the fault-free reference.
+fn delay_completes(seed: u64) -> (String, Verdict, String) {
+    let plan = FaultPlan::seeded_link(seed, WORLD, (WORLD - 1) as u64, LinkFaultKind::Delay);
+    let trace = plan.describe();
+    let topo = Topology::new(1, WORLD);
+    let fabric = AsyncFabric::with_fault_plan(topo, 1, Duration::from_secs(30), &plan);
+    let mut x = smoke_init(N, seed);
+    let mut ledger = TrafficLedger::new();
+    for iter in 0..ITERS {
+        smoke_step(&fabric, &mut x, iter, seed, &mut ledger, false);
+    }
+    drop(fabric);
+    let got = state_digest(&x);
+    let want = smoke_reference_digest(WORLD, N, ITERS, seed);
+    if got == want {
+        (trace, Verdict::Completed, format!("digest {got:016x} bit-equal to reference"))
+    } else {
+        (trace, Verdict::Failed, format!("digest {got:016x} != reference {want:016x}"))
+    }
+}
+
+/// Category 4: a duplicated frame decodes cleanly but carries the
+/// wrong block, so only the all-ranks gather cross-check can catch it
+/// — run with `check_every = 1` and require exactly that failure.
+fn duplicate_trips_cross_check(seed: u64) -> (String, Verdict, String) {
+    let plan = FaultPlan::seeded_link(seed, WORLD, (WORLD - 1) as u64, LinkFaultKind::Duplicate);
+    let trace = plan.describe();
+    let topo = Topology::new(1, WORLD);
+    let fabric = AsyncFabric::with_fault_plan(topo, 1, Duration::from_secs(30), &plan);
+    let x = smoke_init(N, seed);
+    let shards = shards_of(topo, &x);
+    // The cross-check panics on the caller thread after every worker
+    // has delivered its Done, so catching the unwind leaves the
+    // runtime idle and the fabric safely droppable.
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut ledger = TrafficLedger::new();
+        fabric.all_gather(&shards, &mut ledger)
+    }));
+    drop(fabric);
+    match res {
+        Err(payload) => {
+            let msg = panic_message(payload.as_ref());
+            if msg.contains("decoded a different tensor") {
+                (trace, Verdict::Surfaced, msg)
+            } else {
+                (trace, Verdict::Failed, format!("unexpected failure shape: {msg}"))
+            }
+        }
+        Ok(_) => (trace, Verdict::Failed, "duplicate slipped past the cross-check".into()),
+    }
+}
+
+/// Category 5: the header-corruption scenario again, over real
+/// loopback TCP links — the socket framing path must produce the same
+/// typed diagnosis as the channel path.
+fn socket_corrupt_surfaces(seed: u64) -> (String, Verdict, String) {
+    let plan = FaultPlan::seeded_link(seed, WORLD, (WORLD - 1) as u64, LinkFaultKind::Corrupt);
+    let trace = plan.describe();
+    if !loopback_available() {
+        return (trace, Verdict::Skipped, "no loopback TCP in this sandbox".into());
+    }
+    let topo = Topology::new(1, WORLD);
+    let local = IpAddr::V4(Ipv4Addr::LOCALHOST);
+    let fabric = match SocketFabric::with_fault_plan(
+        topo,
+        local,
+        0,
+        u64::MAX,
+        Duration::from_secs(2),
+        &plan,
+    ) {
+        Ok(f) => f,
+        Err(e) => return (trace, Verdict::Failed, format!("building socket fabric: {e:#}")),
+    };
+    let x = smoke_init(N, seed);
+    let shards = shards_of(topo, &x);
+    let mut out = Vec::new();
+    let mut ledger = TrafficLedger::new();
+    let res = fabric.start_all_gather(&shards, &mut out, &mut ledger).wait();
+    drop(fabric);
+    match res {
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.contains("corrupt frame") && msg.contains("all_gather") {
+                (trace, Verdict::Surfaced, msg)
+            } else {
+                (trace, Verdict::Failed, format!("error lacks the typed diagnosis: {msg}"))
+            }
+        }
+        Ok(()) => (trace, Verdict::Failed, "fault did not surface; gather reported ok".into()),
+    }
+}
+
+/// Category 6: corrupt the newest checkpoint (a torn write or one
+/// flipped byte, seed's choice) in a directory of good ones — recovery
+/// must fall back to the newest checksum-valid step and prune the bad
+/// file, exactly what a restarted rank's `latest_valid_step` offer
+/// relies on.
+fn checkpoint_recovers(seed: u64, opts: &ChaosOptions) -> (String, Verdict, String) {
+    let dir = opts.scratch_dir.join(format!("seed{seed}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let n = 64usize;
+    let mut params = vec![0.0f32; n];
+    for t in [0u64, 2, 4, 6] {
+        Pcg64::new(seed ^ t, 0xC4A05).fill_normal(&mut params, 1.0);
+        let ck = Checkpoint {
+            step: t,
+            names: vec!["w".into()],
+            params: vec![params.clone()],
+            adam_m: vec![vec![0.0; n]],
+            adam_v: vec![vec![0.0; n]],
+        };
+        if let Err(e) = ck.save_atomic(&step_path(&dir, t)) {
+            return ("[]".into(), Verdict::Failed, format!("writing checkpoints: {e:#}"));
+        }
+    }
+    let newest = step_path(&dir, 6);
+    let len = match std::fs::metadata(&newest) {
+        Ok(m) => m.len(),
+        Err(e) => return ("[]".into(), Verdict::Failed, format!("stat {e}")),
+    };
+    // The file image is deterministic for fixed shapes and seed, so
+    // the drawn offsets — and with them the trace — replay exactly.
+    let mut rng = Pcg64::new(seed, 0xC8A05);
+    let event = if rng.below(2) == 0 {
+        let at_byte = 12 + rng.below(len - 13);
+        if let Err(e) = tear_file(&newest, at_byte) {
+            return ("[]".into(), Verdict::Failed, format!("tearing file: {e}"));
+        }
+        FaultEvent::TearCheckpoint { at_byte }
+    } else {
+        let offset = rng.below(len);
+        let xor = (1 + rng.below(255)) as u8;
+        if let Err(e) = flip_file_byte(&newest, offset, xor) {
+            return ("[]".into(), Verdict::Failed, format!("flipping byte: {e}"));
+        }
+        FaultEvent::FlipCheckpointByte { offset, xor }
+    };
+    let trace = format!("[{event}]");
+    match load_newest_valid(&dir) {
+        Some((4, ck)) if ck.step == 4 => {
+            if newest.exists() {
+                return (trace, Verdict::Failed, "invalid newest file not pruned".into());
+            }
+            if latest_valid_step(&dir) != Some(4) {
+                return (trace, Verdict::Failed, "offered step disagrees with fallback".into());
+            }
+            (trace, Verdict::Recovered, "fell back from corrupt step 6 to valid step 4".into())
+        }
+        other => {
+            let got = other.map(|(t, _)| t);
+            (trace, Verdict::Failed, format!("expected fallback to step 4, got {got:?}"))
+        }
+    }
+}
+
+/// Category 7: SIGKILL one rank of a supervised 3-process smoke job at
+/// a seed-drawn wall-clock moment. The supervisor must restart it, the
+/// ring must re-form, and every rank's final digest must equal the
+/// in-process fault-free reference — bounded recovery, verified by
+/// bits.
+fn kill_rank_recovers(seed: u64, opts: &ChaosOptions) -> (String, Verdict, String) {
+    const SMOKE_N: usize = 2048;
+    const SMOKE_ITERS: u64 = 40;
+    const SMOKE_SEED: u64 = 7;
+    let mut rng = Pcg64::new(seed, 0x7C11);
+    let rank = rng.below(WORLD as u64) as usize;
+    // Late enough that the job is mid-run (40 iterations x 50 ms),
+    // early enough that real work remains after the restart.
+    let after_ms = 600 + rng.below(601);
+    let event = FaultEvent::KillRank { rank, after_ms };
+    let trace = format!("[{event}]");
+    let Some(exe) = opts.qsdp_exe.as_deref() else {
+        return (trace, Verdict::Skipped, "no qsdp binary for subprocess scenarios".into());
+    };
+    if !loopback_available() {
+        return (trace, Verdict::Skipped, "no loopback TCP in this sandbox".into());
+    }
+    let dir = opts.scratch_dir.join(format!("seed{seed}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = std::process::Command::new(exe)
+        .args([
+            "launch",
+            "--world=3",
+            &format!("--ckpt-dir={}", dir.display()),
+            "--ckpt-every=2",
+            "--stall-ms=500",
+            "--launch-timeout-s=120",
+            &format!("--iters={SMOKE_ITERS}"),
+            &format!("--n={SMOKE_N}"),
+            "--iter-sleep-ms=50",
+            &format!("--seed={SMOKE_SEED}"),
+            &format!("--chaos-kill-rank={rank}"),
+            &format!("--chaos-kill-after-ms={after_ms}"),
+            "smoke",
+        ])
+        .output();
+    let out = match out {
+        Ok(o) => o,
+        Err(e) => return (trace, Verdict::Failed, format!("spawning {}: {e}", exe.display())),
+    };
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    if !out.status.success() {
+        let err = one_line(&String::from_utf8_lossy(&out.stderr));
+        return (trace, Verdict::Failed, format!("launch exited {}: {err}", out.status));
+    }
+    let digests = parse_digests(&stdout);
+    let want = smoke_reference_digest(WORLD, SMOKE_N, SMOKE_ITERS, SMOKE_SEED);
+    if digests.len() != WORLD {
+        let got = digests.len();
+        return (trace, Verdict::Failed, format!("expected {WORLD} digest lines, got {got}"));
+    }
+    if let Some(&(r, d)) = digests.iter().find(|&&(_, d)| d != want) {
+        let msg = format!("rank {r} digest {d:016x} != reference {want:016x}");
+        return (trace, Verdict::Failed, msg);
+    }
+    let killed = stdout.contains("chaos kill");
+    let detail = format!(
+        "all {WORLD} digests == reference {want:016x} (kill observed: {killed})"
+    );
+    (trace, Verdict::Recovered, detail)
+}
+
+/// `smoke rank=R iters=I digest=HEX` lines from a launch transcript.
+fn parse_digests(stdout: &str) -> Vec<(usize, u64)> {
+    let mut out = Vec::new();
+    for line in stdout.lines() {
+        let Some(rest) = line.strip_prefix("smoke rank=") else { continue };
+        let mut it = rest.split_whitespace();
+        let Some(rank) = it.next().and_then(|s| s.parse::<usize>().ok()) else { continue };
+        let Some(hex) = it.find_map(|t| t.strip_prefix("digest=")) else { continue };
+        if let Ok(d) = u64::from_str_radix(hex, 16) {
+            out.push((rank, d));
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Squash a child's stderr into one report-friendly line (keeping the
+/// tail — that is where a failed launch says why).
+fn one_line(s: &str) -> String {
+    let flat = s.trim().replace('\n', " | ");
+    if flat.len() <= 300 {
+        return flat;
+    }
+    let mut cut = flat.len() - 300;
+    while !flat.is_char_boundary(cut) {
+        cut += 1;
+    }
+    format!("...{}", &flat[cut..])
+}
+
+/// `qsdp chaos [--seeds N | --seed S] [--skip-if-no-loopback]`: run
+/// the seeded soak, print one line per scenario, and fail on any
+/// `failed` verdict (or on skips, unless they were allowed).
+pub fn cmd_chaos(args: &Args) -> Result<()> {
+    let opts = ChaosOptions {
+        qsdp_exe: std::env::current_exe().ok(),
+        skip_if_no_loopback: args.bool_or("skip-if-no-loopback", false),
+        scratch_dir: std::env::temp_dir().join(format!("qsdp-chaos-{}", std::process::id())),
+    };
+    let seeds: Vec<u64> = match args.get("seed") {
+        Some(s) => vec![s.parse().context("parsing --seed")?],
+        None => (0..args.u64_or("seeds", 8)).collect(),
+    };
+    println!("chaos soak: {} seed(s), scratch {}", seeds.len(), opts.scratch_dir.display());
+    let (mut failed, mut skipped) = (0usize, 0usize);
+    for &seed in &seeds {
+        let r = run_scenario(seed, &opts);
+        match r.verdict {
+            Verdict::Failed => {
+                failed += 1;
+                println!("FAIL {} ({})", r.signature(), r.detail);
+            }
+            Verdict::Skipped => {
+                skipped += 1;
+                println!("SKIP {} ({})", r.signature(), r.detail);
+            }
+            _ => println!("ok   {} ({})", r.signature(), r.detail),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&opts.scratch_dir);
+    if failed > 0 {
+        bail!("chaos soak: {failed}/{} scenario(s) failed", seeds.len());
+    }
+    if skipped > 0 && !opts.skip_if_no_loopback {
+        bail!("chaos soak: {skipped} scenario(s) skipped; pass --skip-if-no-loopback to allow");
+    }
+    println!("chaos soak: {} scenario(s) ok ({skipped} skipped)", seeds.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(tag: &str) -> ChaosOptions {
+        ChaosOptions::in_process(std::env::temp_dir().join(format!("qsdp-chaos-unit-{tag}")))
+    }
+
+    /// Every in-process category lands on its expected trichotomy arm.
+    #[test]
+    fn chaos_in_process_seeds_match_expected_verdicts() {
+        let opts = opts("verdicts");
+        for (seed, want) in [
+            (0, Verdict::Surfaced),  // corrupt header -> typed error
+            (1, Verdict::Surfaced),  // truncated frame -> typed error
+            (2, Verdict::Surfaced),  // dropped frame -> stall deadline
+            (3, Verdict::Completed), // delay -> bit-exact digest
+            (4, Verdict::Surfaced),  // duplicate -> gather cross-check
+            (6, Verdict::Recovered), // checkpoint corruption -> fallback
+        ] {
+            let r = run_scenario(seed, &opts);
+            assert_eq!(r.verdict, want, "seed {seed} ({}): {}", r.category, r.detail);
+        }
+    }
+
+    /// Same seed, same signature: the planned trace and verdict class
+    /// are pure functions of the seed.
+    #[test]
+    fn chaos_same_seed_same_signature() {
+        let opts = opts("determinism");
+        for seed in [0u64, 2, 3, 4, 6, 11, 14] {
+            let a = run_scenario(seed, &opts);
+            let b = run_scenario(seed, &opts);
+            assert_eq!(a.signature(), b.signature(), "seed {seed}");
+            assert_ne!(a.verdict, Verdict::Failed, "seed {seed}: {}", a.detail);
+        }
+    }
+
+    /// The scenario-without-resources path reports `Skipped`, not
+    /// `Failed` — what lets netless sandboxes soak the rest.
+    #[test]
+    fn chaos_kill_rank_without_binary_skips() {
+        let r = run_scenario(7, &opts("skip"));
+        assert_eq!(r.verdict, Verdict::Skipped, "{}", r.detail);
+        assert!(r.plan.starts_with("[kill(rank="), "plan still reported: {}", r.plan);
+    }
+}

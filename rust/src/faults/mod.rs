@@ -1,0 +1,448 @@
+//! Deterministic, seeded fault injection for the fabric stack.
+//!
+//! A [`FaultPlan`] is a *pre-generated* schedule of injectable events —
+//! link faults (corrupt / truncate / drop / delay / duplicate a frame),
+//! rank kills, and checkpoint corruption — derived from a seed via
+//! [`Pcg64`] at construction time. Because the schedule is computed up
+//! front, the injected-event trace ([`FaultPlan::describe`]) is a pure
+//! function of the seed, independent of thread timing; re-running a
+//! seed replays exactly the same injections.
+//!
+//! Link faults are threaded into the ring backends behind cheap hooks:
+//! a fabric built through its `with_fault_plan` constructor wraps the
+//! affected ranks' [`RingTransport`] links in a [`FaultyLink`], and the
+//! elastic wire mirror consults an optional [`LinkInjector`] around its
+//! gather call. A fabric constructed normally carries **no wrapper and
+//! no per-exchange check at all** — zero overhead when no plan is
+//! armed.
+//!
+//! Fault semantics are chosen so every injection has a *deterministic
+//! verdict class* (see [`chaos`]):
+//!
+//! * `Corrupt` XORs a byte of the 14-byte validated [`EncodedTensor`]
+//!   header (the element-count field), so the receiver's
+//!   `view_bytes` length check fails and the hop surfaces a typed
+//!   `CorruptFrame` — never a silent payload change.
+//! * `Truncate` keeps fewer than the header's 14 bytes: a guaranteed
+//!   "short header" `CorruptFrame` on the receiver.
+//! * `Drop` skips the send but still receives
+//!   ([`RingTransport::recv_only`]); the dropper's successor hits its
+//!   stall deadline and fails `Stalled`, cascading a clean shutdown.
+//! * `Delay` sleeps well under the stall deadline, so the collective
+//!   still completes bit-exactly.
+//! * `Duplicate` replays the previously sent frame in place of the
+//!   current one — a *valid* frame with wrong contents, caught by the
+//!   all-ranks gather cross-check (`check_every = 1` in the chaos
+//!   harness).
+//!
+//! The checkpoint events pair with the CRC32 footer in
+//! [`crate::coordinator::checkpoint`]: [`tear_file`] and
+//! [`flip_file_byte`] model a torn write and at-rest bit rot, both of
+//! which the checksum-validated loader must detect and fall back from.
+
+pub mod chaos;
+
+use crate::collectives::ring::{RingError, RingTransport};
+use crate::quant::codec::HEADER_BYTES;
+use crate::util::Pcg64;
+use std::fmt;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::time::Duration;
+
+/// One injectable link-layer fault, applied to a specific rank's
+/// outgoing side of a specific exchange.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LinkFault {
+    /// XOR one byte of the outgoing frame before it is sent. Offsets
+    /// inside the validated 14-byte message header guarantee a typed
+    /// `CorruptFrame` on the receiver.
+    Corrupt { offset: usize, xor: u8 },
+    /// Send only the first `keep` bytes of the frame.
+    Truncate { keep: usize },
+    /// Skip the send entirely (still receive) — the successor stalls.
+    Drop,
+    /// Sleep before the exchange; must stay well under the transport's
+    /// stall deadline for the collective to complete.
+    Delay { ms: u64 },
+    /// Replay the previously sent frame instead of the current one.
+    Duplicate,
+}
+
+impl fmt::Display for LinkFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LinkFault::Corrupt { offset, xor } => write!(f, "corrupt@{offset}^{xor:#04x}"),
+            LinkFault::Truncate { keep } => write!(f, "truncate..{keep}"),
+            LinkFault::Drop => write!(f, "drop"),
+            LinkFault::Delay { ms } => write!(f, "delay{ms}ms"),
+            LinkFault::Duplicate => write!(f, "duplicate"),
+        }
+    }
+}
+
+/// Which link-fault family a seeded plan should draw — the chaos
+/// driver maps its scenario category to one of these, and the plan
+/// draws the parameters (rank, exchange index, offsets) from the seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkFaultKind {
+    Corrupt,
+    Truncate,
+    Drop,
+    Delay,
+    Duplicate,
+}
+
+/// One scheduled fault event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Apply `fault` to rank `rank`'s `exchange`-th link exchange
+    /// (counted per rank, from fabric construction).
+    Link { rank: usize, exchange: u64, fault: LinkFault },
+    /// Kill rank `rank`'s process `after_ms` after launch (the
+    /// supervisor's `--chaos-kill-rank` hook).
+    KillRank { rank: usize, after_ms: u64 },
+    /// Tear a checkpoint write after `at_byte` bytes.
+    TearCheckpoint { at_byte: u64 },
+    /// Flip (XOR) one byte of a written checkpoint file.
+    FlipCheckpointByte { offset: u64, xor: u8 },
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultEvent::Link { rank, exchange, fault } => {
+                write!(f, "link(rank={rank},xchg={exchange},{fault})")
+            }
+            FaultEvent::KillRank { rank, after_ms } => {
+                write!(f, "kill(rank={rank},after={after_ms}ms)")
+            }
+            FaultEvent::TearCheckpoint { at_byte } => write!(f, "tear(ckpt@{at_byte})"),
+            FaultEvent::FlipCheckpointByte { offset, xor } => {
+                write!(f, "flip(ckpt@{offset}^{xor:#04x})")
+            }
+        }
+    }
+}
+
+/// A deterministic schedule of fault events. Construct one directly
+/// ([`FaultPlan::link_fault`] for tests) or draw one from a seed
+/// ([`FaultPlan::seeded_link`]); either way the plan is fixed before
+/// anything runs, so its [`describe`](FaultPlan::describe) string *is*
+/// the injected-event trace.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// A plan with a single link fault — the precision tool for pinning
+    /// one failure edge in a test.
+    pub fn link_fault(rank: usize, exchange: u64, fault: LinkFault) -> FaultPlan {
+        FaultPlan { events: vec![FaultEvent::Link { rank, exchange, fault }] }
+    }
+
+    /// Draw a single link fault of family `kind` from `seed`: the
+    /// target rank, the exchange index (always ≥ 1, so a `Duplicate`
+    /// has a previous frame to replay) and the fault parameters are all
+    /// pure functions of the seed. `exchanges` bounds the exchange
+    /// index — pass the per-rank exchange count of the first collective
+    /// call (`world - 1` for a gather) to land the fault mid-ring.
+    pub fn seeded_link(seed: u64, world: usize, exchanges: u64, kind: LinkFaultKind) -> FaultPlan {
+        assert!(world > 1, "link faults need a ring (world > 1)");
+        assert!(exchanges >= 2, "need at least 2 exchanges to fault at index >= 1");
+        let mut rng = Pcg64::new(seed, 0xFA17);
+        let rank = rng.below(world as u64) as usize;
+        let exchange = 1 + rng.below(exchanges - 1);
+        let fault = match kind {
+            // XOR a low byte of the header's element-count field: the
+            // receiver's section-size validation cannot miss it.
+            LinkFaultKind::Corrupt => LinkFault::Corrupt {
+                offset: 6 + rng.below(2) as usize,
+                xor: (1 + rng.below(255)) as u8,
+            },
+            LinkFaultKind::Truncate => {
+                LinkFault::Truncate { keep: rng.below(HEADER_BYTES as u64) as usize }
+            }
+            LinkFaultKind::Drop => LinkFault::Drop,
+            LinkFaultKind::Delay => LinkFault::Delay { ms: 20 + rng.below(61) },
+            LinkFaultKind::Duplicate => LinkFault::Duplicate,
+        };
+        FaultPlan::link_fault(rank, exchange, fault)
+    }
+
+    /// The deterministic injected-event trace: every scheduled event in
+    /// order, e.g. `[link(rank=2,xchg=1,corrupt@6^0x5d)]`.
+    pub fn describe(&self) -> String {
+        let items: Vec<String> = self.events.iter().map(|e| e.to_string()).collect();
+        format!("[{}]", items.join("; "))
+    }
+
+    /// The link-fault injector for one rank, or `None` when the plan
+    /// schedules nothing there (the common case — unaffected ranks keep
+    /// their unwrapped links).
+    pub(crate) fn injector_for(&self, rank: usize) -> Option<LinkInjector> {
+        let faults: Vec<(u64, LinkFault)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::Link { rank: r, exchange, fault } if *r == rank => {
+                    Some((*exchange, fault.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        if faults.is_empty() {
+            None
+        } else {
+            Some(LinkInjector::new(faults))
+        }
+    }
+}
+
+/// Per-rank link-fault state: the rank's scheduled faults keyed by its
+/// exchange counter, plus the last-sent frame when a `Duplicate` is
+/// scheduled. Applied either by wrapping the link ([`FaultyLink`]) or
+/// around individual calls ([`InjectedLink`]).
+pub(crate) struct LinkInjector {
+    faults: Vec<(u64, LinkFault)>,
+    calls: u64,
+    last_sent: Option<Vec<u8>>,
+    remember: bool,
+}
+
+impl LinkInjector {
+    fn new(faults: Vec<(u64, LinkFault)>) -> Self {
+        let remember = faults.iter().any(|(_, f)| matches!(f, LinkFault::Duplicate));
+        LinkInjector { faults, calls: 0, last_sent: None, remember }
+    }
+
+    /// Run one exchange through `link`, applying the fault scheduled
+    /// for this call index (if any) to the outgoing frame.
+    pub(crate) fn exchange(
+        &mut self,
+        link: &mut dyn RingTransport,
+        buf: &mut Vec<u8>,
+    ) -> Result<(), RingError> {
+        let idx = self.calls;
+        self.calls += 1;
+        let fault = self.faults.iter().find(|(i, _)| *i == idx).map(|(_, f)| f.clone());
+        match fault {
+            Some(LinkFault::Corrupt { offset, xor }) => {
+                if let Some(b) = buf.get_mut(offset) {
+                    *b ^= xor;
+                }
+            }
+            Some(LinkFault::Truncate { keep }) => buf.truncate(keep),
+            Some(LinkFault::Delay { ms }) => std::thread::sleep(Duration::from_millis(ms)),
+            Some(LinkFault::Duplicate) => {
+                if let Some(prev) = &self.last_sent {
+                    buf.clear();
+                    buf.extend_from_slice(prev);
+                }
+            }
+            Some(LinkFault::Drop) => {
+                // Nothing goes out; the successor's receive stalls.
+                return link.recv_only(buf);
+            }
+            None => {}
+        }
+        if self.remember {
+            self.last_sent = Some(buf.clone());
+        }
+        link.exchange(buf)
+    }
+}
+
+/// A [`RingTransport`] wrapper owning the wrapped link and its
+/// injector — how a persistent runtime's per-rank links carry faults.
+pub(crate) struct FaultyLink {
+    inner: Box<dyn RingTransport>,
+    inj: LinkInjector,
+}
+
+impl RingTransport for FaultyLink {
+    fn exchange(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+        self.inj.exchange(self.inner.as_mut(), buf)
+    }
+
+    fn recv_only(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+        self.inner.recv_only(buf)
+    }
+}
+
+/// Wrap each rank's link whose rank the plan targets; untouched ranks
+/// keep their original boxed link (no wrapper, no overhead).
+pub(crate) fn arm_links(
+    links: Vec<Box<dyn RingTransport>>,
+    plan: &FaultPlan,
+) -> Vec<Box<dyn RingTransport>> {
+    links
+        .into_iter()
+        .enumerate()
+        .map(|(r, link)| match plan.injector_for(r) {
+            Some(inj) => Box::new(FaultyLink { inner: link, inj }) as Box<dyn RingTransport>,
+            None => link,
+        })
+        .collect()
+}
+
+/// A borrowing fault wrapper for links that are not boxed — the
+/// elastic wire mirror holds its `SocketLink` by value, so it wraps
+/// the link and its armed injector per gather call.
+pub(crate) struct InjectedLink<'a> {
+    pub(crate) link: &'a mut dyn RingTransport,
+    pub(crate) inj: &'a mut LinkInjector,
+}
+
+impl RingTransport for InjectedLink<'_> {
+    fn exchange(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+        self.inj.exchange(self.link, buf)
+    }
+
+    fn recv_only(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+        self.link.recv_only(buf)
+    }
+}
+
+/// Truncate `path` to its first `keep` bytes — a torn write.
+pub fn tear_file(path: &Path, keep: u64) -> std::io::Result<()> {
+    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.set_len(keep)
+}
+
+/// XOR one byte of `path` in place — at-rest bit rot. `xor` must be
+/// non-zero (a zero mask would change nothing and silently weaken a
+/// corruption test).
+pub fn flip_file_byte(path: &Path, offset: u64, xor: u8) -> std::io::Result<()> {
+    assert_ne!(xor, 0, "flip_file_byte with xor=0 is a no-op");
+    let mut f = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+    let mut byte = [0u8; 1];
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(&mut byte)?;
+    byte[0] ^= xor;
+    f.seek(SeekFrom::Start(offset))?;
+    f.write_all(&byte)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Records every frame the injector ships and answers each
+    /// exchange/receive with a canned reply.
+    struct MockLink {
+        sent: Vec<Option<Vec<u8>>>,
+        reply: Vec<u8>,
+    }
+
+    impl RingTransport for MockLink {
+        fn exchange(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+            self.sent.push(Some(buf.clone()));
+            buf.clear();
+            buf.extend_from_slice(&self.reply);
+            Ok(())
+        }
+
+        fn recv_only(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
+            self.sent.push(None);
+            buf.clear();
+            buf.extend_from_slice(&self.reply);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn chaos_link_injector_applies_planned_faults() {
+        let ev = |exchange: u64, fault: LinkFault| FaultEvent::Link { rank: 0, exchange, fault };
+        let plan = FaultPlan {
+            events: vec![
+                ev(1, LinkFault::Corrupt { offset: 2, xor: 0xFF }),
+                ev(2, LinkFault::Drop),
+                ev(3, LinkFault::Duplicate),
+                ev(4, LinkFault::Truncate { keep: 1 }),
+                FaultEvent::Link { rank: 1, exchange: 0, fault: LinkFault::Drop },
+            ],
+        };
+        let mut inj = plan.injector_for(0).expect("rank 0 is targeted");
+        assert!(plan.injector_for(2).is_none(), "untargeted ranks get no injector");
+        let mut link = MockLink { sent: Vec::new(), reply: vec![9, 9, 9] };
+        let frame = vec![1u8, 2, 3, 4];
+        // exchange 0: clean
+        let mut buf = frame.clone();
+        inj.exchange(&mut link, &mut buf).unwrap();
+        // exchange 1: corrupt byte 2
+        let mut buf = frame.clone();
+        inj.exchange(&mut link, &mut buf).unwrap();
+        // exchange 2: dropped (recv_only)
+        let mut buf = frame.clone();
+        inj.exchange(&mut link, &mut buf).unwrap();
+        assert_eq!(buf, vec![9, 9, 9], "drop still receives");
+        // exchange 3: duplicate of the last *sent* frame (the corrupted one)
+        let mut buf = frame.clone();
+        inj.exchange(&mut link, &mut buf).unwrap();
+        // exchange 4: truncated
+        let mut buf = frame.clone();
+        inj.exchange(&mut link, &mut buf).unwrap();
+        let corrupted = vec![1u8, 2, 3 ^ 0xFF, 4];
+        assert_eq!(
+            link.sent,
+            vec![
+                Some(frame.clone()),
+                Some(corrupted.clone()),
+                None,
+                Some(corrupted),
+                Some(vec![1u8]),
+            ]
+        );
+    }
+
+    #[test]
+    fn chaos_seeded_plan_is_deterministic_and_seed_sensitive() {
+        for kind in [
+            LinkFaultKind::Corrupt,
+            LinkFaultKind::Truncate,
+            LinkFaultKind::Drop,
+            LinkFaultKind::Delay,
+            LinkFaultKind::Duplicate,
+        ] {
+            let a = FaultPlan::seeded_link(7, 4, 3, kind);
+            let b = FaultPlan::seeded_link(7, 4, 3, kind);
+            assert_eq!(a, b, "same seed must give the same plan");
+            assert_eq!(a.describe(), b.describe());
+            match &a.events[..] {
+                [FaultEvent::Link { rank, exchange, fault }] => {
+                    assert!(*rank < 4);
+                    assert!((1..3).contains(exchange), "mid-ring exchange: {exchange}");
+                    match fault {
+                        LinkFault::Corrupt { offset, xor } => {
+                            assert!((6..8).contains(offset), "inside the length field");
+                            assert_ne!(*xor, 0);
+                        }
+                        LinkFault::Truncate { keep } => assert!(*keep < HEADER_BYTES),
+                        LinkFault::Delay { ms } => assert!((20..81).contains(ms)),
+                        LinkFault::Drop | LinkFault::Duplicate => {}
+                    }
+                }
+                other => panic!("expected one link event, got {other:?}"),
+            }
+        }
+        let a = FaultPlan::seeded_link(1, 8, 7, LinkFaultKind::Corrupt);
+        let b = FaultPlan::seeded_link(2, 8, 7, LinkFaultKind::Corrupt);
+        assert_ne!(a.describe(), b.describe(), "different seeds should differ");
+    }
+
+    #[test]
+    fn chaos_file_corruption_helpers_tear_and_flip() {
+        let dir = std::env::temp_dir().join(format!("qsdp-faults-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("victim.bin");
+        std::fs::write(&path, [1u8, 2, 3, 4, 5]).unwrap();
+        flip_file_byte(&path, 2, 0x0F).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1u8, 2, 3 ^ 0x0F, 4, 5]);
+        tear_file(&path, 2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1u8, 2]);
+        std::fs::remove_file(&path).unwrap();
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -24,6 +24,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod fsdp;
 pub mod metrics;
 pub mod model;

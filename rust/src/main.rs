@@ -4,6 +4,7 @@
 //!   train      — run one training job (FSDP baseline or QSDP)
 //!   launch     — supervise P worker processes over the elastic fabric
 //!   smoke      — elastic smoke job / its in-process reference digest
+//!   chaos      — seeded fault-injection soak over the fabric stack
 //!   table1..6  — regenerate the paper's tables
 //!   figure3/4/6/7 — regenerate the paper's figures
 //!   theory     — Theorem 2 / Corollary 3 convergence validation
@@ -23,6 +24,7 @@ fn usage() -> ! {
          launch    --world P [--nodes N --gpus-per-node G] [--max-restarts K]\n            \
          [--ckpt-dir DIR --ckpt-every K] <train|smoke>  (elastic multi-process run)\n  \
          smoke     [--world P --iters N --seed S]  (reference digest; worker mode via --rank)\n  \
+         chaos     [--seeds N | --seed S] [--skip-if-no-loopback]  (seeded fault soak)\n  \
          table1 | table2 | table3 | table5 | table6\n  \
          figure3 | figure4 | figure6 | figure7\n  \
          theory    [--dim N] [--kappa K]\n  \
@@ -40,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         "train" => experiments::cmd_train(&args),
         "launch" => qsdp::runtime::elastic::cmd_launch(&args),
         "smoke" => qsdp::runtime::elastic::cmd_smoke(&args),
+        "chaos" => qsdp::faults::chaos::cmd_chaos(&args),
         "table1" => experiments::table1(&args),
         "table2" => experiments::table2(&args),
         "table3" => experiments::table3(&args),

@@ -94,6 +94,10 @@ struct WireState {
     link: Option<SocketLink>,
     scratch: RankScratch,
     ledger: TrafficLedger,
+    /// Armed fault injector for this rank's wire exchanges — chaos
+    /// tests only ([`ElasticHandle::arm_wire_faults`]); `None` in
+    /// production, where the mirror drives the link directly.
+    injector: Option<crate::faults::LinkInjector>,
 }
 
 /// Shared state behind both [`ElasticFabric`] and [`ElasticHandle`].
@@ -148,7 +152,14 @@ impl ElasticCore {
         };
         let m = ws.membership.members.len();
         let wire_topo = Topology::new(1, m);
-        match ag_rank(wire_topo, widx, own, &mut ws.scratch, link) {
+        let round = match ws.injector.as_mut() {
+            Some(inj) => {
+                let mut faulty = crate::faults::InjectedLink { link, inj };
+                ag_rank(wire_topo, widx, own, &mut ws.scratch, &mut faulty)
+            }
+            None => ag_rank(wire_topo, widx, own, &mut ws.scratch, link),
+        };
+        match round {
             Err(e) => {
                 let succ = ws.membership.successor_of(self.peer.rank).map_or(0, |s| s.rank);
                 let pred = ws.membership.predecessor_of(self.peer.rank).map_or(0, |s| s.rank);
@@ -262,6 +273,7 @@ impl ElasticFabric {
                 link,
                 scratch: RankScratch::default(),
                 ledger: TrafficLedger::new(),
+                injector: None,
             }),
             fault: Mutex::new(None),
         };
@@ -347,6 +359,14 @@ impl ElasticHandle {
     /// collective ledgers so simulated seconds match a socket run.
     pub fn wire_traffic(&self) -> TrafficLedger {
         lock(&self.core.wire).ledger
+    }
+
+    /// Arm a [`crate::faults::FaultPlan`]'s link faults (the events
+    /// targeting this rank) on the wire mirror — chaos tests only.
+    /// Injection touches wire rounds exclusively; the authoritative
+    /// local runtime never sees an injected fault.
+    pub(crate) fn arm_wire_faults(&self, plan: &crate::faults::FaultPlan) {
+        lock(&self.core.wire).injector = plan.injector_for(self.core.peer.rank);
     }
 }
 
@@ -594,6 +614,73 @@ mod tests {
             assert_eq!(gathered, &ref_gather, "rank {r}: gather diverged from async reference");
             assert_eq!(outs, &ref_outs, "rank {r}: reduce_scatter diverged from async reference");
             assert_eq!(ledger, &lr, "rank {r}: collective ledger must match the async reference");
+        }
+    }
+
+    #[test]
+    fn chaos_elastic_wire_corrupt_faults_then_recovers() {
+        if skip_no_loopback() {
+            return;
+        }
+        use crate::faults::{FaultPlan, LinkFault};
+        // Rank 1's second wire frame gets a flipped header byte. Its
+        // successor must surface a typed CorruptFrame naming rank 1,
+        // the fault must cascade to every member without corrupting
+        // any local result, and one recovery must form epoch 2 with
+        // clean wire rounds again.
+        let world = 3;
+        let n = 601;
+        let full = rand_vec(n, 77);
+        let topo = Topology::new(world, 1);
+        let shards: Vec<EncodedTensor> = (0..world)
+            .map(|r| EncodedTensor::fp32(&full[topo.shard_range(n, r)]))
+            .collect();
+        let reference = AsyncFabric::new(topo);
+        let mut lr = TrafficLedger::new();
+        let ref_gather = reference.all_gather(&shards, &mut lr);
+        let shards2 = shards.clone();
+        let faults = ensemble(world, &[0, 1, 2], Duration::from_secs(20), move |fabric, r| {
+            let handle = fabric.handle();
+            if r == 1 {
+                let fault = LinkFault::Corrupt { offset: 6, xor: 0x11 };
+                handle.arm_wire_faults(&FaultPlan::link_fault(1, 1, fault));
+            }
+            let bits_eq = |a: &[f32], b: &[f32]| {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            };
+            let mut ledger = TrafficLedger::new();
+            let mut fault = None;
+            for _ in 0..8 {
+                let gathered = fabric.all_gather(&shards2, &mut ledger);
+                assert!(
+                    bits_eq(&gathered, &ref_gather),
+                    "rank {r}: local result must stay authoritative under wire faults"
+                );
+                if let Some(f) = handle.take_fault() {
+                    fault = Some(f);
+                    break;
+                }
+            }
+            let fault =
+                fault.unwrap_or_else(|| panic!("rank {r}: no wire fault within 8 collectives"));
+            let report = handle.recover(0).unwrap_or_else(|e| panic!("rank {r}: recover: {e:#}"));
+            assert_eq!(report.epoch, 2, "rank {r}: recovery forms the next epoch");
+            assert_eq!(report.members, vec![0, 1, 2], "rank {r}: everyone rejoins");
+            let gathered = fabric.all_gather(&shards2, &mut ledger);
+            assert!(bits_eq(&gathered, &ref_gather), "rank {r}: post-recovery gather diverged");
+            assert!(
+                handle.take_fault().is_none(),
+                "rank {r}: post-recovery wire round must be clean"
+            );
+            fault
+        });
+        assert!(
+            faults.iter().any(|f| f.contains("corrupt frame from rank 1")),
+            "some member must name the corrupt frame and its source: {faults:?}"
+        );
+        for f in &faults {
+            assert!(f.contains("elastic all_gather"), "fault must name the op: {f}");
+            assert!(f.contains("epoch 1"), "fault must name the epoch: {f}");
         }
     }
 

@@ -39,7 +39,7 @@
 //! that).
 
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -266,15 +266,40 @@ fn serve(
     }
 }
 
+/// Longest legal HELLO line. The longest honest one ("HELLO <rank>
+/// <world> <ip:port> <step>\n") is well under 100 bytes; anything
+/// bigger is a hostile or corrupt client and must not be buffered
+/// without bound.
+const MAX_HELLO_BYTES: u64 = 256;
+
 /// Read and validate one HELLO off a fresh connection. Returns `None`
-/// (dropping the stream) on malformed or mismatched hellos.
+/// (dropping the stream, with a logged per-peer error) on oversized,
+/// malformed, or mismatched hellos — one bad client never tears down
+/// the accept loop.
 fn read_hello(stream: TcpStream, world: usize) -> Option<PendingHello> {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown peer>".into());
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
-    let mut reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream).take(MAX_HELLO_BYTES);
     let mut line = String::new();
-    reader.read_line(&mut line).ok()?;
-    let mut stream = reader.into_inner();
+    match reader.read_line(&mut line) {
+        Ok(_) if line.ends_with('\n') => {}
+        Ok(_) => {
+            eprintln!(
+                "elastic: rendezvous dropped hello from {peer}: no newline within \
+                 {MAX_HELLO_BYTES} bytes"
+            );
+            return None;
+        }
+        Err(e) => {
+            eprintln!("elastic: rendezvous dropped hello from {peer}: {e}");
+            return None;
+        }
+    }
+    let mut stream = reader.into_inner().into_inner();
     match parse_hello(&line) {
         Ok((rank, w, addr, ckpt_step)) if w == world && rank < world => {
             Some(PendingHello { rank, addr, ckpt_step, stream })
@@ -283,9 +308,16 @@ fn read_hello(stream: TcpStream, world: usize) -> Option<PendingHello> {
             let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
             let msg = format!("ERR rank {rank}/world {w} does not fit world {world}\n");
             let _ = stream.write_all(msg.as_bytes());
+            eprintln!(
+                "elastic: rendezvous rejected hello from {peer}: \
+                 rank {rank}/world {w} does not fit world {world}"
+            );
             None
         }
-        Err(_) => None,
+        Err(e) => {
+            eprintln!("elastic: rendezvous rejected hello from {peer}: {e:#}");
+            None
+        }
     }
 }
 
@@ -463,6 +495,37 @@ mod tests {
         assert!(m.is_degraded());
         assert_eq!(m.members.len(), 1);
         assert_eq!(m.restore_step, 9);
+    }
+
+    #[test]
+    fn elastic_rendezvous_survives_malformed_and_oversized_hellos() {
+        if skip_no_loopback() {
+            return;
+        }
+        let server = RendezvousServer::spawn(
+            IpAddr::V4(Ipv4Addr::LOCALHOST),
+            1,
+            Duration::from_secs(5),
+            Duration::from_secs(5),
+        )
+        .expect("spawn server");
+        let addr = server.addr();
+        // A garbage line, a wrong-world hello, and a newline-free flood
+        // past the line bound: each is rejected with a per-peer error,
+        // and none may kill the accept loop or consume an epoch.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"NOT A HELLO AT ALL\n").unwrap();
+        drop(s);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"HELLO 9 9 127.0.0.1:1 0\n").unwrap();
+        drop(s);
+        let mut s = TcpStream::connect(addr).unwrap();
+        let _ = s.write_all(&vec![b'A'; 4096]);
+        drop(s);
+        let m = rendezvous(addr, 0, 1, sa(7300), 2, Duration::from_secs(10))
+            .expect("the accept loop must survive the bad clients");
+        assert_eq!(m.epoch, 1, "bad hellos must not have formed an epoch");
+        assert_eq!(m.restore_step, 2);
     }
 
     #[test]

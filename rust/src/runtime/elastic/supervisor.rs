@@ -33,6 +33,8 @@ use std::time::{Duration, Instant};
 const LAUNCH_FLAGS: &[&str] = &[
     "backoff-cap-ms",
     "backoff-ms",
+    "chaos-kill-after-ms",
+    "chaos-kill-rank",
     "ckpt-dir",
     "ckpt-every",
     "gpus-per-node",
@@ -77,6 +79,14 @@ pub struct LaunchOptions {
     /// Print `SKIP:` and exit 0 instead of failing where loopback TCP
     /// is unavailable (CI sandboxes).
     pub skip_if_no_loopback: bool,
+    /// Chaos hook (`--chaos-kill-rank`): SIGKILL this rank's process
+    /// once, from outside, `chaos_kill_after_ms` after launch — the
+    /// supervisor-level analogue of the worker's `--kill-at`, driven
+    /// by wall clock instead of iteration count so it lands at an
+    /// arbitrary point in the collective schedule.
+    pub chaos_kill_rank: Option<usize>,
+    /// Delay before the chaos kill fires (`--chaos-kill-after-ms`).
+    pub chaos_kill_after_ms: u64,
 }
 
 impl LaunchOptions {
@@ -108,6 +118,13 @@ impl LaunchOptions {
         };
         ensure!(world > 0, "elastic: world must be positive");
         let stall_ms = args.u64_or("stall-ms", 2000);
+        let chaos_kill_rank = args
+            .get("chaos-kill-rank")
+            .map(|s| s.parse::<usize>().context("parsing --chaos-kill-rank"))
+            .transpose()?;
+        if let Some(r) = chaos_kill_rank {
+            ensure!(r < world, "elastic: --chaos-kill-rank {r} outside world {world}");
+        }
         Ok(LaunchOptions {
             world,
             nodes,
@@ -126,6 +143,8 @@ impl LaunchOptions {
             backoff_cap_ms: args.u64_or("backoff-cap-ms", 5000),
             launch_timeout_s: args.u64_or("launch-timeout-s", 0),
             skip_if_no_loopback: args.bool_or("skip-if-no-loopback", false),
+            chaos_kill_rank,
+            chaos_kill_after_ms: args.u64_or("chaos-kill-after-ms", 500),
         })
     }
 }
@@ -204,7 +223,25 @@ fn supervise(exe: &Path, opts: &LaunchOptions, args: &Args, rdv: SocketAddr) -> 
     }
     let deadline = (opts.launch_timeout_s > 0)
         .then(|| Instant::now() + Duration::from_secs(opts.launch_timeout_s));
+    let mut chaos_at = opts
+        .chaos_kill_rank
+        .map(|_| Instant::now() + Duration::from_millis(opts.chaos_kill_after_ms));
     while !slots.iter().all(|s| matches!(s, Slot::Done { .. })) {
+        if let (Some(rank), Some(at)) = (opts.chaos_kill_rank, chaos_at) {
+            if Instant::now() >= at {
+                if let Slot::Running(child) = &mut slots[rank] {
+                    println!(
+                        "elastic: chaos kill — SIGKILL worker rank={rank} pid={} after {}ms",
+                        child.id(),
+                        opts.chaos_kill_after_ms
+                    );
+                    let _ = child.kill();
+                } else {
+                    println!("elastic: chaos kill — rank={rank} already down; nothing to do");
+                }
+                chaos_at = None;
+            }
+        }
         if deadline.is_some_and(|d| Instant::now() > d) {
             for s in &mut slots {
                 if let Slot::Running(child) = s {
@@ -314,6 +351,27 @@ mod tests {
         assert!(LaunchOptions::from_args(&argv("launch --world 2")).is_err(), "job is required");
         let unknown = argv("launch --world 2 tables");
         assert!(LaunchOptions::from_args(&unknown).is_err(), "only train/smoke are launchable");
+    }
+
+    #[test]
+    fn elastic_launch_chaos_kill_flags_parse() {
+        let o = LaunchOptions::from_args(&argv("launch --world 3 smoke")).unwrap();
+        assert_eq!(o.chaos_kill_rank, None, "chaos kill is opt-in");
+        let line = "launch --world 3 --chaos-kill-rank 1 --chaos-kill-after-ms 250 smoke";
+        let o = LaunchOptions::from_args(&argv(line)).unwrap();
+        assert_eq!(o.chaos_kill_rank, Some(1));
+        assert_eq!(o.chaos_kill_after_ms, 250);
+        let bad = argv("launch --world 2 --chaos-kill-rank 5 smoke");
+        assert!(LaunchOptions::from_args(&bad).is_err(), "kill target must be a real rank");
+        // Supervisor-owned: the chaos flags must not leak into workers.
+        let args = argv(line);
+        let opts = LaunchOptions::from_args(&args).unwrap();
+        let rdv: SocketAddr = "127.0.0.1:4242".parse().unwrap();
+        let wargv = worker_argv(&opts, &args, rdv, 0);
+        assert!(
+            !wargv.iter().any(|a| a.contains("chaos-kill")),
+            "chaos flags leaked into worker argv: {wargv:?}"
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@
 use super::fabric::{ElasticFabric, ElasticHandle, RecoveryReport};
 use crate::collectives::{AsyncFabric, Collective, TrafficLedger};
 use crate::config::{ElasticPeer, FabricKind, RunConfig};
-use crate::coordinator::checkpoint::{latest_step, prune_steps, step_path, Checkpoint};
+use crate::coordinator::checkpoint::{latest_valid_step, prune_steps, step_path, Checkpoint};
 use crate::coordinator::{Trainer, TrainerOptions};
 use crate::metrics::TrainLog;
 use crate::model::spec::artifacts_root;
@@ -138,7 +138,7 @@ fn recover_and_guard(
     rank_dir: &Path,
     ctx: &WorkerContext,
 ) -> Result<RecoveryReport> {
-    let offered = latest_step(rank_dir).unwrap_or(0);
+    let offered = latest_valid_step(rank_dir).unwrap_or(0);
     let report = handle.recover(offered)?;
     guard_stale_epoch(report.members.len(), ctx.world, ctx.restarts)?;
     eprintln!(
@@ -210,7 +210,7 @@ pub fn run_train_worker(ctx: &WorkerContext, args: &Args) -> Result<()> {
     );
     let rank_dir = ctx.rank_dir();
     std::fs::create_dir_all(&rank_dir)?;
-    let offered = latest_step(&rank_dir).unwrap_or(0);
+    let offered = latest_valid_step(&rank_dir).unwrap_or(0);
     cfg.fabric = FabricKind::Elastic;
     cfg.fabric_opts.elastic = Some(ctx.peer(offered));
     let fabric = ElasticFabric::connect(
@@ -271,7 +271,7 @@ pub fn state_digest(x: &[f32]) -> u64 {
 }
 
 /// Seed-derived initial smoke state (identical on every replica).
-fn smoke_init(n: usize, seed: u64) -> Vec<f32> {
+pub(crate) fn smoke_init(n: usize, seed: u64) -> Vec<f32> {
     let mut x = vec![0.0f32; n];
     Pcg64::new(seed, 0x57A7E).fill_normal(&mut x, 1.0);
     x
@@ -282,7 +282,7 @@ fn smoke_init(n: usize, seed: u64) -> Vec<f32> {
 /// the digest must be bit-stable across binaries), ReduceScatter them
 /// back, and contract so values stay bounded. Depends only on
 /// `(x, iter, seed)`, so replay from a checkpoint is bit-identical.
-fn smoke_step(
+pub(crate) fn smoke_step(
     fabric: &dyn Collective,
     x: &mut [f32],
     iter: u64,
@@ -321,7 +321,12 @@ fn smoke_step(
 
 /// Restore smoke state for `step` (0 = regenerate from the seed; no
 /// file needed). Returns `(state, completed_iters)`.
-fn smoke_restore(rank_dir: &Path, step: u64, n: usize, seed: u64) -> Result<(Vec<f32>, u64)> {
+pub(crate) fn smoke_restore(
+    rank_dir: &Path,
+    step: u64,
+    n: usize,
+    seed: u64,
+) -> Result<(Vec<f32>, u64)> {
     if step == 0 {
         return Ok((smoke_init(n, seed), 0));
     }
@@ -332,7 +337,7 @@ fn smoke_restore(rank_dir: &Path, step: u64, n: usize, seed: u64) -> Result<(Vec
 }
 
 /// Atomic smoke checkpoint after `iter` completed iterations.
-fn smoke_save(rank_dir: &Path, iter: u64, x: &[f32]) -> Result<()> {
+pub(crate) fn smoke_save(rank_dir: &Path, iter: u64, x: &[f32]) -> Result<()> {
     let ck = Checkpoint {
         step: iter,
         names: vec!["smoke_x".into()],
@@ -363,7 +368,7 @@ pub fn run_smoke(ctx: &WorkerContext, args: &Args) -> Result<()> {
     let check_every = args.u64_or("fabric-check-every", 1);
     let rank_dir = ctx.rank_dir();
     std::fs::create_dir_all(&rank_dir)?;
-    let offered = latest_step(&rank_dir).unwrap_or(0);
+    let offered = latest_valid_step(&rank_dir).unwrap_or(0);
     let topo = Topology::new(1, ctx.world);
     let fabric = ElasticFabric::connect(topo, ctx.peer(offered), bind, check_every)?;
     let handle = fabric.handle();

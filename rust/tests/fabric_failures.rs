@@ -19,6 +19,7 @@
 
 use qsdp::collectives::{loopback_available, AsyncFabric, Collective, SocketFabric, TrafficLedger};
 use qsdp::config::ElasticPeer;
+use qsdp::faults::{FaultPlan, LinkFault};
 use qsdp::quant::EncodedTensor;
 use qsdp::runtime::elastic::{smoke_reference_digest, ElasticFabric, RendezvousServer};
 use qsdp::sim::Topology;
@@ -132,6 +133,64 @@ fn fabric_failure_overlap_start_wait_reports_rank_without_hang() {
     assert!(msg.contains("worker not running"), "sticky failure diagnosis: {msg}");
 
     // Drop must join survivors without hanging (harness would time out).
+    drop(fabric);
+}
+
+/// Shared body for the planned corrupt-frame pins: rank 1's second
+/// link exchange sends a frame whose element-count header byte is
+/// XORed. The receiver — rank 2, mid-ring — must fail the collective
+/// with a typed `CorruptFrame` naming the sending peer and the step,
+/// the error must surface through `wait()`'s `Err` (no hang, no opaque
+/// worker panic), and the fabric must still drop cleanly.
+fn corrupt_frame_contract(fabric: &dyn Collective, label: &str) {
+    let topo = fabric.topo();
+    let shards = fp32_shards(topo, 250); // uneven shard sizes must not matter
+    let mut ledger = TrafficLedger::new();
+    let mut out = Vec::new();
+    let err = fabric
+        .start_all_gather(&shards, &mut out, &mut ledger)
+        .wait()
+        .expect_err("a corrupted frame must fail the collective");
+    let msg = err.to_string();
+    assert!(msg.contains("all_gather"), "{label}: must name the op: {msg}");
+    assert!(
+        msg.contains("corrupt frame from rank 1"),
+        "{label}: must name the corrupting peer: {msg}"
+    );
+    assert!(msg.contains("at step 1"), "{label}: must name the ring step: {msg}");
+}
+
+#[test]
+fn chaos_corrupt_frame_mid_ring_async_is_typed_and_droppable() {
+    let plan = FaultPlan::link_fault(1, 1, LinkFault::Corrupt { offset: 6, xor: 0x20 });
+    let fabric = AsyncFabric::with_fault_plan(
+        Topology::new(1, 3),
+        u64::MAX,
+        Duration::from_secs(5),
+        &plan,
+    );
+    corrupt_frame_contract(&fabric, "async");
+    // Drop must join every worker without hanging (harness timeout).
+    drop(fabric);
+}
+
+#[test]
+fn chaos_corrupt_frame_mid_ring_socket_is_typed_and_droppable() {
+    if !loopback_available() {
+        eprintln!("SKIP: loopback TCP unavailable; socket corrupt-frame test not run");
+        return;
+    }
+    let plan = FaultPlan::link_fault(1, 1, LinkFault::Corrupt { offset: 6, xor: 0x20 });
+    let fabric = SocketFabric::with_fault_plan(
+        Topology::new(1, 3),
+        IpAddr::V4(Ipv4Addr::LOCALHOST),
+        0,
+        u64::MAX,
+        Duration::from_secs(5),
+        &plan,
+    )
+    .expect("construct fault-armed socket fabric");
+    corrupt_frame_contract(&fabric, "socket");
     drop(fabric);
 }
 
