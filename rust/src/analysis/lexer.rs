@@ -1,0 +1,470 @@
+//! A hand-rolled, dependency-free lexical scanner for Rust source.
+//!
+//! The lint rules need three views of every line that a plain substring
+//! search cannot give: the *code* with comments stripped and literal
+//! contents blanked (so `"call .unwrap() here"` in a string or a doc
+//! comment never trips the panic rule), the *comment* text (where
+//! `SAFETY:` and `lint:` markers live), and the *string literals* (where
+//! flag names like `"fabric-persistent"` live). This module produces
+//! exactly that — a [`Line`] record per source line — plus the
+//! `#[cfg(test)]` / `#[cfg(debug_assertions)]` scope marking the rules
+//! use to exempt test and debug-only code.
+//!
+//! The scanner is a character state machine handling line comments,
+//! nested block comments, string/byte-string literals with escapes,
+//! raw strings (`r#"..."#`, any hash depth), and char literals vs
+//! lifetimes (`'a'` vs `'a`). It does not parse Rust — it only has to
+//! classify every character as code, comment, or literal, which is a
+//! regular-ish problem the full grammar is not.
+
+/// One source line, split into the three channels the rules consume.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Source text with comments removed and string/char literal
+    /// *contents* blanked (delimiters kept, so token boundaries
+    /// survive: `foo("--x")` becomes `foo("")`).
+    pub code: String,
+    /// Concatenated comment text on this line (both `//` and `/* */`,
+    /// including doc comments, without the delimiters).
+    pub comment: String,
+    /// Contents of string literals on this line. A literal spanning
+    /// multiple lines contributes each line's portion to that line.
+    pub strings: Vec<String>,
+    /// Inside a `#[cfg(test)]` / `#[test]` scope.
+    pub test: bool,
+    /// Inside a `#[cfg(debug_assertions)]` scope.
+    pub debug: bool,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Is `c` part of an identifier (for word-boundary checks)?
+pub fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `src` into per-line records and mark cfg scopes.
+pub fn lex(src: &str) -> Vec<Line> {
+    let cs: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut frag = String::new();
+    let mut st = State::Code;
+    let mut i = 0;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            if matches!(st, State::Str | State::RawStr(_)) {
+                cur.strings.push(std::mem::take(&mut frag));
+            }
+            lines.push(std::mem::take(&mut cur));
+            if matches!(st, State::LineComment) {
+                st = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                let next = cs.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = State::LineComment;
+                    i += 2;
+                    // Skip the doc-comment extra slash / bang so the
+                    // comment text starts at the content.
+                    if matches!(cs.get(i), Some('/') | Some('!')) {
+                        i += 1;
+                    }
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(1);
+                    i += 2;
+                } else if let Some(hashes) = raw_string_at(&cs, i) {
+                    // r"..."  r#"..."#  br#"..."#
+                    let prefix = if c == 'b' { 2 } else { 1 };
+                    cur.code.push('"');
+                    frag.clear();
+                    st = State::RawStr(hashes);
+                    i += prefix + hashes as usize + 1;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    frag.clear();
+                    st = State::Str;
+                    i += 1;
+                } else if c == '\'' && char_literal_at(&cs, i) {
+                    // Blank the char literal's content, keep the quotes.
+                    cur.code.push_str("''");
+                    i += 1;
+                    while i < cs.len() && cs[i] != '\'' {
+                        if cs[i] == '\\' {
+                            i += 1;
+                        }
+                        i += 1;
+                    }
+                    i += 1; // closing quote
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = cs.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Consume the escape pair; a backslash-newline
+                    // continuation leaves the newline for the top of
+                    // the loop so the line record still closes.
+                    frag.push(c);
+                    if let Some(&e) = cs.get(i + 1) {
+                        if e == '\n' {
+                            i += 1;
+                        } else {
+                            frag.push(e);
+                            i += 2;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur.strings.push(std::mem::take(&mut frag));
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    frag.push(c);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&cs, i, hashes) {
+                    cur.strings.push(std::mem::take(&mut frag));
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    frag.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if matches!(st, State::Str | State::RawStr(_)) {
+        cur.strings.push(frag);
+    }
+    lines.push(cur);
+    mark_scopes(&mut lines);
+    lines
+}
+
+/// Does a raw string literal start at `i`? Returns its hash count.
+fn raw_string_at(cs: &[char], i: usize) -> Option<u32> {
+    let c = cs[i];
+    let start = if c == 'r' {
+        i
+    } else if c == 'b' && cs.get(i + 1) == Some(&'r') {
+        i + 1
+    } else {
+        return None;
+    };
+    // `r` must not be the tail of an identifier (`var"x"` is not a
+    // raw string — not that it parses, but be strict anyway).
+    if i > 0 && is_ident(cs[i - 1]) {
+        return None;
+    }
+    let mut j = start + 1;
+    let mut hashes = 0u32;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (cs.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// Does `"` at `i` close a raw string with `hashes` hashes?
+fn closes_raw(cs: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| cs.get(i + k) == Some(&'#'))
+}
+
+/// Is the `'` at `i` a char literal opener (vs a lifetime)? A char
+/// literal is `'\...'` or `'x'`; a lifetime is `'ident` with no
+/// closing quote right after one character.
+fn char_literal_at(cs: &[char], i: usize) -> bool {
+    match cs.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => cs.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Scope kinds an attribute can open.
+#[derive(Clone, Copy, PartialEq)]
+enum Scope {
+    Test,
+    Debug,
+}
+
+/// Mark lines covered by `#[cfg(test)]`, `#[test]`, and
+/// `#[cfg(debug_assertions)]` scopes. Works on the comment-stripped,
+/// literal-blanked code channel, so attributes in strings or docs are
+/// invisible. The attributed item's extent is found by brace matching:
+/// from the attribute, skip further attributes, then either a `;`
+/// before any `{` (a statement like `#[cfg(test)] use x;`) or the
+/// matching close of the first `{`.
+fn mark_scopes(lines: &mut [Line]) {
+    // Flatten code with a char → line map.
+    let mut flat: Vec<(usize, char)> = Vec::new();
+    for (ln, l) in lines.iter().enumerate() {
+        for c in l.code.chars() {
+            flat.push((ln, c));
+        }
+        flat.push((ln, '\n'));
+    }
+    let n = flat.len();
+    let at = |i: usize| flat.get(i).map(|&(_, c)| c);
+    let mut i = 0;
+    while i < n {
+        if at(i) != Some('#') || at(i + 1) != Some('[') {
+            i += 1;
+            continue;
+        }
+        // Extract the attribute text up to the matching ']'.
+        let mut j = i + 2;
+        let mut depth = 1u32;
+        let mut attr = String::new();
+        while j < n && depth > 0 {
+            match at(j) {
+                Some('[') => depth += 1,
+                Some(']') => depth -= 1,
+                _ => {}
+            }
+            if depth > 0 {
+                attr.push(flat[j].1);
+            }
+            j += 1;
+        }
+        let scope = attr_scope(&attr);
+        let Some(scope) = scope else {
+            i = j;
+            continue;
+        };
+        // Find the end of the attributed item: skip chained
+        // attributes, then brace-match or stop at a top-level `;`.
+        let mut k = j;
+        let mut braces = 0i32;
+        let end;
+        loop {
+            match at(k) {
+                None => {
+                    end = n.saturating_sub(1);
+                    break;
+                }
+                Some('#') if braces == 0 && at(k + 1) == Some('[') => {
+                    // A stacked attribute: skip it wholesale.
+                    let mut d = 1u32;
+                    k += 2;
+                    while k < n && d > 0 {
+                        match at(k) {
+                            Some('[') => d += 1,
+                            Some(']') => d -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                }
+                Some('{') => {
+                    braces += 1;
+                    k += 1;
+                }
+                Some('}') if braces == 0 => {
+                    // The enclosing block closed before the attributed
+                    // item did — a shape we don't model. Stop here
+                    // rather than scan past the block.
+                    end = k.saturating_sub(1);
+                    break;
+                }
+                Some('}') => {
+                    braces -= 1;
+                    k += 1;
+                    if braces == 0 {
+                        end = k - 1;
+                        break;
+                    }
+                }
+                Some(';') if braces == 0 => {
+                    end = k;
+                    break;
+                }
+                Some(_) => k += 1,
+            }
+        }
+        let first_line = flat[i].0;
+        let last_line = flat[end.min(n - 1)].0;
+        for l in lines.iter_mut().take(last_line + 1).skip(first_line) {
+            match scope {
+                Scope::Test => l.test = true,
+                Scope::Debug => l.debug = true,
+            }
+        }
+        i = j;
+    }
+}
+
+/// Classify an attribute's text (`cfg(test)`, `test`,
+/// `cfg(all(test, unix))`, `cfg(debug_assertions)`, ...).
+fn attr_scope(attr: &str) -> Option<Scope> {
+    let attr = attr.trim();
+    if attr == "test" || attr == "bench" {
+        return Some(Scope::Test);
+    }
+    let inner = attr.strip_prefix("cfg")?.trim();
+    if !inner.starts_with('(') {
+        return None;
+    }
+    if inner.contains("not(") {
+        // `#[cfg(not(test))]` code is *live* outside tests — never an
+        // exemption. Treat any negation conservatively as no scope.
+        return None;
+    }
+    if has_word(inner, "test") {
+        Some(Scope::Test)
+    } else if has_word(inner, "debug_assertions") {
+        Some(Scope::Debug)
+    } else {
+        None
+    }
+}
+
+/// Word-boundary substring search on `haystack`.
+pub fn has_word(haystack: &str, word: &str) -> bool {
+    !find_words(haystack, word).is_empty()
+}
+
+/// All word-boundary occurrences (byte offsets) of `word` in `haystack`.
+pub fn find_words(haystack: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = haystack[from..].find(word) {
+        let start = from + p;
+        let end = start + word.len();
+        let before_ok =
+            start == 0 || !is_ident(haystack[..start].chars().next_back().unwrap_or(' '));
+        let after_ok = !haystack[end..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(start);
+        }
+        from = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_lexer_strips_comments_and_blanks_strings() {
+        let src = "let x = \"call .unwrap() now\"; // but .expect() here\n";
+        let lines = lex(src);
+        assert_eq!(lines[0].code, "let x = \"\"; ");
+        assert_eq!(lines[0].comment, " but .expect() here");
+        assert_eq!(lines[0].strings, vec!["call .unwrap() now"]);
+    }
+
+    #[test]
+    fn lint_lexer_handles_nested_block_comments() {
+        let src = "a /* outer /* inner */ still comment */ b\n";
+        let lines = lex(src);
+        assert_eq!(lines[0].code, "a  b");
+        assert!(lines[0].comment.contains("inner"));
+        assert!(lines[0].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn lint_lexer_handles_raw_strings_with_hashes() {
+        let src = "let s = r#\"unsafe \"quoted\" panic!\"#; let t = 1;\n";
+        let lines = lex(src);
+        assert_eq!(lines[0].code, "let s = \"\"; let t = 1;");
+        assert_eq!(lines[0].strings, vec!["unsafe \"quoted\" panic!"]);
+    }
+
+    #[test]
+    fn lint_lexer_distinguishes_char_literals_from_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { '\\'' }\nlet c = 'x';\n";
+        let lines = lex(src);
+        assert_eq!(lines[0].code, "fn f<'a>(x: &'a str) -> char { '' }");
+        assert_eq!(lines[1].code, "let c = '';");
+    }
+
+    #[test]
+    fn lint_lexer_tracks_multiline_strings_per_line() {
+        let src = "let u = \"--alpha \\\n  --beta\";\n";
+        let lines = lex(src);
+        assert_eq!(lines[0].strings, vec!["--alpha \\"]);
+        assert_eq!(lines[1].strings, vec!["  --beta"]);
+    }
+
+    #[test]
+    fn lint_lexer_marks_cfg_test_scopes() {
+        let src = "fn hot() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn cold() {}\n";
+        let lines = lex(src);
+        assert!(!lines[0].test);
+        assert!(lines[1].test && lines[2].test && lines[3].test && lines[4].test);
+        assert!(!lines[5].test);
+    }
+
+    #[test]
+    fn lint_lexer_marks_cfg_test_statement_without_braces() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() {}\n";
+        let lines = lex(src);
+        assert!(lines[0].test && lines[1].test);
+        assert!(!lines[2].test);
+    }
+
+    #[test]
+    fn lint_lexer_marks_debug_assertions_blocks() {
+        let src = "fn f() {\n    #[cfg(debug_assertions)]\n    {\n        x();\n    }\n    y();\n}\n";
+        let lines = lex(src);
+        assert!(!lines[0].debug);
+        assert!(lines[1].debug && lines[2].debug && lines[3].debug && lines[4].debug);
+        assert!(!lines[5].debug);
+    }
+
+    #[test]
+    fn lint_lexer_ignores_attributes_inside_strings() {
+        let src = "let s = \"#[cfg(test)] mod x {\";\nfn live() {}\n";
+        let lines = lex(src);
+        assert!(!lines[1].test);
+    }
+
+    #[test]
+    fn lint_lexer_word_boundaries() {
+        assert!(has_word("x.unwrap()", "unwrap"));
+        assert!(!has_word("x.unwrap_or(y)", "unwrap"));
+        assert!(!has_word("debug_assert!(x)", "assert"));
+        assert!(has_word("assert!(x)", "assert"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Self-enforcing static analysis: `qsdp lint`.
+//!
+//! The repo rests on hand-enforced invariants — the raw-pointer
+//! command protocol in `collectives/ring.rs`, typed-error hot paths,
+//! three string registries that historically drifted (`BOOL_FLAGS`,
+//! `LAUNCH_FLAGS`, `usage()`). This module machine-checks them on
+//! every `cargo test` via `tests/lint.rs`, and on demand via
+//! `qsdp lint [--json] [--root DIR]`.
+//!
+//! Layout:
+//!   lexer.rs — dependency-free Rust lexer: strips comments, blanks
+//!              string contents, marks `#[cfg(test)]` /
+//!              `#[cfg(debug_assertions)]` scopes per line.
+//!   rules.rs — the rule engine (stable rule IDs, `lint:allow`
+//!              escape hatch, `lint:zero-alloc` / `lint:cold`
+//!              markers). See rules.rs for the rule table.
+//!
+//! Output is deterministic: findings sort by (file, line, rule,
+//! message) and both renderers are pure functions of the finding
+//! list, so the same tree yields byte-identical output — pinned by
+//! `lint_json_deterministic` in tests/lint.rs.
+
+pub mod lexer;
+pub mod rules;
+
+use rules::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// One lint finding: `file:line rule message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule ID (see rules::RULE_IDS).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: String) -> Self {
+        Finding { file: file.to_string(), line, rule, message }
+    }
+}
+
+/// Directories (repo-relative) the lint walks. `examples/` lives at
+/// the repo root; everything else under `rust/`.
+const WALK_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Lex + lint the repo tree rooted at `root`. Missing walk roots are
+/// skipped (the fixture trees in tests/lint.rs are partial by design).
+pub fn run(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut sources = Vec::new();
+    for sub in WALK_ROOTS {
+        let dir = root.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&dir, &mut files)?;
+        files.sort();
+        for path in files {
+            let text = std::fs::read_to_string(&path)?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            sources.push(SourceFile { path: rel, lines: lexer::lex(&text) });
+        }
+    }
+    Ok(run_sources(&sources))
+}
+
+/// Pure entry point: lint pre-lexed sources. Fixture tests call this
+/// directly with synthetic trees.
+pub fn run_sources(sources: &[SourceFile]) -> Vec<Finding> {
+    rules::run_rules(sources)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `file:line rule message`, one finding per line.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{} {} {}\n", f.file, f.line, f.rule, f.message));
+    }
+    out
+}
+
+/// Hand-rolled JSON (no serde in the dependency budget): an object
+/// with a findings array, keys in fixed order, sorted findings —
+/// byte-identical across runs on the same tree.
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"message\": {}}}",
+            json_str(&f.file),
+            f.line,
+            json_str(f.rule),
+            json_str(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str(&format!("],\n  \"count\": {}\n}}\n", findings.len()));
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Locate the repo root: `--root DIR` if given, else the first of
+/// `.`/`..` containing `rust/src` (qsdp runs from the repo root or
+/// from `rust/` under cargo).
+fn find_root(args: &crate::util::args::Args) -> PathBuf {
+    if let Some(dir) = args.get("root") {
+        return PathBuf::from(dir);
+    }
+    for cand in [".", ".."] {
+        if Path::new(cand).join("rust/src").is_dir() {
+            return PathBuf::from(cand);
+        }
+    }
+    PathBuf::from(".")
+}
+
+/// `qsdp lint [--json] [--root DIR]`: exit 0 when clean, 1 when any
+/// finding fires, so CI can gate on it directly.
+pub fn cmd_lint(args: &crate::util::args::Args) -> anyhow::Result<()> {
+    let root = find_root(args);
+    let findings = run(&root)
+        .map_err(|e| anyhow::anyhow!("lint walk failed under {}: {e}", root.display()))?;
+    // `--json` is a *value* flag elsewhere (the bench snapshot writes
+    // `--json PATH`), so it stays out of BOOL_FLAGS; presence-only
+    // here keeps both call shapes working.
+    if args.has("json") {
+        print!("{}", render_json(&findings));
+    } else {
+        print!("{}", render_text(&findings));
+        if findings.is_empty() {
+            println!("lint: clean ({} rules)", rules::RULE_IDS.len());
+        } else {
+            eprintln!("lint: {} finding(s)", findings.len());
+        }
+    }
+    if findings.is_empty() {
+        Ok(())
+    } else {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,826 @@
+//! The lint rules: five machine-checked project contracts over the
+//! lexed source tree. Rule IDs are stable — tests, `lint:allow`
+//! escape hatches, and EXPERIMENTS.md §Lint all key on them.
+//!
+//! | rule id          | contract                                              |
+//! |------------------|-------------------------------------------------------|
+//! | `panic-path`     | no panic-capable calls in the hot-path module set     |
+//! | `safety-comment` | every `unsafe` has an adjacent `// SAFETY:` comment   |
+//! | `unsafe-module`  | `unsafe` only in the allowlisted module set           |
+//! | `flag-usage`     | config flags ⊆ `usage()` and `usage()` flags parsed   |
+//! | `flag-bool`      | `bool_or` call sites ⟷ `BOOL_FLAGS` registry          |
+//! | `flag-launch`    | supervisor re-emitted flags ⊆ `LAUNCH_FLAGS`          |
+//! | `zero-alloc`     | `lint:zero-alloc` fns allocate only in `lint:cold`    |
+//! | `registry-fabric`| `FabricKind::ALL` names pinned in the differential    |
+//! | `registry-codec` | every `impl Codec` type mentioned in `proptests.rs`   |
+//! | `allow-syntax`   | malformed `lint:allow` escape hatches                 |
+//!
+//! Escape hatch: `// lint:allow(<rule-id>): <justification>` on the
+//! finding's line or the line directly above suppresses that rule
+//! there. The justification is mandatory (≥ 10 characters) — an allow
+//! without a written why is itself a finding (`allow-syntax`), so the
+//! hatch cannot silently rot into a blanket waiver.
+
+use super::lexer::{find_words, has_word, Line};
+use super::Finding;
+use std::collections::BTreeMap;
+
+/// The hot-path module set rule `panic-path` walks: the ring command
+/// protocol, both ring transports, the hierarchical collective, the
+/// codec bit-unpack primitives, and the elastic fabric. (Repo-relative
+/// paths with forward slashes.)
+pub const HOT_PATHS: &[&str] = &[
+    "rust/src/collectives/async_fabric.rs",
+    "rust/src/collectives/hier.rs",
+    "rust/src/collectives/ring.rs",
+    "rust/src/collectives/socket_fabric.rs",
+    "rust/src/quant/codec.rs",
+    "rust/src/runtime/elastic/fabric.rs",
+];
+
+/// Modules allowed to contain `unsafe` (rule `unsafe-module`). Today
+/// only the ring command protocol's raw-pointer plumbing qualifies.
+pub const UNSAFE_ALLOWED: &[&str] = &["rust/src/collectives/ring.rs"];
+
+/// Every valid rule ID (for `lint:allow` validation).
+pub const RULE_IDS: &[&str] = &[
+    "allow-syntax",
+    "flag-bool",
+    "flag-launch",
+    "flag-usage",
+    "panic-path",
+    "registry-codec",
+    "registry-fabric",
+    "safety-comment",
+    "unsafe-module",
+    "zero-alloc",
+];
+
+/// One lexed file, ready for the rules.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    pub lines: Vec<Line>,
+}
+
+/// A parsed `lint:allow(rule): why` escape hatch.
+struct Allow {
+    rule: String,
+    valid: bool,
+}
+
+/// Minimum justification length for a `lint:allow` (characters after
+/// the colon, trimmed). Short enough not to pad, long enough that "ok"
+/// doesn't pass.
+const MIN_JUSTIFICATION: usize = 10;
+
+/// Parse the allow marker on one comment, if any. The marker must
+/// *lead* the comment (`// lint:allow(...)`) — mid-sentence mentions,
+/// like the ones in this module's own docs, are prose, not hatches.
+/// Returns the allow plus an optional `allow-syntax` finding message
+/// when malformed.
+fn parse_allow(comment: &str) -> Option<(Allow, Option<String>)> {
+    let trimmed = comment.trim_start();
+    if !trimmed.starts_with("lint:allow") {
+        return None;
+    }
+    let rest = &trimmed["lint:allow".len()..];
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Some((
+            Allow { rule: String::new(), valid: false },
+            Some("lint:allow needs the form `lint:allow(<rule>): <why>`".to_string()),
+        ));
+    };
+    let Some(close) = rest.find(')') else {
+        return Some((
+            Allow { rule: String::new(), valid: false },
+            Some("lint:allow rule list is missing its closing `)`".to_string()),
+        ));
+    };
+    let rule = rest[..close].trim().to_string();
+    let tail = rest[close + 1..].trim_start();
+    if !RULE_IDS.contains(&rule.as_str()) {
+        return Some((
+            Allow { rule: rule.clone(), valid: false },
+            Some(format!("lint:allow names unknown rule {rule:?}")),
+        ));
+    }
+    let Some(why) = tail.strip_prefix(':') else {
+        return Some((
+            Allow { rule, valid: false },
+            Some("lint:allow needs a `: <justification>` after the rule".to_string()),
+        ));
+    };
+    if why.trim().chars().count() < MIN_JUSTIFICATION {
+        return Some((
+            Allow { rule, valid: false },
+            Some(format!(
+                "lint:allow justification is too short (need ≥ {MIN_JUSTIFICATION} characters \
+                 saying *why* the panic/alloc is acceptable here)"
+            )),
+        ));
+    }
+    Some((Allow { rule, valid: true }, None))
+}
+
+/// Per-file allow map (line index → allow) plus syntax findings.
+fn collect_allows(file: &SourceFile, findings: &mut Vec<Finding>) -> BTreeMap<usize, Allow> {
+    let mut allows = BTreeMap::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if let Some((allow, err)) = parse_allow(&line.comment) {
+            if let Some(msg) = err {
+                findings.push(Finding::new(&file.path, idx + 1, "allow-syntax", msg));
+            }
+            allows.insert(idx, allow);
+        }
+    }
+    allows
+}
+
+/// Is the finding at line index `idx` suppressed by a valid allow for
+/// `rule`? An allow covers its own line and the code line directly
+/// below the contiguous comment block it lives in — so a justification
+/// may wrap over several comment lines.
+fn allowed(file: &SourceFile, allows: &BTreeMap<usize, Allow>, idx: usize, rule: &str) -> bool {
+    let hit = |i: usize| allows.get(&i).is_some_and(|a| a.valid && a.rule == rule);
+    if hit(idx) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let line = &file.lines[k];
+        let comment_only = line.code.trim().is_empty() && !line.comment.trim().is_empty();
+        if !comment_only {
+            return false;
+        }
+        if hit(k) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Run every rule over the lexed tree. Pure function of its input —
+/// same sources, same findings, in deterministic order.
+pub fn run_rules(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in files {
+        let allows = collect_allows(file, &mut findings);
+        if HOT_PATHS.contains(&file.path.as_str()) {
+            panic_path(file, &allows, &mut findings);
+        }
+        if file.path.starts_with("rust/src/") {
+            unsafe_rules(file, &allows, &mut findings);
+        }
+        zero_alloc(file, &allows, &mut findings);
+    }
+    flag_rules(files, &mut findings);
+    registry_rules(files, &mut findings);
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    findings
+}
+
+// --------------------------------------------------------------------
+// Rule 1: panic-path
+// --------------------------------------------------------------------
+
+/// Macros that can panic at runtime (`debug_assert*` is exempt — it
+/// compiles out of release builds, which is where the hot paths run).
+const PANIC_MACROS: &[&str] =
+    &["panic", "assert", "assert_eq", "assert_ne", "todo", "unimplemented", "unreachable"];
+
+fn panic_path(file: &SourceFile, allows: &BTreeMap<usize, Allow>, findings: &mut Vec<Finding>) {
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.test || line.debug {
+            continue;
+        }
+        let code = &line.code;
+        let mut hits: Vec<String> = Vec::new();
+        for m in PANIC_MACROS {
+            for p in find_words(code, m) {
+                if code[p + m.len()..].starts_with('!') {
+                    hits.push(format!("{m}!"));
+                }
+            }
+        }
+        for m in ["unwrap", "expect"] {
+            for p in find_words(code, m) {
+                let before_dot = code[..p].trim_end().ends_with('.');
+                let after_paren = code[p + m.len()..].trim_start().starts_with('(');
+                if before_dot && after_paren {
+                    hits.push(format!(".{m}()"));
+                }
+            }
+        }
+        hits.sort();
+        hits.dedup();
+        for h in hits {
+            if allowed(file, allows, idx, "panic-path") {
+                continue;
+            }
+            findings.push(Finding::new(
+                &file.path,
+                idx + 1,
+                "panic-path",
+                format!(
+                    "panic-capable `{h}` on a hot path — return a typed RingError/Result, \
+                     or justify with `// lint:allow(panic-path): <why>`"
+                ),
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Rule 2: safety-comment / unsafe-module
+// --------------------------------------------------------------------
+
+fn unsafe_rules(file: &SourceFile, allows: &BTreeMap<usize, Allow>, findings: &mut Vec<Finding>) {
+    for (idx, line) in file.lines.iter().enumerate() {
+        if !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if !UNSAFE_ALLOWED.contains(&file.path.as_str()) {
+            if !allowed(file, allows, idx, "unsafe-module") {
+                findings.push(Finding::new(
+                    &file.path,
+                    idx + 1,
+                    "unsafe-module",
+                    format!(
+                        "`unsafe` outside the allowlisted module set ({})",
+                        UNSAFE_ALLOWED.join(", ")
+                    ),
+                ));
+            }
+            continue;
+        }
+        // Adjacency: SAFETY on this line's comment, or on the
+        // contiguous run of comment-only lines directly above.
+        let mut covered = line.comment.contains("SAFETY:");
+        let mut k = idx;
+        while !covered && k > 0 {
+            k -= 1;
+            let above = &file.lines[k];
+            let comment_only = above.code.trim().is_empty() && !above.comment.trim().is_empty();
+            if !comment_only {
+                break;
+            }
+            covered = above.comment.contains("SAFETY:");
+        }
+        if !covered && !allowed(file, allows, idx, "safety-comment") {
+            findings.push(Finding::new(
+                &file.path,
+                idx + 1,
+                "safety-comment",
+                "`unsafe` without an adjacent `// SAFETY:` comment stating the invariant"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Rule 4: zero-alloc
+// --------------------------------------------------------------------
+
+/// Allocating constructors banned inside `lint:zero-alloc` functions.
+/// (`Vec::new`/`String::new` are absent deliberately — they don't
+/// allocate until first push; `reserve`/`resize` on warm buffers are
+/// the steady-state no-ops `tests/alloc_counter.rs` pins.)
+const ALLOC_TOKENS: &[&str] = &[
+    "Arc::new",
+    "Box::new",
+    "Rc::new",
+    "String::from",
+    "String::with_capacity",
+    "Vec::with_capacity",
+    "format!",
+    "vec!",
+];
+/// Allocating methods (require a preceding `.`).
+const ALLOC_METHODS: &[&str] = &["collect", "to_owned", "to_string", "to_vec"];
+
+fn zero_alloc(file: &SourceFile, allows: &BTreeMap<usize, Allow>, findings: &mut Vec<Finding>) {
+    let mut idx = 0;
+    while idx < file.lines.len() {
+        // Leading-marker rule, same as `lint:allow`: prose mentions of
+        // the marker (like this module's docs) must not arm the rule.
+        if !file.lines[idx].comment.trim_start().starts_with("lint:zero-alloc") {
+            idx += 1;
+            continue;
+        }
+        // The marked fn: next line whose code mentions `fn` (skipping
+        // attributes and further comments).
+        let mut f = idx + 1;
+        while f < file.lines.len() && !has_word(&file.lines[f].code, "fn") {
+            f += 1;
+            if f > idx + 8 {
+                break;
+            }
+        }
+        if f >= file.lines.len() || !has_word(&file.lines[f].code, "fn") {
+            findings.push(Finding::new(
+                &file.path,
+                idx + 1,
+                "allow-syntax",
+                "lint:zero-alloc marker is not followed by a function".to_string(),
+            ));
+            idx += 1;
+            continue;
+        }
+        let end = check_zero_alloc_body(file, f, allows, findings);
+        idx = end.max(idx + 1);
+    }
+}
+
+/// Scan the fn body starting at line `f` for banned allocations,
+/// honoring `lint:cold` markers. Returns the line index after the
+/// body's closing brace.
+fn check_zero_alloc_body(
+    file: &SourceFile,
+    f: usize,
+    allows: &BTreeMap<usize, Allow>,
+    findings: &mut Vec<Finding>,
+) -> usize {
+    let mut depth = 0i32;
+    let mut opened = false;
+    // Cold regions: (depth the marker was seen at). A marker on a
+    // comment-only line exempts the rest of its enclosing block; a
+    // trailing marker on a code line exempts just that line.
+    let mut cold_until_depth: Option<i32> = None;
+    let mut idx = f;
+    while idx < file.lines.len() {
+        let line = &file.lines[idx];
+        let depth_at_start = depth;
+        let cold_line = line.comment.contains("lint:cold");
+        let comment_only = line.code.trim().is_empty() && !line.comment.trim().is_empty();
+        if cold_line && comment_only && cold_until_depth.is_none() {
+            cold_until_depth = Some(depth_at_start);
+        }
+        let exempt = cold_line || cold_until_depth.is_some();
+        if opened && !exempt && !line.test && !line.debug {
+            report_allocs(file, idx, line, allows, findings);
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(d) = cold_until_depth {
+                        if depth < d {
+                            cold_until_depth = None;
+                        }
+                    }
+                    if opened && depth == 0 {
+                        return idx + 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        idx += 1;
+    }
+    idx
+}
+
+fn report_allocs(
+    file: &SourceFile,
+    idx: usize,
+    line: &Line,
+    allows: &BTreeMap<usize, Allow>,
+    findings: &mut Vec<Finding>,
+) {
+    let code = &line.code;
+    let mut hits: Vec<&str> = Vec::new();
+    for t in ALLOC_TOKENS {
+        // Token may contain `::`, so check the word boundary of its
+        // first segment at each occurrence of the whole token.
+        let head = t.split(':').next().unwrap_or(t);
+        for p in find_words(code, head) {
+            if code[p..].starts_with(t) {
+                hits.push(t);
+            }
+        }
+    }
+    for m in ALLOC_METHODS {
+        for p in find_words(code, m) {
+            let before_dot = code[..p].trim_end().ends_with('.');
+            let after_paren = code[p + m.len()..].trim_start().starts_with('(');
+            if before_dot && after_paren {
+                hits.push(m);
+            }
+        }
+    }
+    hits.sort();
+    hits.dedup();
+    for h in hits {
+        if allowed(file, allows, idx, "zero-alloc") {
+            continue;
+        }
+        findings.push(Finding::new(
+            &file.path,
+            idx + 1,
+            "zero-alloc",
+            format!(
+                "allocating `{h}` inside a `lint:zero-alloc` function — move it behind a \
+                 `// lint:cold` branch or drop the marker"
+            ),
+        ));
+    }
+}
+
+// --------------------------------------------------------------------
+// Rule 3: flag-usage / flag-bool / flag-launch
+// --------------------------------------------------------------------
+
+/// One `Args` getter call site.
+struct FlagSite {
+    file: usize,
+    line: usize,
+    flag: String,
+    getter: &'static str,
+    test: bool,
+}
+
+const GETTERS: &[&str] = &[".bool_or", ".f64_or", ".str_or", ".u64_or", ".usize_or"];
+
+/// Collect `args.<getter>("flag", ...)` call sites across the tree.
+/// The flag literal is the first string on the getter's line, or —
+/// for calls rustfmt broke after the paren — the first string within
+/// the next two lines.
+fn flag_sites(files: &[SourceFile]) -> Vec<FlagSite> {
+    let mut out = Vec::new();
+    for (fi, file) in files.iter().enumerate() {
+        for (idx, line) in file.lines.iter().enumerate() {
+            let code = &line.code;
+            // `flag_or_env(args, "flag", "ENV")` — the elastic worker's
+            // flag-with-env-fallback parse shape.
+            if find_words(code, "flag_or_env")
+                .into_iter()
+                .any(|p| code[p + "flag_or_env".len()..].trim_start().starts_with('('))
+                && !code.contains("fn flag_or_env")
+            {
+                if let Some(flag) = line.strings.first() {
+                    out.push(FlagSite {
+                        file: fi,
+                        line: idx + 1,
+                        flag: flag.clone(),
+                        getter: "args.get",
+                        test: line.test,
+                    });
+                }
+            }
+            for getter in GETTERS.iter().copied().chain(["args.get", "args.has"]) {
+                let method = getter.rsplit(['.']).next().unwrap_or(getter);
+                let occurrences = find_words(code, method)
+                    .into_iter()
+                    .filter(|&p| {
+                        let prefix_ok = code[..p].ends_with('.')
+                            && (getter.starts_with('.')
+                                || code[..p].trim_end_matches('.').ends_with("args"));
+                        let after = code[p + method.len()..].trim_start().starts_with('(');
+                        prefix_ok && after
+                    })
+                    .count();
+                for _ in 0..occurrences {
+                    let lit = [idx, idx + 1, idx + 2]
+                        .into_iter()
+                        .filter_map(|i| file.lines.get(i))
+                        .flat_map(|l| l.strings.first())
+                        .next();
+                    if let Some(flag) = lit {
+                        out.push(FlagSite {
+                            file: fi,
+                            line: idx + 1,
+                            flag: flag.clone(),
+                            getter: if getter.starts_with('.') { getter } else { "args.get" },
+                            test: line.test,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract a string-array registry (`BOOL_FLAGS`, `LAUNCH_FLAGS`, the
+/// supervisor's `own` re-emit array): from the line whose code
+/// contains `marker`, collect each line's first string until a line
+/// whose code contains `]`. Returns (flag, 1-based line) pairs.
+fn registry_strings(file: &SourceFile, marker: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let Some(start) = file.lines.iter().position(|l| l.code.contains(marker)) else {
+        return out;
+    };
+    for (idx, line) in file.lines.iter().enumerate().skip(start) {
+        if let Some(s) = line.strings.first() {
+            out.push((s.clone(), idx + 1));
+        }
+        if idx == start {
+            // Complete one-line array: a `]` after the array's opening
+            // `[` — the *last* `[` on the marker line, since earlier
+            // ones belong to the `&[&str]` type annotation.
+            if let (Some(o), Some(c)) = (line.code.rfind('['), line.code.rfind(']')) {
+                if c > o {
+                    break;
+                }
+            }
+        } else if line.code.contains(']') {
+            break;
+        }
+    }
+    out
+}
+
+/// `--flag` tokens in `main.rs::usage()` text, with their lines.
+fn usage_flags(file: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let Some(start) = file.lines.iter().position(|l| l.code.contains("fn usage")) else {
+        return out;
+    };
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (idx, line) in file.lines.iter().enumerate().skip(start) {
+        for s in &line.strings {
+            let bytes: Vec<char> = s.chars().collect();
+            let mut i = 0;
+            while i + 1 < bytes.len() {
+                if bytes[i] == '-' && bytes[i + 1] == '-' && i + 2 < bytes.len() {
+                    let mut j = i + 2;
+                    let mut name = String::new();
+                    while j < bytes.len()
+                        && (bytes[j].is_ascii_lowercase()
+                            || bytes[j].is_ascii_digit()
+                            || bytes[j] == '-')
+                    {
+                        name.push(bytes[j]);
+                        j += 1;
+                    }
+                    if !name.is_empty() && !name.starts_with('-') {
+                        out.push((name, idx + 1));
+                    }
+                    i = j;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return out;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+fn flag_rules(files: &[SourceFile], findings: &mut Vec<Finding>) {
+    let sites = flag_sites(files);
+    let main = files.iter().find(|f| f.path == "rust/src/main.rs");
+    let args_rs = files.iter().find(|f| f.path == "rust/src/util/args.rs");
+    let supervisor =
+        files.iter().find(|f| f.path == "rust/src/runtime/elastic/supervisor.rs");
+
+    // (a) every flag parsed by the run-config appears in usage().
+    if let Some(main) = main {
+        let usage: Vec<(String, usize)> = usage_flags(main);
+        let usage_names: Vec<&str> = usage.iter().map(|(n, _)| n.as_str()).collect();
+        if !usage.is_empty() {
+            for s in &sites {
+                let path = &files[s.file].path;
+                if s.test || !path.starts_with("rust/src/config/") {
+                    continue;
+                }
+                if !usage_names.contains(&s.flag.as_str()) {
+                    findings.push(Finding::new(
+                        path,
+                        s.line,
+                        "flag-usage",
+                        format!("--{} is parsed here but missing from main.rs::usage()", s.flag),
+                    ));
+                }
+            }
+            // (b) every usage() flag is parsed somewhere.
+            let parsed: Vec<&str> = sites.iter().map(|s| s.flag.as_str()).collect();
+            for (name, line) in &usage {
+                if !parsed.contains(&name.as_str()) {
+                    findings.push(Finding::new(
+                        &main.path,
+                        *line,
+                        "flag-usage",
+                        format!("usage() advertises --{name} but no Args getter parses it"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // (c) bool_or call sites ⟷ BOOL_FLAGS, both directions.
+    if let Some(args_rs) = args_rs {
+        let bool_flags = registry_strings(args_rs, "BOOL_FLAGS");
+        if !bool_flags.is_empty() {
+            let registered: Vec<&str> = bool_flags.iter().map(|(n, _)| n.as_str()).collect();
+            for s in &sites {
+                if s.test || s.getter != ".bool_or" {
+                    continue;
+                }
+                if !registered.contains(&s.flag.as_str()) {
+                    findings.push(Finding::new(
+                        &files[s.file].path,
+                        s.line,
+                        "flag-bool",
+                        format!(
+                            "--{} is read with bool_or but missing from BOOL_FLAGS — the \
+                             parser would greedily swallow the next positional",
+                            s.flag
+                        ),
+                    ));
+                }
+            }
+            let bool_sites: Vec<&str> = sites
+                .iter()
+                .filter(|s| !s.test && s.getter == ".bool_or")
+                .map(|s| s.flag.as_str())
+                .collect();
+            for (name, line) in &bool_flags {
+                if !bool_sites.contains(&name.as_str()) {
+                    findings.push(Finding::new(
+                        &args_rs.path,
+                        *line,
+                        "flag-bool",
+                        format!(
+                            "BOOL_FLAGS lists {name:?} but no bool_or call site reads it — \
+                             stale entries make value-typed flags misparse"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // (d) every flag the supervisor re-emits with resolved values must
+    // be in LAUNCH_FLAGS, else it is *also* forwarded verbatim and the
+    // worker sees it twice with conflicting values.
+    if let Some(sup) = supervisor {
+        let launch = registry_strings(sup, "LAUNCH_FLAGS");
+        let own = registry_strings(sup, "let own = [");
+        let launch_names: Vec<&str> = launch.iter().map(|(n, _)| n.as_str()).collect();
+        if !launch.is_empty() {
+            for (name, line) in &own {
+                if !launch_names.contains(&name.as_str()) {
+                    findings.push(Finding::new(
+                        &sup.path,
+                        *line,
+                        "flag-launch",
+                        format!(
+                            "worker argv re-emits --{name} but LAUNCH_FLAGS does not own it — \
+                             the user's value would be forwarded verbatim alongside"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Rule 5: registry-fabric / registry-codec
+// --------------------------------------------------------------------
+
+fn registry_rules(files: &[SourceFile], findings: &mut Vec<Finding>) {
+    let config = files.iter().find(|f| f.path == "rust/src/config/mod.rs");
+    let differential = files.iter().find(|f| f.path == "rust/tests/fabric_differential.rs");
+    let proptests = files.iter().find(|f| f.path == "rust/tests/proptests.rs");
+
+    // (a) every FabricKind::ALL backend name appears (as a string) in
+    // the differential harness.
+    if let (Some(config), Some(diff)) = (config, differential) {
+        let variants = fabric_all_variants(config);
+        let names = fabric_names(config);
+        let diff_strings: Vec<&str> = diff
+            .lines
+            .iter()
+            .flat_map(|l| l.strings.iter())
+            .map(|s| s.as_str())
+            .collect();
+        for (variant, line) in &variants {
+            let Some(name) = names.get(variant) else { continue };
+            if !diff_strings.iter().any(|s| s == name) {
+                findings.push(Finding::new(
+                    &config.path,
+                    *line,
+                    "registry-fabric",
+                    format!(
+                        "FabricKind::{variant} ({name:?}) is in ALL but never named in \
+                         rust/tests/fabric_differential.rs — the differential harness must \
+                         pin every registered backend"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // (b) every `impl Codec for T` type is mentioned in the wire_bytes
+    // property tests.
+    if let Some(prop) = proptests {
+        let prop_text: String = prop
+            .lines
+            .iter()
+            .map(|l| l.code.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        for file in files {
+            if !file.path.starts_with("rust/src/") {
+                continue;
+            }
+            for (idx, line) in file.lines.iter().enumerate() {
+                let code = &line.code;
+                let Some(p) = code.find("impl Codec for ") else { continue };
+                let ty: String = code[p + "impl Codec for ".len()..]
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if ty.is_empty() {
+                    continue;
+                }
+                if !has_word(&prop_text, &ty) {
+                    findings.push(Finding::new(
+                        &file.path,
+                        idx + 1,
+                        "registry-codec",
+                        format!(
+                            "codec {ty} has no wire_bytes property-test mention in \
+                             rust/tests/proptests.rs"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// `FabricKind::X` variants listed in the `ALL` array, with lines.
+fn fabric_all_variants(config: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let Some(start) = config.lines.iter().position(|l| l.code.contains("const ALL")) else {
+        return out;
+    };
+    for (idx, line) in config.lines.iter().enumerate().skip(start) {
+        let code = &line.code;
+        let mut rest = code.as_str();
+        while let Some(p) = rest.find("FabricKind::") {
+            let tail = &rest[p + "FabricKind::".len()..];
+            let ident: String = tail.chars().take_while(|c| c.is_alphanumeric()).collect();
+            // Skip the `[FabricKind; N]` type position (no `::`).
+            if !ident.is_empty() && ident != "ALL" {
+                out.push((ident.clone(), idx + 1));
+            }
+            rest = &tail[ident.len()..];
+        }
+        if code.contains(';') {
+            break;
+        }
+    }
+    out
+}
+
+/// Variant → wire-name map from `FabricKind::name()`'s match arms.
+fn fabric_names(config: &SourceFile) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let Some(start) = config.lines.iter().position(|l| l.code.contains("fn name")) else {
+        return out;
+    };
+    for line in config.lines.iter().skip(start).take(12) {
+        let code = &line.code;
+        if let Some(p) = code.find("FabricKind::") {
+            let ident: String = code[p + "FabricKind::".len()..]
+                .chars()
+                .take_while(|c| c.is_alphanumeric())
+                .collect();
+            if let Some(name) = line.strings.first() {
+                out.insert(ident, name.clone());
+            }
+        }
+        if code.trim() == "}" {
+            break;
+        }
+    }
+    out
+}

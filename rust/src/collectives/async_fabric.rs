@@ -268,6 +268,8 @@ where
             .collect();
         handles
             .into_iter()
+            // lint:allow(panic-path): re-raising a worker panic on the caller
+            // thread — swallowing it would silently corrupt the collective.
             .map(|h| h.join().expect("ring rank thread panicked"))
             .collect()
     })
@@ -329,6 +331,8 @@ impl AsyncFabric {
         stall: Duration,
         plan: &crate::faults::FaultPlan,
     ) -> Self {
+        // lint:allow(panic-path): test/chaos-only constructor with an infallible
+        // signature — a world-1 fault plan is harness misuse, not a runtime fault.
         assert!(topo.world() > 1, "fault injection needs a ring (world > 1)");
         let runtime = Some(spawn_channel_runtime_with(topo, stall, Some(plan)));
         AsyncFabric { topo, check_every, calls: Cell::new(0), persistent: true, runtime }
@@ -357,6 +361,8 @@ impl AsyncFabric {
     pub fn fail_rank_for_test(&self, rank: usize) {
         self.runtime
             .as_ref()
+            // lint:allow(panic-path): #[doc(hidden)] test hook — calling it on a
+            // spawn-per-call fabric is harness misuse, fail loudly.
             .expect("fail_rank_for_test needs the persistent runtime")
             .kill_worker(rank);
     }
@@ -371,7 +377,10 @@ fn collect_gathered(
     ledger: &mut TrafficLedger,
 ) {
     let mut iter = results.into_iter();
+    // lint:allow(panic-path): legacy spawn-per-call epilogue — rank 0's result
+    // is present by construction (its thread either returned it or panicked).
     let (o0, l0) = iter.next().expect("world > 0");
+    // lint:allow(panic-path): same invariant as the line above.
     *out = o0.expect("rank 0 always builds its result");
     ledger.merge(&l0);
     for (i, (o, l)) in iter.enumerate() {
@@ -411,6 +420,8 @@ impl Collective for AsyncFabric {
     ) {
         let topo = self.topo;
         let p = topo.world();
+        // lint:allow(panic-path): API precondition on the caller's shard count,
+        // checked before any wire traffic — a shape bug, not a link fault.
         assert_eq!(shards.len(), p, "one shard per rank");
         if p == 1 {
             shards[0].decode(out);
@@ -424,6 +435,8 @@ impl Collective for AsyncFabric {
         let results = run_ring(p, |r, link| {
             let mut scratch = RankScratch::default();
             ag_rank(topo, r, &shards[r], &mut scratch, link).unwrap_or_else(|e| {
+                // lint:allow(panic-path): legacy spawn-per-call mode has no Done
+                // channel to report through — its documented contract is to panic.
                 panic!("async spawn-per-call all_gather: rank {r}: {}", e.describe(r, p))
             });
             (gather_epilogue_owned(r, check, &scratch.slots), scratch.ledger.take())
@@ -457,6 +470,8 @@ impl Collective for AsyncFabric {
             let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
             rs_ring(topo, r, n_elems, &inputs[r], codec, &mut rank_rng, &mut scratch, link)
                 .unwrap_or_else(|e| {
+                    // lint:allow(panic-path): legacy spawn-per-call mode has no
+                    // Done channel — its documented contract is to panic.
                     panic!("async spawn-per-call reduce_scatter: rank {r}: {}", e.describe(r, p))
                 });
             (std::mem::take(&mut scratch.acc), scratch.ledger.take())
@@ -505,15 +520,21 @@ impl Collective for AsyncFabric {
             let mut rank_rng = Pcg64::new(base ^ r as u64, r as u64);
             rs_ring(topo, r, n_elems, &inputs[r], codec_rs, &mut rank_rng, &mut scratch, link)
                 .unwrap_or_else(|e| {
+                    // lint:allow(panic-path): legacy spawn-per-call mode has no
+                    // Done channel — its documented contract is to panic.
                     panic!("async spawn-per-call all_reduce: rank {r}: {}", e.describe(r, p))
                 });
             codec_ag
                 .encode_into(&scratch.acc, &mut scratch.enc, &mut rank_rng)
                 .unwrap_or_else(|e| {
+                    // lint:allow(panic-path): legacy spawn-per-call mode has no
+                    // Done channel — its documented contract is to panic.
                     panic!("async spawn-per-call all_reduce: rank {r}: {e}")
                 });
             let enc = std::mem::take(&mut scratch.enc);
             ag_rank(topo, r, &enc, &mut scratch, link).unwrap_or_else(|e| {
+                // lint:allow(panic-path): legacy spawn-per-call mode has no
+                // Done channel — its documented contract is to panic.
                 panic!("async spawn-per-call all_reduce: rank {r}: {}", e.describe(r, p))
             });
             scratch.enc = enc;
@@ -535,6 +556,8 @@ impl Collective for AsyncFabric {
     ) -> PendingCollective<'a> {
         match &self.runtime {
             Some(rt) => {
+                // lint:allow(panic-path): API precondition on the caller's shard
+                // count, checked before any wire traffic — a shape bug.
                 assert_eq!(shards.len(), self.topo.world(), "one shard per rank");
                 let check = self.check_due();
                 PendingCollective::in_flight(submit_all_gather_into(

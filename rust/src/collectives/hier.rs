@@ -139,12 +139,17 @@ pub fn two_level_reduce_scatter(
     ledger: &mut TrafficLedger,
 ) -> Vec<Vec<f32>> {
     let p = topo.world();
+    // lint:allow(panic-path): API shape preconditions, checked before any
+    // quantization or byte accounting — caller bugs, not wire faults.
     assert_eq!(inputs.len(), p, "one contribution per rank");
     let n = inputs[0].len();
     for x in inputs {
+        // lint:allow(panic-path): same shape precondition as above.
         assert_eq!(x.len(), n, "ragged contributions");
     }
+    // lint:allow(panic-path): same shape precondition as above.
     assert_eq!(ef.intra.len(), p, "EF state sized for a different world");
+    // lint:allow(panic-path): same shape precondition as above.
     assert_eq!(ef.inter.len(), topo.nodes);
     let g = topo.gpus_per_node;
 
@@ -167,6 +172,8 @@ pub fn two_level_reduce_scatter(
             codecs
                 .intra
                 .encode_into(&x, &mut enc, rng)
+                // lint:allow(panic-path): encode fails only on non-finite input —
+                // the fn's documented panic contract (see the doc comment).
                 .unwrap_or_else(|e| panic!("two-level RS intra hop, rank {r}: {e}"));
             enc.decode(&mut dec);
             for ((res, &xi), &di) in ef.intra[r].iter_mut().zip(&x).zip(&dec) {
@@ -219,6 +226,8 @@ pub fn two_level_reduce_scatter(
             codecs
                 .inter
                 .encode_into(&x, &mut enc, rng)
+                // lint:allow(panic-path): encode fails only on non-finite input —
+                // the fn's documented panic contract (see the doc comment).
                 .unwrap_or_else(|e| panic!("two-level RS inter hop, node {node}: {e}"));
             enc.decode(&mut dec);
             for ((res, &xi), &di) in

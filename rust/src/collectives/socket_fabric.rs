@@ -61,7 +61,7 @@ use super::ring::{
 use crate::quant::{Codec, EncodedTensor};
 use crate::sim::Topology;
 use crate::util::Pcg64;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::cell::Cell;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
@@ -153,6 +153,7 @@ pub(crate) fn elastic_link(
 /// Write as much of `[header][payload]` as the kernel will take
 /// without blocking. `pos` is the combined progress cursor. Returns
 /// whether any bytes moved.
+// lint:zero-alloc
 fn pump_write(
     stream: &mut TcpStream,
     header: &[u8; FRAME_HEADER_BYTES],
@@ -175,7 +176,7 @@ fn pump_write(
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(RingError::successor(format!("write failed: {e}"))),
+            Err(e) => return Err(RingError::successor(format!("write failed: {e}"))), // lint:cold
         }
     }
     Ok(progressed)
@@ -202,6 +203,7 @@ impl InProgress {
 
 /// Read as much of the incoming frame as is available without
 /// blocking. Returns whether any bytes moved.
+// lint:zero-alloc
 fn pump_read(
     stream: &mut TcpStream,
     st: &mut InProgress,
@@ -209,8 +211,8 @@ fn pump_read(
 ) -> Result<bool, RingError> {
     let mut progressed = false;
     loop {
-        if st.total.is_none() {
-            match stream.read(&mut st.header[st.pos..]) {
+        match st.total {
+            None => match stream.read(&mut st.header[st.pos..]) {
                 Ok(0) => {
                     return Err(RingError::predecessor(
                         "connection closed before a full length prefix",
@@ -222,6 +224,7 @@ fn pump_read(
                     if st.pos == FRAME_HEADER_BYTES {
                         let len = u64::from_le_bytes(st.header);
                         if len > MAX_FRAME_BYTES {
+                            // lint:cold
                             return Err(RingError::corrupt(format!(
                                 "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
                             )));
@@ -242,27 +245,34 @@ fn pump_read(
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => return Err(RingError::predecessor(format!("read failed: {e}"))),
-            }
-        } else {
-            let total = st.total.unwrap();
-            if st.pos >= total {
-                break;
-            }
-            match stream.read(&mut buf[st.pos..total]) {
-                Ok(0) => {
-                    return Err(RingError::predecessor(format!(
-                        "connection closed mid-frame ({} of {total} payload bytes)",
-                        st.pos
-                    )))
+                Err(e) => {
+                    // lint:cold
+                    return Err(RingError::predecessor(format!("read failed: {e}")));
                 }
-                Ok(k) => {
-                    st.pos += k;
-                    progressed = true;
+            },
+            Some(total) => {
+                if st.pos >= total {
+                    break;
                 }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => return Err(RingError::predecessor(format!("read failed: {e}"))),
+                match stream.read(&mut buf[st.pos..total]) {
+                    Ok(0) => {
+                        // lint:cold
+                        return Err(RingError::predecessor(format!(
+                            "connection closed mid-frame ({} of {total} payload bytes)",
+                            st.pos
+                        )));
+                    }
+                    Ok(k) => {
+                        st.pos += k;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        // lint:cold
+                        return Err(RingError::predecessor(format!("read failed: {e}")));
+                    }
+                }
             }
         }
     }
@@ -274,6 +284,7 @@ impl RingTransport for SocketLink {
     /// reading the predecessor's frame, then swap the received frame
     /// into `buf`. Both streams are non-blocking; see the module docs
     /// for why the interleaving is what makes the ring deadlock-free.
+    // lint:zero-alloc
     fn exchange(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
         let header = (buf.len() as u64).to_le_bytes();
         let out_total = FRAME_HEADER_BYTES + buf.len();
@@ -292,6 +303,7 @@ impl RingTransport for SocketLink {
                 idle_spins = 0;
             } else {
                 if last_progress.elapsed() > self.stall {
+                    // lint:cold
                     return Err(RingError::stalled(format!(
                         "no progress for {:.1}s (sent {out_pos}/{out_total} bytes)",
                         self.stall.as_secs_f64()
@@ -316,6 +328,7 @@ impl RingTransport for SocketLink {
     /// Receive-only half of the exchange, for the fault injector's
     /// dropped-frame semantics: pump the incoming stream under the same
     /// stall backstop, send nothing.
+    // lint:zero-alloc
     fn recv_only(&mut self, buf: &mut Vec<u8>) -> Result<(), RingError> {
         let mut st = InProgress::new();
         let mut last_progress = Instant::now();
@@ -326,6 +339,7 @@ impl RingTransport for SocketLink {
                 idle_spins = 0;
             } else {
                 if last_progress.elapsed() > self.stall {
+                    // lint:cold
                     return Err(RingError::stalled(format!(
                         "no incoming progress for {:.1}s (receive-only)",
                         self.stall.as_secs_f64()
@@ -485,7 +499,7 @@ impl SocketFabric {
         stall: Duration,
         plan: &crate::faults::FaultPlan,
     ) -> Result<Self> {
-        assert!(topo.world() > 1, "fault injection needs a ring (world > 1)");
+        ensure!(topo.world() > 1, "fault injection needs a ring (world > 1)");
         Self::build(topo, addr, base_port, check_every, stall, Some(plan))
     }
 
@@ -529,10 +543,15 @@ impl SocketFabric {
     /// `tests/fabric_failures.rs`.
     #[doc(hidden)]
     pub fn fail_rank_for_test(&self, rank: usize) {
-        self.runtime
-            .as_ref()
-            .expect("fail_rank_for_test needs world > 1")
-            .kill_worker(rank);
+        self.rt().kill_worker(rank);
+    }
+
+    /// The persistent runtime behind every world > 1 dispatch. Callers
+    /// below reach this only after their `world == 1` short-circuit.
+    fn rt(&self) -> &FabricRuntime {
+        // lint:allow(panic-path): `build` spawns the runtime whenever
+        // world > 1, so a miss here is an internal invariant breach.
+        self.runtime.as_ref().expect("world > 1 spawns the socket runtime")
     }
 }
 
@@ -560,13 +579,15 @@ impl Collective for SocketFabric {
         ledger: &mut TrafficLedger,
     ) {
         let p = self.topo.world();
+        // lint:allow(panic-path): API precondition on the caller's shard count, checked
+        // before any wire traffic — a shape bug, not a link fault.
         assert_eq!(shards.len(), p, "one shard per rank");
         if p == 1 {
             shards[0].decode(out);
             return;
         }
         let check = self.check_due();
-        let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
+        let rt = self.rt();
         runtime_all_gather_into(rt, "socket", shards, out, ledger, check);
     }
 
@@ -584,7 +605,7 @@ impl Collective for SocketFabric {
             return world1_reduce_scatter(&inputs[0], codec, rng);
         }
         let base = rng.next_u64();
-        let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
+        let rt = self.rt();
         runtime_reduce_scatter(rt, "socket", inputs, codec, base, n_elems, ledger)
     }
 
@@ -610,7 +631,7 @@ impl Collective for SocketFabric {
         }
         let base = rng.next_u64();
         let check = self.check_due();
-        let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
+        let rt = self.rt();
         runtime_all_reduce(rt, "socket", inputs, codec_rs, codec_ag, base, n_elems, check, ledger)
     }
 
@@ -623,13 +644,15 @@ impl Collective for SocketFabric {
         ledger: &'a mut TrafficLedger,
     ) -> PendingCollective<'a> {
         let p = self.topo.world();
+        // lint:allow(panic-path): API precondition on the caller's shard count, checked
+        // before any wire traffic — a shape bug, not a link fault.
         assert_eq!(shards.len(), p, "one shard per rank");
         if p == 1 {
             shards[0].decode(out);
             return PendingCollective::ready();
         }
         let check = self.check_due();
-        let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
+        let rt = self.rt();
         PendingCollective::in_flight(submit_all_gather_into(rt, "socket", shards, out, ledger, check))
     }
 
@@ -650,7 +673,7 @@ impl Collective for SocketFabric {
             return PendingCollective::ready();
         }
         let base = rng.next_u64();
-        let rt = self.runtime.as_ref().expect("world > 1 spawns the socket runtime");
+        let rt = self.rt();
         PendingCollective::in_flight(submit_reduce_scatter_into(
             rt, "socket", inputs, codec, base, n_elems, outs, ledger,
         ))

@@ -19,6 +19,7 @@
 //! [`experiments`] for paper table/figure regeneration, [`theory`] for
 //! the Theorem-2 convergence testbed.
 
+pub mod analysis;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

@@ -10,21 +10,30 @@
 //!   theory     — Theorem 2 / Corollary 3 convergence validation
 //!   reproduce  — run everything, writing results/ CSVs
 //!   info       — print artifact/config inventory
+//!   lint       — self-enforcing static analysis (fabric safety contracts)
 
 use qsdp::experiments;
 use qsdp::util::args::Args;
 
+// Every `--flag` named below must have a live parse site and every
+// flag `config::RunConfig` parses must be named below — `qsdp lint`
+// rule `flag-usage` cross-checks both directions on each cargo test.
 fn usage() -> ! {
     eprintln!(
         "usage: qsdp <command> [flags]\n\
          commands:\n  \
-         train     --config tiny --policy w8g8|baseline|exact --steps N --workers P\n            \
+         train     --config tiny --policy w8g8|baseline|exact --steps N\n            \
+         --nodes N --gpus-per-node G [--warmup N --seed S --lr F]\n            \
+         [--eval-every N --corpus-len N --bandwidth GBPS --accum K]\n            \
          --fabric lockstep|flat|async|socket [--fabric-addr IP] [--fabric-port N]\n            \
-         [--overlap]  (pipeline collectives; comm/compute overlap clock)\n  \
+         [--fabric-persistent B --fabric-check-every N --fabric-stall-ms MS]\n            \
+         [--overlap] [--hier] [--hpz]  (pipeline collectives; two-level quant)\n  \
          launch    --world P [--nodes N --gpus-per-node G] [--max-restarts K]\n            \
-         [--ckpt-dir DIR --ckpt-every K] <train|smoke>  (elastic multi-process run)\n  \
+         [--ckpt-dir DIR --ckpt-every K] [--launch-timeout-s S]\n            \
+         <train|smoke>  (elastic multi-process run)\n  \
          smoke     [--world P --iters N --seed S]  (reference digest; worker mode via --rank)\n  \
          chaos     [--seeds N | --seed S] [--skip-if-no-loopback]  (seeded fault soak)\n  \
+         lint      [--json] [--root DIR]  (static-analysis contracts; exit 1 on findings)\n  \
          table1 | table2 | table3 | table5 | table6\n  \
          figure3 | figure4 | figure6 | figure7\n  \
          theory    [--dim N] [--kappa K]\n  \
@@ -43,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         "launch" => qsdp::runtime::elastic::cmd_launch(&args),
         "smoke" => qsdp::runtime::elastic::cmd_smoke(&args),
         "chaos" => qsdp::faults::chaos::cmd_chaos(&args),
+        "lint" => qsdp::analysis::cmd_lint(&args),
         "table1" => experiments::table1(&args),
         "table2" => experiments::table2(&args),
         "table3" => experiments::table3(&args),

@@ -569,6 +569,8 @@ pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
 /// message payload use the aliasing-safe [`pack_bits_in_place`]
 /// instead; both produce byte-identical streams.
 pub fn pack_bits_into(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
+    // lint:allow(panic-path): bit-width precondition on a packing primitive — every
+    // caller passes a codec's compile-time-checked `bits`, so this is a programmer error.
     assert!((1..=8).contains(&bits));
     out.clear();
     out.reserve((codes.len() * bits as usize).div_ceil(8));
@@ -623,7 +625,10 @@ pub fn pack_bits_into(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
 /// length. The write cursor never catches the read cursor for
 /// bits ≤ 7 (⌊(i+1)·bits/8⌋ ≤ i), so no scratch allocation is needed —
 /// this is the allocation-free half of `encode_into`.
+// lint:zero-alloc
 pub fn pack_bits_in_place(buf: &mut Vec<u8>, bits: u8) {
+    // lint:allow(panic-path): bit-width precondition on a packing primitive — every
+    // caller passes a codec's compile-time-checked `bits`, so this is a programmer error.
     assert!((1..=8).contains(&bits));
     if bits == 8 {
         return;
@@ -651,7 +656,10 @@ pub fn pack_bits_in_place(buf: &mut Vec<u8>, bits: u8) {
 }
 
 /// Unpack a bitstream produced by [`pack_bits`] into `out` (len = n).
+// lint:zero-alloc
 pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
+    // lint:allow(panic-path): bit-width precondition on a packing primitive — every
+    // caller passes a codec's compile-time-checked `bits`, so this is a programmer error.
     assert!((1..=8).contains(&bits));
     match bits {
         8 => out.copy_from_slice(&packed[..out.len()]),
@@ -660,11 +668,14 @@ pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
             let mut it = out.chunks_exact_mut(2);
             let mut src = packed.iter();
             for pair in &mut it {
+                // lint:allow(panic-path): the packed stream holds ⌈n·bits/8⌉ bytes by
+                // construction (`pack_bits`), so the source iterator cannot run dry here.
                 let b = *src.next().unwrap();
                 pair[0] = b & 0x0f;
                 pair[1] = b >> 4;
             }
             if let [last] = it.into_remainder() {
+                // lint:allow(panic-path): same length argument as the loop above.
                 *last = *src.next().unwrap() & 0x0f;
             }
         }
@@ -672,6 +683,8 @@ pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
             let mut it = out.chunks_exact_mut(4);
             let mut src = packed.iter();
             for quad in &mut it {
+                // lint:allow(panic-path): the packed stream holds ⌈n·bits/8⌉ bytes by
+                // construction (`pack_bits`), so the source iterator cannot run dry here.
                 let b = *src.next().unwrap();
                 quad[0] = b & 3;
                 quad[1] = (b >> 2) & 3;
@@ -680,6 +693,7 @@ pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
             }
             let rem = it.into_remainder();
             if !rem.is_empty() {
+                // lint:allow(panic-path): same length argument as the loop above.
                 let b = *src.next().unwrap();
                 for (i, o) in rem.iter_mut().enumerate() {
                     *o = (b >> (2 * i)) & 3;
@@ -694,6 +708,8 @@ pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
             let mut nbits: u32 = 0;
             for o in out.iter_mut() {
                 while nbits < bits as u32 {
+                    // lint:allow(panic-path): the accumulator refill consumes exactly the
+                    // ⌈n·bits/8⌉ bytes `pack_bits` emitted — the iterator cannot run dry.
                     acc |= (*src.next().unwrap() as u64) << nbits;
                     nbits += 8;
                 }

@@ -462,6 +462,11 @@ mod tests {
             Box::new(BlockQuantCodec::new(4, 128, true)),
             Box::new(BlockQuantCodec::new(4, 97, false)),
             Box::new(BlockQuantCodec::new(2, 64, false)),
+            // the static-dispatch union must forward every contract
+            // unchanged, so it sweeps here like any other codec
+            Box::new(AnyCodec::Fp16(Fp16Codec)),
+            Box::new(AnyCodec::MinMax(MinMaxCodec::new(8, 1024, true))),
+            Box::new(AnyCodec::Block(BlockQuantCodec::new(4, 128, true))),
         ]
     }
 

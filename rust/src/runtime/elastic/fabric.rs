@@ -193,6 +193,13 @@ impl ElasticCore {
             }
         }
     }
+
+    /// The local inner runtime — present whenever `world > 1`.
+    fn rt(&self) -> &FabricRuntime {
+        // lint:allow(panic-path): `connect` spawns the inner runtime whenever world > 1,
+        // and every caller sits behind a `world() == 1` early return — absence is a wiring bug.
+        self.inner.as_ref().expect("world > 1 spawns the inner runtime")
+    }
 }
 
 /// Bind a fresh wire listener, register with the rendezvous, and (if
@@ -218,6 +225,8 @@ fn join_epoch(
     )?;
     let link = if membership.members.len() >= 2 {
         let succ =
+            // lint:allow(panic-path): rendezvous always seats the caller in the epoch it
+            // returns, so the successor lookup cannot miss — a None here is a membership bug.
             membership.successor_of(peer.rank).expect("rendezvous epochs include the caller");
         Some(elastic_link(&listener, succ.addr, Duration::from_millis(peer.stall_ms))?)
     } else {
@@ -395,13 +404,15 @@ impl Collective for ElasticFabric {
         ledger: &mut TrafficLedger,
     ) {
         let p = self.core.topo.world();
+        // lint:allow(panic-path): API precondition on the caller's shard count, checked
+        // before any wire traffic — a shape bug, not a link fault.
         assert_eq!(shards.len(), p, "one shard per rank");
         if p == 1 {
             shards[0].decode(out);
             return;
         }
         let check = self.core.check_due();
-        let rt = self.core.inner.as_ref().expect("world > 1 spawns the inner runtime");
+        let rt = self.core.rt();
         runtime_all_gather_into(rt, "elastic", shards, out, ledger, check);
         // Rank q's decoded block starts at the prefix sum of the
         // preceding shards' element counts.
@@ -433,7 +444,7 @@ impl Collective for ElasticFabric {
             return world1_reduce_scatter(&inputs[0], codec, rng);
         }
         let base = rng.next_u64();
-        let rt = self.core.inner.as_ref().expect("world > 1 spawns the inner runtime");
+        let rt = self.core.rt();
         let outs = runtime_reduce_scatter(rt, "elastic", inputs, codec, base, n_elems, ledger);
         let own = EncodedTensor::fp32(&outs[self.core.peer.rank]);
         self.core.mirror("reduce_scatter", &own, |q| &outs[q][..]);
@@ -462,7 +473,7 @@ impl Collective for ElasticFabric {
         }
         let base = rng.next_u64();
         let check = self.core.check_due();
-        let rt = self.core.inner.as_ref().expect("world > 1 spawns the inner runtime");
+        let rt = self.core.rt();
         let out = runtime_all_reduce(
             rt, "elastic", inputs, codec_rs, codec_ag, base, n_elems, check, ledger,
         );

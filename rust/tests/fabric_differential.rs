@@ -96,6 +96,16 @@ fn ring_fabrics(topo: Topology) -> Vec<(&'static str, Box<dyn Collective>)> {
         .collect()
 }
 
+/// Pin the registry's wire names. Growing `FabricKind::ALL` (or
+/// renaming a backend) must consciously update this harness — the
+/// `registry-fabric` lint rule cross-checks these exact strings, so a
+/// new backend that is not swept here fails `qsdp lint` too.
+#[test]
+fn registry_names_are_pinned() {
+    let names: Vec<&str> = FabricKind::ALL.iter().map(|k| k.name()).collect();
+    assert_eq!(names, ["lockstep", "flat", "async", "socket"]);
+}
+
 /// Does the ring link `r -> r+1 (mod P)` cross a node boundary?
 fn ring_link_is_inter(topo: Topology, r: usize) -> bool {
     topo.node_of(r) != topo.node_of((r + 1) % topo.world())

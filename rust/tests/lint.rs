@@ -1,0 +1,388 @@
+//! Self-enforcement + fixture tests for `qsdp lint`.
+//!
+//! Two layers:
+//!
+//! 1. **The repo lints itself.** `lint_repo_tree_is_clean` runs the
+//!    real walker over this checkout and requires zero findings — the
+//!    same gate CI's `lint` job applies via `qsdp lint`. A new panic
+//!    site on a hot path, an `unsafe` without `// SAFETY:`, a flag
+//!    that drifts out of `usage()`, or an unregistered codec fails
+//!    `cargo test` right here.
+//!
+//! 2. **Each rule catches its seeded violation.** The `fixture_*`
+//!    tests feed `run_sources` synthetic trees that violate exactly
+//!    one contract and assert the expected rule fires on the expected
+//!    line — so a refactor of the engine cannot silently lobotomize a
+//!    rule while the (clean) repo keeps passing.
+
+use qsdp::analysis::lexer::lex;
+use qsdp::analysis::rules::SourceFile;
+use qsdp::analysis::{render_json, render_text, run, run_sources, Finding};
+use std::path::Path;
+
+/// The checkout root: tests run with cwd = `rust/`, the manifest dir.
+fn repo_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+}
+
+fn file(path: &str, src: &str) -> SourceFile {
+    SourceFile { path: path.to_string(), lines: lex(src) }
+}
+
+fn rules_of<'a>(findings: &'a [Finding]) -> Vec<&'a str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ----------------------------------------------------------------
+// Layer 1: self-enforcement
+// ----------------------------------------------------------------
+
+#[test]
+fn lint_repo_tree_is_clean() {
+    let findings = run(repo_root()).expect("lint walk over the checkout");
+    assert!(
+        findings.is_empty(),
+        "the repo must lint clean; `qsdp lint` would fail CI with:\n{}",
+        render_text(&findings)
+    );
+}
+
+#[test]
+fn lint_json_deterministic() {
+    // Two independent walks over the same tree must render
+    // byte-identical JSON (sorted findings, hand-rolled renderer) —
+    // CI diffs lint output across runs, so any nondeterminism
+    // (directory order, map iteration) is a bug.
+    let a = render_json(&run(repo_root()).unwrap());
+    let b = render_json(&run(repo_root()).unwrap());
+    assert_eq!(a, b);
+    assert!(a.ends_with("\"count\": 0\n}\n"), "clean tree pins the trailer: {a:?}");
+}
+
+#[test]
+fn lint_json_escapes_and_orders_fields() {
+    let findings = vec![
+        Finding::new("a.rs", 3, "panic-path", "quote \" backslash \\ tab \t done".to_string()),
+        Finding::new("b.rs", 1, "zero-alloc", "plain".to_string()),
+    ];
+    let json = render_json(&findings);
+    assert!(json.contains(r#""file": "a.rs", "line": 3, "rule": "panic-path""#));
+    assert!(json.contains(r#"quote \" backslash \\ tab \t done"#));
+    assert!(json.contains("\"count\": 2"));
+    assert_eq!(render_text(&findings).lines().count(), 2);
+}
+
+// ----------------------------------------------------------------
+// Layer 2: per-rule fixtures (each seeds exactly one violation)
+// ----------------------------------------------------------------
+
+#[test]
+fn fixture_panic_path_fires_on_hot_path_unwrap() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert_eq!(rules_of(&findings), ["panic-path"], "{findings:?}");
+    assert_eq!(findings[0].line, 2);
+
+    // The same source outside the hot-path set is not panic-checked.
+    let calm = run_sources(&[file("rust/src/sim/clock.rs", src)]);
+    assert!(calm.is_empty(), "{calm:?}");
+}
+
+#[test]
+fn fixture_panic_path_macro_and_expect() {
+    let src = "fn f() {\n    assert_eq!(1, 2);\n    None::<u8>.expect(\"boom\");\n}\n";
+    let findings = run_sources(&[file("rust/src/collectives/hier.rs", src)]);
+    assert_eq!(rules_of(&findings), ["panic-path", "panic-path"], "{findings:?}");
+    assert_eq!((findings[0].line, findings[1].line), (2, 3));
+}
+
+#[test]
+fn fixture_panic_path_exempts_tests_debug_asserts_and_non_calls() {
+    let src = concat!(
+        "fn f(v: &[u8]) {\n",
+        "    debug_assert!(v.len() > 1);\n", // compiles out of release
+        "    let _ = v.iter().map(|x| x).collect::<Vec<_>>();\n",
+        "    let _ = unwrap_all(v);\n", // `unwrap` word, not `.unwrap(`
+        "}\n",
+        "fn unwrap_all(v: &[u8]) -> &[u8] { v }\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    #[test]\n",
+        "    fn t() { None::<u8>.unwrap(); panic!(\"fine in tests\"); }\n",
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn fixture_allow_suppresses_panic_path_with_justification() {
+    let src = concat!(
+        "fn f(x: Option<u32>) -> u32 {\n",
+        "    // lint:allow(panic-path): construction-time precondition, cannot\n",
+        "    // fire after the builder validated the topology.\n",
+        "    x.unwrap()\n",
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn fixture_allow_syntax_rejects_malformed_escape_hatches() {
+    let cases = [
+        ("// lint:allow panic-path: no parens\n", "needs the form"),
+        ("// lint:allow(panic-path: no close\n", "missing its closing"),
+        ("// lint:allow(not-a-rule): long enough justification\n", "unknown rule"),
+        ("// lint:allow(panic-path) missing colon and why\n", "needs a `:"),
+        ("// lint:allow(panic-path): short\n", "too short"),
+    ];
+    for (comment, needle) in cases {
+        let src = format!("fn f(x: Option<u32>) -> u32 {{\n    {comment}    x.unwrap()\n}}\n");
+        let findings = run_sources(&[file("rust/src/collectives/ring.rs", &src)]);
+        // The malformed allow is itself a finding AND does not
+        // suppress the panic-path hit.
+        assert_eq!(rules_of(&findings), ["allow-syntax", "panic-path"], "{comment:?}: {findings:?}");
+        assert!(findings[0].message.contains(needle), "{comment:?}: {findings:?}");
+    }
+}
+
+#[test]
+fn fixture_allow_for_wrong_rule_does_not_suppress() {
+    let src = concat!(
+        "fn f(x: Option<u32>) -> u32 {\n",
+        "    // lint:allow(zero-alloc): a justification for the wrong rule\n",
+        "    x.unwrap()\n",
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert_eq!(rules_of(&findings), ["panic-path"], "{findings:?}");
+}
+
+#[test]
+fn fixture_safety_comment_adjacency() {
+    let bare = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", bare)]);
+    assert_eq!(rules_of(&findings), ["safety-comment"], "{findings:?}");
+    assert_eq!(findings[0].line, 2);
+
+    let covered = concat!(
+        "fn f(p: *const u8) -> u8 {\n",
+        "    // SAFETY: caller contract — p outlives the call and is\n",
+        "    // aligned (see module docs).\n",
+        "    unsafe { *p }\n",
+        "}\n",
+    );
+    assert!(run_sources(&[file("rust/src/collectives/ring.rs", covered)]).is_empty());
+
+    // A code line between the SAFETY comment and the unsafe breaks
+    // adjacency — stale comments don't count.
+    let stale = concat!(
+        "fn f(p: *const u8) -> u8 {\n",
+        "    // SAFETY: too far away.\n",
+        "    let _x = 1;\n",
+        "    unsafe { *p }\n",
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", stale)]);
+    assert_eq!(rules_of(&findings), ["safety-comment"], "{findings:?}");
+}
+
+#[test]
+fn fixture_unsafe_module_confines_unsafe_to_ring() {
+    let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: commented, still wrong module.\n    unsafe { *p }\n}\n";
+    let findings = run_sources(&[file("rust/src/quant/codec.rs", src)]);
+    assert_eq!(rules_of(&findings), ["unsafe-module"], "{findings:?}");
+    assert!(findings[0].message.contains("collectives/ring.rs"), "{findings:?}");
+}
+
+#[test]
+fn fixture_zero_alloc_flags_hot_allocations() {
+    let src = concat!(
+        "// lint:zero-alloc\n",
+        "fn hot(v: &[f32], out: &mut Vec<f32>) {\n",
+        "    let tmp: Vec<f32> = v.iter().copied().collect();\n",
+        "    out.extend_from_slice(&tmp);\n",
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert_eq!(rules_of(&findings), ["zero-alloc"], "{findings:?}");
+    assert_eq!(findings[0].line, 3);
+    assert!(findings[0].message.contains("collect"), "{findings:?}");
+}
+
+#[test]
+fn fixture_zero_alloc_cold_branch_and_unmarked_fn_are_exempt() {
+    let src = concat!(
+        "// lint:zero-alloc\n",
+        "fn hot(v: &[f32]) -> Result<(), String> {\n",
+        "    if v.is_empty() {\n",
+        "        // lint:cold\n",
+        "        return Err(format!(\"empty input of len {}\", v.len()));\n",
+        "    }\n",
+        "    Ok(())\n",
+        "}\n",
+        "fn unmarked() -> Vec<u8> {\n",
+        "    vec![0; 16]\n", // allocates, but carries no marker
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn fixture_zero_alloc_marker_must_precede_a_fn() {
+    let src = "// lint:zero-alloc\nconst N: usize = 4;\n";
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert_eq!(rules_of(&findings), ["allow-syntax"], "{findings:?}");
+    assert!(findings[0].message.contains("not followed by a function"), "{findings:?}");
+}
+
+/// A minimal main.rs + config pair for the flag fixtures.
+fn flag_tree(usage_flags: &str, config_getter: &str) -> Vec<SourceFile> {
+    let main_src = format!(
+        "fn usage() {{\n    eprintln!(\"usage: qsdp train {usage_flags}\");\n}}\nfn main() {{ usage() }}\n"
+    );
+    let config_src = format!(
+        "use crate::util::args::Args;\npub fn parse(args: &Args) -> u64 {{\n    {config_getter}\n}}\n"
+    );
+    vec![file("rust/src/main.rs", &main_src), file("rust/src/config/mod.rs", &config_src)]
+}
+
+#[test]
+fn fixture_flag_usage_catches_drift_both_ways() {
+    // (a) parsed in config/ but absent from usage().
+    let tree = flag_tree("[--steps N]", "args.u64_or(\"warmup\", 0)");
+    let findings = run_sources(&tree);
+    let usage_findings: Vec<_> =
+        findings.iter().filter(|f| f.rule == "flag-usage").collect();
+    assert_eq!(usage_findings.len(), 2, "{findings:?}");
+    assert!(usage_findings[0].message.contains("--warmup"), "{findings:?}");
+    // (b) advertised in usage() but parsed nowhere — the PR-10 seed
+    // bug (`--workers`) was exactly this shape.
+    assert!(usage_findings[1].message.contains("--steps"), "{findings:?}");
+
+    // Agreeing tree is clean.
+    let ok = flag_tree("[--steps N]", "args.u64_or(\"steps\", 100)");
+    assert!(run_sources(&ok).is_empty(), "{:?}", run_sources(&ok));
+}
+
+#[test]
+fn fixture_flag_bool_requires_registry_membership() {
+    let mut tree = flag_tree("[--hier]", "u64::from(args.bool_or(\"hier\", false))");
+    tree.push(file(
+        "rust/src/util/args.rs",
+        "pub const BOOL_FLAGS: &[&str] = &[\n    \"overlap\",\n];\n",
+    ));
+    let findings = run_sources(&tree);
+    let bools: Vec<_> = findings.iter().filter(|f| f.rule == "flag-bool").collect();
+    // --hier read via bool_or but unregistered; "overlap" registered
+    // but never read.
+    assert_eq!(bools.len(), 2, "{findings:?}");
+    assert!(bools.iter().any(|f| f.message.contains("--hier")), "{findings:?}");
+    assert!(bools.iter().any(|f| f.message.contains("overlap")), "{findings:?}");
+}
+
+#[test]
+fn fixture_flag_launch_owns_reemitted_flags() {
+    let sup = concat!(
+        "pub const LAUNCH_FLAGS: &[&str] = &[\n",
+        "    \"world\",\n",
+        "];\n",
+        "fn argv(rank: usize, world: usize, dir: &str) -> Vec<String> {\n",
+        "    let own = [\n",
+        "        (\"world\", world.to_string()),\n",
+        "        (\"ckpt-dir\", dir.to_string()),\n",
+        "    ];\n",
+        "    own.iter().map(|(k, v)| format!(\"--{k}={v}\")).collect()\n",
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/runtime/elastic/supervisor.rs", sup)]);
+    let launch: Vec<_> = findings.iter().filter(|f| f.rule == "flag-launch").collect();
+    assert_eq!(launch.len(), 1, "{findings:?}");
+    assert!(launch[0].message.contains("--ckpt-dir"), "{findings:?}");
+}
+
+#[test]
+fn fixture_registry_fabric_requires_differential_coverage() {
+    let config = concat!(
+        "pub enum FabricKind { Lockstep, Flat }\n",
+        "impl FabricKind {\n",
+        "    pub const ALL: [FabricKind; 2] = [FabricKind::Lockstep, FabricKind::Flat];\n",
+        "    pub fn name(self) -> &'static str {\n",
+        "        match self {\n",
+        "            FabricKind::Lockstep => \"lockstep\",\n",
+        "            FabricKind::Flat => \"flat\",\n",
+        "        }\n",
+        "    }\n",
+        "}\n",
+    );
+    // The differential harness only names "lockstep" — Flat is
+    // registered but never swept.
+    let diff = "#[test]\nfn t() { assert_eq!(run(\"lockstep\"), 1.0); }\n";
+    let findings = run_sources(&[
+        file("rust/src/config/mod.rs", config),
+        file("rust/tests/fabric_differential.rs", diff),
+    ]);
+    assert_eq!(rules_of(&findings), ["registry-fabric"], "{findings:?}");
+    assert!(findings[0].message.contains("Flat"), "{findings:?}");
+    assert!(findings[0].message.contains("\"flat\""), "{findings:?}");
+}
+
+#[test]
+fn fixture_registry_codec_requires_proptest_mention() {
+    let codecs = concat!(
+        "pub struct GoodCodec;\n",
+        "impl Codec for GoodCodec {}\n",
+        "pub struct NewCodec;\n",
+        "impl Codec for NewCodec {}\n",
+    );
+    let prop = "#[test]\nfn t() { let _ = GoodCodec; }\n";
+    let findings = run_sources(&[
+        file("rust/src/quant/codecs.rs", codecs),
+        file("rust/tests/proptests.rs", prop),
+    ]);
+    assert_eq!(rules_of(&findings), ["registry-codec"], "{findings:?}");
+    assert!(findings[0].message.contains("NewCodec"), "{findings:?}");
+    assert_eq!(findings[0].line, 4);
+}
+
+// ----------------------------------------------------------------
+// Lexer integration: the edge cases the rules lean on
+// ----------------------------------------------------------------
+
+#[test]
+fn fixture_lexer_panic_words_in_strings_and_comments_are_inert() {
+    let src = concat!(
+        "fn f() -> String {\n",
+        "    // a comment mentioning .unwrap() and panic!()\n",
+        "    let msg = \"would panic!(x) or .unwrap() here\";\n",
+        "    let raw = r#\"assert_eq!(a, b) inside a raw string\"#;\n",
+        "    format_args_like(msg, raw)\n",
+        "}\n",
+        "fn format_args_like(a: &str, b: &str) -> String { [a, b].concat() }\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn fixture_lexer_cfg_test_scope_tracks_braces() {
+    let src = concat!(
+        "fn hot(x: Option<u8>) {\n",
+        "    let _ = x.is_some();\n",
+        "}\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    fn helper(x: Option<u8>) -> u8 {\n",
+        "        x.unwrap()\n", // inside test scope: exempt
+        "    }\n",
+        "}\n",
+        "fn after_tests(x: Option<u8>) -> u8 {\n",
+        "    x.unwrap()\n", // after the scope closes: flagged again
+        "}\n",
+    );
+    let findings = run_sources(&[file("rust/src/collectives/ring.rs", src)]);
+    assert_eq!(rules_of(&findings), ["panic-path"], "{findings:?}");
+    assert_eq!(findings[0].line, 11);
+}

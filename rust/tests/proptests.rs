@@ -5,8 +5,9 @@
 use qsdp::collectives::{Collective, LockstepFabric, TrafficLedger};
 use qsdp::quant::codec::{pack_bits, unpack_bits, HEADER_BYTES};
 use qsdp::quant::{
-    Codec, EncodedTensor, Fp16Codec, Fp32Codec, LatticeCodec, LatticeQuantizer, LearnedCodec,
-    LearnedLevels, MinMaxCodec, MinMaxQuantizer, QuantPolicy, TensorRole,
+    AnyCodec, BlockQuantCodec, Codec, EncodedTensor, Fp16Codec, Fp32Codec, LatticeCodec,
+    LatticeQuantizer, LearnedCodec, LearnedLevels, MinMaxCodec, MinMaxQuantizer, QuantPolicy,
+    TensorRole,
 };
 use qsdp::sim::Topology;
 use qsdp::util::Pcg64;
@@ -113,6 +114,41 @@ fn prop_wire_bytes_match_analytics() {
         e.decode(&mut dec);
         let e2 = p.encode(TensorRole::Weight, &dec, kind, rng);
         assert_eq!(e2.byte_size(), e.byte_size(), "case {i}");
+    });
+}
+
+/// Every registered codec type — the `registry-codec` lint rule pins
+/// this sweep against `impl Codec for` in rust/src, so a new codec
+/// that is not priced here fails `qsdp lint` — satisfies the shared
+/// wire contract: `wire_bytes(n)` equals the real encoded byte size,
+/// across random bit-widths, bucket/block granularities, and lengths.
+#[test]
+fn prop_registry_wire_bytes_is_exact_for_every_codec() {
+    props("registry-wire", 40, |rng, i| {
+        let n = rng.below(3000) as usize;
+        let bits = 1 + rng.below(8) as u8;
+        let bucket = 1 + rng.below(512) as usize;
+        let block = 32 + rng.below(128) as usize;
+        let codecs: Vec<Box<dyn Codec>> = vec![
+            Box::new(Fp32Codec),
+            Box::new(Fp16Codec),
+            Box::new(MinMaxCodec::new(bits, bucket, true)),
+            Box::new(LearnedCodec::new(LearnedLevels::uniform(bits.min(6)), bucket)),
+            Box::new(LatticeCodec::new(0.07, bucket)),
+            Box::new(BlockQuantCodec::new(bits.max(2), block, false)),
+            Box::new(AnyCodec::MinMax(MinMaxCodec::new(bits, bucket, false))),
+            Box::new(AnyCodec::Block(BlockQuantCodec::new(bits.max(2), block, true))),
+        ];
+        let v = rand_vec(rng, n, 1.0);
+        for codec in codecs {
+            let e = codec.encode(&v, rng);
+            assert_eq!(
+                e.byte_size(),
+                codec.wire_bytes(n),
+                "case {i}: codec {} bits={bits} n={n}",
+                codec.name()
+            );
+        }
     });
 }
 
